@@ -1,0 +1,86 @@
+"""Shared helpers for the benchmark harness.
+
+Scale modes:
+  quick — CPU-budget defaults: training studies run at reduced N/T;
+          geometry/energy studies always run at PAPER scale (they do not
+          need training — see launch/experiment.audit_method).
+  full  — the paper's exact N/T for the training studies too (hours on
+          CPU; intended for a real accelerator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    quick: bool = True
+
+    # training-study knobs
+    @property
+    def rounds(self) -> int:
+        return 6 if self.quick else 20
+
+    @property
+    def rounds_real(self) -> int:
+        return 8 if self.quick else 30
+
+    @property
+    def local_epochs(self) -> int:
+        return 2 if self.quick else 5
+
+    @property
+    def seeds(self) -> tuple[int, ...]:
+        return (0, 1) if self.quick else (0, 1, 2)
+
+    @property
+    def train_n(self) -> dict[int, int]:
+        """Map paper N -> trainable N for the F1 columns."""
+        if self.quick:
+            return {50: 24, 100: 32, 150: 40, 200: 48}
+        return {n: n for n in (50, 100, 150, 200)}
+
+    @property
+    def train_len(self) -> int:
+        return 96 if self.quick else 256
+
+
+def make_dataset(seed: int, n_sensors: int, scale: Scale, alpha: float = 1.0):
+    cfg = SyntheticConfig(
+        n_sensors=n_sensors,
+        train_len=scale.train_len,
+        val_len=max(32, scale.train_len // 3),
+        test_len=scale.train_len,
+        dirichlet_alpha=alpha,
+    )
+    return normalize(generate(jax.random.key(seed), cfg))
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def mean_std(xs):
+    import numpy as np
+
+    a = np.asarray(list(xs), dtype=float)
+    return float(a.mean()), float(a.std())

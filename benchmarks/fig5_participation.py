@@ -1,0 +1,46 @@
+"""Fig. 5(a): direct-gateway vs fog-assisted reachability vs network scale.
+
+Pure geometry + channel feasibility — runs at the paper's exact scale
+(N in {50, 100, 150, 200}, M = N/10, 3 seeds) in milliseconds.
+Paper targets: direct ~0.48-0.51 across N; fog-assisted 0.96 -> ~1.0.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core import channel as ch
+from repro.core import participation as part
+from repro.core import topology as topo
+
+
+def run(scale: common.Scale) -> dict:
+    cparams = ch.ChannelParams()
+    rows = []
+    for n in (50, 100, 150, 200):
+        direct, fog = [], []
+        for seed in (0, 1, 2):
+            dep = topo.sample_deployment(
+                jax.random.key(seed),
+                topo.DeploymentParams(n_sensors=n, n_fog=max(5, n // 10)),
+            )
+            r = part.reachability(dep, cparams)
+            direct.append(float(r.direct_gateway))
+            fog.append(float(r.fog_assisted))
+        dm, ds = common.mean_std(direct)
+        fm, fs = common.mean_std(fog)
+        rows.append(
+            dict(n=n, direct_mean=dm, direct_std=ds, fog_mean=fm, fog_std=fs)
+        )
+    return {"rows": rows}
+
+
+def report(res: dict) -> str:
+    lines = ["fig5_participation: reachability vs N (3 seeds, paper scale)"]
+    lines.append(f"{'N':>4} {'direct':>14} {'fog-assisted':>14}")
+    for r in res["rows"]:
+        lines.append(
+            f"{r['n']:>4} {r['direct_mean']:.2f}±{r['direct_std']:.2f}"
+            f"{'':>6} {r['fog_mean']:.2f}±{r['fog_std']:.2f}"
+        )
+    return "\n".join(lines)

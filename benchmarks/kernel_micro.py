@@ -1,0 +1,56 @@
+"""Microbenchmark of the compression kernels (CPU interpret mode): wall
+time per call + payload accounting.  On CPU the numbers establish
+correctness-path cost only; the TPU roofline for these ops is in
+EXPERIMENTS.md (they are HBM-bandwidth-bound single-pass kernels)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops
+
+SIZES = (1352, 65536, 1048576)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+        out,
+    )
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(scale: common.Scale) -> dict:
+    rows = []
+    for n in SIZES:
+        delta = jax.random.normal(jax.random.key(n), (n,))
+        err = jnp.zeros((n,))
+        us_ref = _time(lambda d, e: ops.compress(d, e, 0.05, False), delta, err)
+        us_pl = _time(lambda d, e: ops.compress(d, e, 0.05, True, True), delta, err)
+        _, _, bits = ops.compress(delta, err, 0.05, False)
+        rows.append(
+            dict(n=n, us_ref=us_ref, us_pallas_interpret=us_pl,
+                 payload_bits=float(bits), dense_bits=32.0 * n)
+        )
+    return {"rows": rows}
+
+
+def report(res: dict) -> str:
+    lines = ["kernel_micro (compress = EF + blockwise topk + int8)"]
+    lines.append(
+        f"{'n':>9} {'jnp-ref us':>12} {'pallas(interp) us':>18} {'ratio':>7} {'payload':>10}"
+    )
+    for r in res["rows"]:
+        lines.append(
+            f"{r['n']:>9} {r['us_ref']:>12.0f} {r['us_pallas_interpret']:>18.0f} "
+            f"{r['payload_bits'] / r['dense_bits']:>7.3f} "
+            f"{r['payload_bits']:>10.0f}"
+        )
+    return "\n".join(lines)

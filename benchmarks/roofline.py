@@ -1,0 +1,57 @@
+"""Roofline benchmark: three roofline terms per (arch x shape x mesh) from
+the dry-run artifacts (ours — no paper analogue; see EXPERIMENTS.md).
+
+experiments/dryrun     = paper-faithful BASELINE sharding,
+experiments/dryrun_opt = after the §Perf activation-anchor iterations —
+both reported so the before/after is visible.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks import common
+from repro.launch import roofline as rl
+
+
+def run(scale: common.Scale) -> dict:
+    res = {
+        "pod": rl.load_all("experiments/dryrun", tag="pod"),
+        "multipod": rl.load_all("experiments/dryrun", tag="multipod"),
+    }
+    if os.path.isdir("experiments/dryrun_opt"):
+        res["pod_opt"] = rl.load_all("experiments/dryrun_opt", tag="pod")
+        res["multipod_opt"] = rl.load_all(
+            "experiments/dryrun_opt", tag="multipod"
+        )
+    return res
+
+
+def report(res: dict) -> str:
+    out = ["roofline BASELINE (single-pod 16x16 = 256 chips)"]
+    out.append(rl.table(res["pod"]))
+    out.append("")
+    out.append(
+        f"multipod (2x16x16 = 512 chips): {len(res['multipod'])} combos lowered OK"
+    )
+    if "pod_opt" in res:
+        out.append("")
+        out.append("roofline OPTIMIZED (after EXPERIMENTS.md §Perf iterations)")
+        out.append(rl.table(res["pod_opt"]))
+        out.append(
+            f"multipod optimized: {len(res['multipod_opt'])} combos lowered OK"
+        )
+        # headline improvements
+        base = {(r["arch"], r["shape"]): r for r in res["pod"]}
+        out.append("")
+        out.append("dominant-term improvement (baseline -> optimized):")
+        for r in res["pod_opt"]:
+            b = base.get((r["arch"], r["shape"]))
+            if b and b["bound_s"] > 0 and r["bound_s"] > 0:
+                ratio = b["bound_s"] / r["bound_s"]
+                if ratio > 1.3 or ratio < 0.77:
+                    out.append(
+                        f"  {r['arch']:18s} {r['shape']:12s} "
+                        f"{rl.fmt_s(b['bound_s'])} -> {rl.fmt_s(r['bound_s'])}"
+                        f"  ({ratio:5.1f}x)"
+                    )
+    return "\n".join(out)

@@ -1,0 +1,74 @@
+"""Table III: participation / F1 / energy across N in {50, 100, 150, 200}.
+
+Energy + participation columns are computed at the PAPER's exact scale via
+the training-free audit (they do not depend on model values).  F1 columns
+require training; in quick mode they run at a reduced N (recorded in the
+output) — the paper's own finding is that the synthetic F1 gaps are small
+relative to seed variance, and that the robust result is the
+participation-vs-energy trade-off, which we reproduce at full scale.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.launch import experiment as exp
+
+METHODS = ("fedprox", "hfl-nocoop", "hfl-selective", "hfl-nearest")
+
+
+def run(scale: common.Scale) -> dict:
+    rows = []
+    for n in (50, 100, 150, 200):
+        m_fog = max(5, n // 10)
+        # --- full-scale energy / participation audit (paper T=20) ---------
+        audit_cfg = exp.make_config(n_sensors=n, n_fog=m_fog, rounds=20)
+        audits = {
+            meth: [exp.audit_method(meth, audit_cfg, seed=s) for s in (0, 1, 2)]
+            for meth in METHODS
+        }
+        # --- F1 from training at budgeted scale ---------------------------
+        n_train = scale.train_n[n]
+        train_cfg = exp.make_config(
+            n_sensors=n_train,
+            n_fog=max(4, n_train // 6),
+            rounds=scale.rounds,
+            local_epochs=scale.local_epochs,
+        )
+        f1s = {}
+        for meth in METHODS:
+            vals = []
+            for s in scale.seeds:
+                ds = common.make_dataset(100 + s, n_train, scale)
+                vals.append(exp.run_method(meth, ds, train_cfg, seed=s).f1)
+            f1s[meth] = common.mean_std(vals)
+
+        for meth in METHODS:
+            e_m, e_s = common.mean_std([a["e_total"] for a in audits[meth]])
+            p_m, _ = common.mean_std([a["participation"] for a in audits[meth]])
+            epp = e_m / max(p_m * n, 1.0)
+            rows.append(
+                dict(
+                    n=n, method=meth, participation=p_m,
+                    f1_mean=f1s[meth][0], f1_std=f1s[meth][1],
+                    energy_mean=e_m, energy_std=e_s,
+                    energy_per_participant=epp,
+                    f1_train_n=n_train,
+                )
+            )
+    return {"rows": rows}
+
+
+def report(res: dict) -> str:
+    lines = [
+        "table3_scalability (energy/participation at paper scale; F1 at the"
+        " budgeted training scale shown in the last column)",
+        f"{'N':>4} {'method':14} {'part':>5} {'F1':>13} {'E (J)':>14}"
+        f" {'J/sensor':>9} {'F1@N':>5}",
+    ]
+    for r in res["rows"]:
+        lines.append(
+            f"{r['n']:>4} {r['method']:14} {r['participation']:5.2f} "
+            f"{r['f1_mean']:.3f}±{r['f1_std']:.3f} "
+            f"{r['energy_mean']:8.1f}±{r['energy_std']:4.1f} "
+            f"{r['energy_per_participant']:9.3f} {r['f1_train_n']:>5}"
+        )
+    return "\n".join(lines)

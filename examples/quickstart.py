@@ -1,0 +1,46 @@
+"""Quickstart: train an underwater hierarchical-FL anomaly detector in ~1 min.
+
+Builds a 24-sensor / 5-fog synthetic IoUT deployment, trains the paper's
+autoencoder with HFL-Selective (compressed uplinks), and prints detection
+quality, participation, and the three-tier energy breakdown.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+from repro.launch import experiment as exp
+
+
+def main() -> None:
+    n_sensors, n_fog = 24, 5
+
+    ds = normalize(
+        generate(
+            jax.random.key(0),
+            SyntheticConfig(n_sensors=n_sensors, train_len=96, val_len=32,
+                            test_len=96),
+        )
+    )
+    cfg = exp.make_config(
+        n_sensors=n_sensors, n_fog=n_fog, rounds=6, local_epochs=2,
+        batch_size=16,
+    )
+
+    print("method            F1     part   E_total  (s2f / f2f / f2g) J")
+    for method in ("fedavg", "hfl-nocoop", "hfl-selective", "hfl-nearest"):
+        r = exp.run_method(method, ds, cfg, seed=0)
+        print(
+            f"{method:14} {r.f1:6.3f} {r.participation:6.2f} "
+            f"{r.e_total:8.3f}  ({r.e_s2f:.3f} / {r.e_f2f:.3f} / {r.e_f2g:.3f})"
+        )
+
+    print(
+        "\nExpected pattern (paper Sec. VI): flat FL is cheapest but only a"
+        "\nsubset of sensors participates; hierarchy restores participation;"
+        "\nselective cooperation costs less than always-on (f2f column)."
+    )
+
+
+if __name__ == "__main__":
+    main()

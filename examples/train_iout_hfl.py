@@ -1,0 +1,82 @@
+"""End-to-end driver: full federated training of the underwater anomaly
+detector, with checkpointing, per-round metric logs, and final evaluation
+on a real benchmark (SMD; surrogate fallback when files are absent).
+
+This is the paper's pipeline end-to-end:
+  deployment -> feasibility graph -> nearest-feasible-fog association ->
+  E local epochs -> Top-K+EF+int8 compressed uplinks -> fog aggregation ->
+  selective fog mixing -> surface aggregation -> threshold calibration ->
+  PA-F1 evaluation.
+
+  PYTHONPATH=src python examples/train_iout_hfl.py [--rounds 10]
+"""
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointStore
+from repro.core import hfl
+from repro.core.cooperation import CoopRule
+from repro.data import benchmarks as bench
+from repro.launch import experiment as exp
+from repro.models import autoencoder as ae
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/iout_hfl_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # SMD: 10 machines x 38 features (real files when present under data/).
+    bd = bench.load("smd", seed=args.seed, length=128)
+    ds = bd.dataset
+    n = ds.train.shape[0]
+    print(f"dataset: SMD ({bd.source}), {n} entities, D={ds.train.shape[-1]}")
+
+    cfg = exp.make_config(
+        n_sensors=n, n_fog=3, rounds=args.rounds,
+        local_epochs=args.local_epochs, rule=CoopRule.SELECTIVE,
+    )
+
+    key = jax.random.key(args.seed)
+    params = ae.init(key, ds.train.shape[-1], (16, 8, 16))
+    state = hfl.init_state(key, params, cfg)
+    round_fn = hfl.make_round_fn(ae.loss, ds, cfg)
+    store = CheckpointStore(args.ckpt_dir, keep=2)
+
+    print(f"{'round':>5} {'loss':>9} {'part':>5} {'E (J)':>8} {'coop':>4} {'batt':>7}")
+    jitted = jax.jit(round_fn)
+    for t in range(args.rounds):
+        state, m = jitted(state, None)
+        print(
+            f"{t:>5} {float(m.loss):>9.4f} {float(m.participation):>5.2f} "
+            f"{float(m.e_total):>8.4f} {int(m.coop_links):>4} "
+            f"{float(m.battery_min):>7.2f}"
+        )
+        store.save(t + 1, state.params)
+
+    # Threshold calibration + PA-F1 (paper Sec. V-D / VI-F protocol).
+    from repro.core import anomaly
+
+    d = ds.val.shape[-1]
+    r = anomaly.evaluate_detector(
+        lambda p, x: ae.apply(p, x),
+        state.params,
+        ds.val.reshape(-1, d),
+        ds.test.reshape(-1, d),
+        ds.test_label.reshape(-1),
+        point_adjusted=True,
+    )
+    print(f"\nPA-F1 {float(r.f1):.4f}  (P {float(r.precision):.4f} / "
+          f"R {float(r.recall):.4f})")
+    print(f"checkpoints: {sorted(os.listdir(args.ckpt_dir))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Classify HLO collectives by whether their replica groups cross the pod
+boundary, and sum bytes per class.  Pod axis is the leading mesh dim, so
+on a (2, 4, 4) mesh devices 0-15 are pod 0 and 16-31 pod 1.
+
+  PYTHONPATH=src python experiments/perf/cross_pod_bytes.py [baseline|hfl] [rho] [mode]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=32 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+import json  # noqa: E402
+import re    # noqa: E402
+import sys   # noqa: E402
+
+import jax   # noqa: E402
+
+sys.path.insert(0, os.path.dirname(__file__))
+import run_pair_c as rpc  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+
+OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+       "collective-permute")
+
+
+def _iota_groups(spec: str):
+    """Parse XLA's iota replica-group format: [G,S]<=[d0,...]T(perm)."""
+    import numpy as np
+
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", spec)
+    if not m:
+        return None
+    g, size = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    n = 1
+    for d in dims:
+        n *= d
+    arr = np.arange(n).reshape(dims)
+    if m.group(4):
+        arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+    return arr.reshape(g, size)
+
+
+def classify(hlo: str, pod_size: int = 16) -> dict:
+    out = {
+        "cross_pod": dict.fromkeys(OPS, 0.0),
+        "intra_pod": dict.fromkeys(OPS, 0.0),
+    }
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(
+            r"%?[\w.\-]+ = (.+?) (" + "|".join(OPS) + r")\(", s
+        )
+        if not m:
+            continue
+        nbytes = dryrun._shape_bytes(m.group(1))
+        op = m.group(2)
+        crossing = False
+        groups = None
+        # iota format: replica_groups=[G,S]<=[dims]T(perm)
+        gi = re.search(
+            r"replica_groups=(\[\d+,\d+\]<=\[[\d,]+\](?:T\([\d,]+\))?)", s
+        )
+        if gi:
+            groups = _iota_groups(gi.group(1))
+        else:
+            gm = re.search(r"replica_groups=\{(.*?)\}\}", s)
+            if gm:
+                groups = [
+                    [int(x) for x in grp.split(",")]
+                    for grp in re.findall(r"\{([\d,]+)\}", gm.group(0))
+                ]
+        if groups is not None:
+            for ids in groups:
+                pods = {int(i) // pod_size for i in ids}
+                if len(pods) > 1:
+                    crossing = True
+                    break
+        else:
+            sm = re.search(r"source_target_pairs=\{(.*)\}", s)
+            if sm:
+                for pair in re.findall(r"\{(\d+),(\d+)\}", sm.group(0)):
+                    a, b = int(pair[0]), int(pair[1])
+                    if a // pod_size != b // pod_size:
+                        crossing = True
+                        break
+        key = "cross_pod" if crossing else "intra_pod"
+        out[key][op] += nbytes
+    for k in out:
+        out[k]["total"] = sum(out[k][o] for o in OPS)
+    return out
+
+
+def main() -> None:
+    mode = sys.argv[1] if len(sys.argv) > 1 else "hfl"
+    rho = float(sys.argv[2]) if len(sys.argv) > 2 else 0.05
+    comp = sys.argv[3] if len(sys.argv) > 3 else "int8"
+    mesh = rpc.make_small_multipod()
+    base = configs.get(rpc.ARCH)
+    if mode == "baseline":
+        c1 = rpc._lower_plain(base.replace(scan_unroll=1), mesh)
+        c2 = rpc._lower_plain(base.replace(scan_unroll=2), mesh)
+    else:
+        c1 = rpc.lower_hfl(base.replace(scan_unroll=1), mesh, rho, comp)
+        c2 = rpc.lower_hfl(base.replace(scan_unroll=2), mesh, rho, comp)
+    r1, r2 = classify(c1.as_text()), classify(c2.as_text())
+    L = base.n_layers
+    corrected = {}
+    for k in r1:
+        corrected[k] = {
+            op: r1[k][op] + (L - 1) * max(r2[k][op] - r1[k][op], 0.0)
+            for op in list(OPS) + ["total"]
+        }
+    out = {"tag": f"crosspod_{mode}_{comp}_rho{rho}", "raw": r1,
+           "corrected": corrected}
+    with open("experiments/perf/log.jsonl", "a") as f:
+        f.write(json.dumps(out) + "\n")
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

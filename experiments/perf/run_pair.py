@@ -1,0 +1,30 @@
+"""Perf-iteration driver: dry-run ONE (arch, shape) pair and log the
+roofline terms under a tag, appending to experiments/perf/log.jsonl.
+
+  PYTHONPATH=src python experiments/perf/run_pair.py qwen3_14b prefill_32k TAG [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+import json  # noqa: E402
+import sys   # noqa: E402
+
+from repro.launch import dryrun, roofline  # noqa: E402
+
+
+def main() -> None:
+    arch, shape, tag = sys.argv[1], sys.argv[2], sys.argv[3]
+    multi = "--multi-pod" in sys.argv
+    rec = dryrun.dryrun_one(arch, shape, multi_pod=multi)
+    row = roofline.analyse(rec) if rec.get("status") == "ok" else rec
+    out = {"tag": tag, "multi_pod": multi, **{k: v for k, v in row.items()}}
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open("experiments/perf/log.jsonl", "a") as f:
+        f.write(json.dumps(out) + "\n")
+    print(json.dumps(out, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

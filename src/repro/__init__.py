@@ -1,0 +1,2 @@
+"""repro: hierarchical federated anomaly detection for the IoUT, in JAX."""
+__version__ = "0.1.0"

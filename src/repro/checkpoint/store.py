@@ -1,0 +1,90 @@
+"""Flat-npz pytree checkpointing.
+
+Keys are the jax.tree_util key-paths, so any pytree of arrays round-trips
+without a registry.  ``CheckpointStore`` adds step management (latest,
+retention) for the training launcher; save is atomic (tmp + rename) so a
+killed run never leaves a truncated checkpoint behind.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    # np.savez appends .npz to names without it.
+    if not tmp.endswith(".npz"):
+        tmp += ".npz"
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (arrays or ShapeDtypeStructs)."""
+    with np.load(path) as data:
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_keys, ref in paths:
+            key = jax.tree_util.keystr(path_keys)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"shape mismatch at {key!r}: {arr.shape} vs {ref.shape}"
+                )
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointStore:
+    """Step-indexed checkpoints under one directory, keeping the last K."""
+
+    _FMT = "step_{:08d}.npz"
+    _RE = re.compile(r"step_(\d+)\.npz$")
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, self._FMT.format(step))
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = self._RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any) -> str:
+        path = self._path(step)
+        save_pytree(path, tree)
+        for old in self.steps()[: -self.keep]:
+            os.remove(self._path(old))
+        return path
+
+    def restore(self, like: Any, step: int | None = None) -> tuple[Any, int]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return load_pytree(self._path(step), like), step

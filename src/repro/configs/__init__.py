@@ -1,0 +1,52 @@
+"""Architecture config registry: ``repro.configs.get("<arch>")``.
+
+Each module exports CONFIG (exact published spec, source cited in its
+docstring) and REDUCED (<=2 layers, d_model<=512, <=4 experts) for the CPU
+smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+
+ARCHS = (
+    "whisper_medium",
+    "qwen3_14b",
+    "qwen2_moe_a2_7b",
+    "grok_1_314b",
+    "gemma2_27b",
+    "internvl2_26b",
+    "llama3_8b",
+    "recurrentgemma_2b",
+    "mamba2_2_7b",
+    "qwen3_32b",
+    "paper_ae",
+)
+
+_ALIASES = {
+    "whisper-medium": "whisper_medium",
+    "qwen3-14b": "qwen3_14b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "grok-1-314b": "grok_1_314b",
+    "gemma2-27b": "gemma2_27b",
+    "internvl2-26b": "internvl2_26b",
+    "llama3-8b": "llama3_8b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "qwen3-32b": "qwen3_32b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get(name: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def model_archs() -> tuple[str, ...]:
+    """The ten assigned transformer/SSM architectures (excludes paper_ae)."""
+    return tuple(a for a in ARCHS if a != "paper_ae")

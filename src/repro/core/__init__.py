@@ -1,0 +1,13 @@
+from repro.core import (  # noqa: F401
+    aggregation,
+    anomaly,
+    association,
+    channel,
+    compression,
+    cooperation,
+    energy,
+    flat_fl,
+    hfl,
+    participation,
+    topology,
+)

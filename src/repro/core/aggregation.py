@@ -1,0 +1,144 @@
+"""Aggregation operators for hierarchical FL (paper Eqs. 13, 15, 16).
+
+Two execution styles, same math:
+
+1. **Vectorised single-program** (the simulator hot path): per-client
+   updates are stacked along a leading axis; fog aggregation is a
+   ``segment_sum`` over cluster ids, cooperative mixing a gather + convex
+   combination, global aggregation a weighted sum.  Everything jits and
+   scans.
+
+2. **Mesh-parallel** (the production runtime): clients live on mesh shards;
+   fog aggregation is an in-pod reduction over the ``data`` axis and global
+   aggregation a cross-pod reduction over the ``pod`` axis — the TPU
+   analogue of the sensor->fog (short acoustic hop) vs fog->gateway (long
+   hop) split.  See :func:`hierarchical_mean` (used under ``shard_map``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cooperation import CoopDecision
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def fog_aggregate(
+    updates: Any,            # pytree, leaves (N, ...) — per-client updates
+    fog_id: jax.Array,       # (N,) int32
+    weights: jax.Array,      # (N,) f32 — n_i, zeroed for non-participants
+    n_fog: int,
+) -> tuple[Any, jax.Array]:
+    """Intra-cluster weighted aggregation (Eq. 13).
+
+    Returns (fog_updates with leaves (M, ...), fog_weight (M,)) where
+    fog_updates[m] = sum_{i in C_m} n_i/sum_C n * update_i and fog_weight is
+    the total data weight of the cluster (used again in Eq. 16).
+    """
+    fog_weight = jax.ops.segment_sum(weights, fog_id, num_segments=n_fog)
+    denom = jnp.maximum(fog_weight, 1e-12)
+
+    def agg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        summed = jax.ops.segment_sum(leaf * w, fog_id, num_segments=n_fog)
+        return summed / denom.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    return _tree_map(agg, updates), fog_weight
+
+
+def cooperative_mix(fog_models: Any, decision: CoopDecision) -> Any:
+    """Cooperative fog mixing (Eq. 15 with K=1 rule family).
+
+    theta~_m = alpha_mm theta_m + alpha_mj theta_j.  Non-cooperating fogs
+    have partner=m and weights (1, 0), so this is the identity for them.
+    """
+
+    def mix(leaf):
+        peer = leaf[decision.partner]
+        ws = decision.self_weight.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        wp = decision.partner_weight.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return ws * leaf + wp * peer
+
+    return _tree_map(mix, fog_models)
+
+
+def global_aggregate(
+    fog_models: Any,         # pytree, leaves (M, ...)
+    fog_weight: jax.Array,   # (M,) — sum of n_i over the cluster
+) -> Any:
+    """Surface-gateway aggregation (Eq. 16): data-weighted fog average."""
+    total = jnp.maximum(jnp.sum(fog_weight), 1e-12)
+    w = fog_weight / total
+
+    def agg(leaf):
+        return jnp.tensordot(w, leaf, axes=(0, 0))
+
+    return _tree_map(agg, fog_models)
+
+
+def weighted_mean(updates: Any, weights: jax.Array) -> Any:
+    """Flat weighted average over the leading client axis (FedAvg, Eq. 11)."""
+    total = jnp.maximum(jnp.sum(weights), 1e-12)
+    w = weights / total
+
+    def agg(leaf):
+        return jnp.tensordot(w, leaf, axes=(0, 0))
+
+    return _tree_map(agg, updates)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-parallel hierarchical aggregation (used under shard_map).
+# ---------------------------------------------------------------------------
+
+def hierarchical_mean(
+    update: Any,
+    weight: jax.Array,
+    *,
+    intra_axis: str = "data",
+    inter_axis: str | None = "pod",
+) -> Any:
+    """Two-level weighted mean: reduce within the pod, then across pods.
+
+    Called from inside ``shard_map`` with per-shard (client) updates.  The
+    in-pod reduction is the cheap hop (fog aggregation); the cross-pod
+    reduction is the expensive hop (fog->gateway).  With ``inter_axis=None``
+    this degenerates to flat FedAvg over ``intra_axis``.
+    """
+    wsum_local = jax.lax.psum(weight, intra_axis)
+
+    def intra(leaf):
+        return jax.lax.psum(leaf * weight, intra_axis) / jnp.maximum(
+            wsum_local, 1e-12
+        )
+
+    fog_model = _tree_map(intra, update)
+    if inter_axis is None:
+        return fog_model
+
+    wsum_global = jax.lax.psum(wsum_local, inter_axis)
+
+    def inter(leaf):
+        return jax.lax.psum(leaf * wsum_local, inter_axis) / jnp.maximum(
+            wsum_global, 1e-12
+        )
+
+    return _tree_map(inter, fog_model)
+
+
+def ring_mix(update: Any, mix_weight: float, axis: str = "pod") -> Any:
+    """Gossip mixing with the ring neighbour over ``axis`` — the mesh
+    analogue of fog-to-fog cooperation, lowering to collective_permute."""
+    n = jax.lax.axis_size(axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def mix(leaf):
+        peer = jax.lax.ppermute(leaf, axis, perm)
+        return (1.0 - mix_weight) * leaf + mix_weight * peer
+
+    return _tree_map(mix, update)

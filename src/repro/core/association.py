@@ -1,0 +1,71 @@
+"""Feasibility-aware association rules (paper Sec. IV-E / V-B).
+
+Flat FL: only sensors with a feasible direct sensor->gateway link
+participate.  Hierarchical FL: each sensor attaches to its *nearest feasible*
+fog node; sensors with no feasible fog are inactive that round.
+
+Everything returns dense arrays + masks so the round stays jittable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.core.topology import Deployment
+
+
+class FlatAssociation(NamedTuple):
+    """Direct-to-gateway association result."""
+
+    participates: jax.Array   # (N,) bool — feasible direct gateway link
+    dist_m: jax.Array         # (N,) sensor->gateway distance
+
+
+class FogAssociation(NamedTuple):
+    """Nearest-feasible-fog association result."""
+
+    fog_id: jax.Array         # (N,) int32 — assigned fog (undefined if inactive)
+    participates: jax.Array   # (N,) bool — at least one feasible fog link
+    dist_m: jax.Array         # (N,) distance to assigned fog
+    cluster_size: jax.Array   # (M,) int32 — |C_m|
+    fog_gateway_dist_m: jax.Array  # (M,) fog->gateway distance
+    fog_gateway_feasible: jax.Array  # (M,) bool
+
+
+def flat_association(
+    dep: Deployment, cparams: ch.ChannelParams
+) -> FlatAssociation:
+    """Sensors that can reach the gateway directly under the SL cap."""
+    d = jnp.linalg.norm(dep.sensor_pos - dep.gateway_pos[None, :], axis=-1)
+    return FlatAssociation(participates=ch.feasible(d, cparams), dist_m=d)
+
+
+def nearest_feasible_fog(
+    dep: Deployment, cparams: ch.ChannelParams
+) -> FogAssociation:
+    """Attach each sensor to its nearest feasible fog (paper Sec. V-B)."""
+    d_sf = ch.pairwise_distances(dep.sensor_pos, dep.fog_pos)   # (N, M)
+    feas = ch.feasible(d_sf, cparams)
+    masked = jnp.where(feas, d_sf, jnp.inf)
+    fog_id = jnp.argmin(masked, axis=-1).astype(jnp.int32)
+    participates = jnp.any(feas, axis=-1)
+    dist = jnp.take_along_axis(d_sf, fog_id[:, None], axis=-1)[:, 0]
+
+    n_fog = dep.fog_pos.shape[0]
+    one_hot = jax.nn.one_hot(fog_id, n_fog, dtype=jnp.int32) * participates[
+        :, None
+    ].astype(jnp.int32)
+    cluster_size = jnp.sum(one_hot, axis=0)
+
+    d_fg = jnp.linalg.norm(dep.fog_pos - dep.gateway_pos[None, :], axis=-1)
+    return FogAssociation(
+        fog_id=fog_id,
+        participates=participates,
+        dist_m=dist,
+        cluster_size=cluster_size,
+        fog_gateway_dist_m=d_fg,
+        fog_gateway_feasible=ch.feasible(d_fg, cparams),
+    )

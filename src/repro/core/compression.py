@@ -1,0 +1,128 @@
+"""Update-compression pipeline at the pytree level (paper Sec. V-C).
+
+Two modes:
+
+- ``global``: exact Top-K over the whole flattened update — the paper's
+  semantics for the ~1 352-parameter autoencoder (rho_s = 0.05 -> K ~ 68).
+- ``blockwise``: the TPU-native blocked kernel path (Deep-Gradient-
+  Compression-style per-block selection) for LLM-scale updates, backed by
+  the fused Pallas kernel in :mod:`repro.kernels`.
+
+Both apply error feedback (Eq. 30) — the local error buffer absorbs the
+sparsification *and* quantisation residuals — and report the acoustic
+payload in bits (Eq. 31):  L_u = K (b_q + b_idx).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    rho_s: float = 0.05          # sparsification ratio (1.0 = dense)
+    quant_bits: int = 8          # post-sparsification bit-width (32 = none)
+    mode: str = "global"         # "global" | "blockwise"
+    use_pallas: bool = False     # blockwise only: route through the kernel
+    interpret: bool = True       # pallas interpret mode (CPU)
+
+    def replace(self, **kw: Any) -> "CompressorConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def enabled(self) -> bool:
+        return self.rho_s < 1.0 or self.quant_bits < 32
+
+
+def payload_bits(d: int, cfg: CompressorConfig) -> float:
+    """Uplink payload size in bits (paper Eq. 31 / Sec. IV-B).
+
+    ``d`` must be a static (python int) parameter count.
+    """
+    if not cfg.enabled:
+        return 32.0 * d
+    bits = float(cfg.quant_bits)
+    if cfg.rho_s >= 1.0:
+        return bits * d  # quantise-only: no index overhead
+    b_idx = math.ceil(math.log2(max(d, 2)))
+    k = max(1.0, round(cfg.rho_s * d))
+    return k * (bits + b_idx)
+
+
+def init_error(params: Any) -> jax.Array:
+    """Zero error-feedback buffer matching the flattened parameter count."""
+    flat, _ = ravel_pytree(params)
+    return jnp.zeros_like(flat)
+
+
+def _global_topk_ef(
+    v: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Exact global Top-K with EF decomposition on a flat vector."""
+    absv = jnp.abs(v)
+    kth = jax.lax.top_k(absv, k)[0][-1]
+    mask = absv >= kth
+    # Tie-break: keep at most k (top_k threshold may admit ties); paper's
+    # payload accounting assumes exactly K coords, ties are measure-zero in
+    # float updates so a >= mask is the standard implementation.
+    sparse = jnp.where(mask, v, 0.0)
+    return sparse, v - sparse
+
+
+def _quantize_global(x: jax.Array, bits: int) -> jax.Array:
+    """Symmetric fixed-point quantise/dequantise of nonzeros, global scale."""
+    if bits >= 32:
+        return x
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x))
+    scale = amax / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -qmax, qmax)
+    return jnp.where(scale > 0, q * scale, x)
+
+
+def compress_update(
+    delta: Any, err: jax.Array, cfg: CompressorConfig
+) -> tuple[Any, jax.Array]:
+    """Compress one client's model update (a pytree).
+
+    Returns (reconstructed_update_tree, new_error_buffer).  The
+    reconstruction is what the fog node receives after decode; the error
+    buffer stays on the client (Eq. 30).
+    """
+    flat, unravel = ravel_pytree(delta)
+    if not cfg.enabled:
+        return delta, err
+
+    if cfg.mode == "global":
+        d = flat.shape[0]
+        k = max(1, int(round(cfg.rho_s * d)))
+        v = flat + err
+        if cfg.rho_s < 1.0:
+            sparse, _ = _global_topk_ef(v, k)
+        else:
+            sparse = v
+        recon = _quantize_global(sparse, cfg.quant_bits)
+        new_err = v - recon
+        return unravel(recon), new_err
+
+    if cfg.mode == "blockwise":
+        recon, new_err, _ = kops.compress(
+            flat, err, cfg.rho_s, cfg.use_pallas, cfg.interpret
+        )
+        return unravel(recon), new_err
+
+    raise ValueError(f"unknown compression mode: {cfg.mode}")
+
+
+def compression_ratio(d: int, cfg: CompressorConfig) -> float:
+    """Effective ratio rho vs uncompressed 32-bit transmission (Sec. V-C)."""
+    return payload_bits(d, cfg) / (32.0 * d)

@@ -1,0 +1,144 @@
+"""Fog-level cooperation rules (paper Sec. IV-E / V-B, Eqs. 14, 28-29).
+
+All three rules return a :class:`CoopDecision` with, per fog node m:
+
+  - ``partner``: the single neighbour j it mixes with (K=1 in the paper's
+    rule family), or ``m`` itself when it does not cooperate;
+  - ``self_weight`` / ``partner_weight``: the mixing coefficients
+    (alpha_mm, alpha_mj), rows of a (sub-)stochastic mixing matrix (Eq. 14);
+  - ``cooperates``: boolean mask (drives the fog-to-fog energy term, Eq. 18).
+
+Rules are pure functions of the fog geometry + cluster sizes, so the whole
+round stays jittable and the same code runs inside `shard_map`.
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+
+
+class CoopRule(enum.Enum):
+    NOCOOP = "nocoop"
+    NEAREST = "nearest"
+    SELECTIVE = "selective"
+
+
+class CoopDecision(NamedTuple):
+    partner: jax.Array        # (M,) int32
+    self_weight: jax.Array    # (M,) f32
+    partner_weight: jax.Array  # (M,) f32
+    cooperates: jax.Array     # (M,) bool
+    dist_m: jax.Array         # (M,) distance to partner (0 when not cooperating)
+
+
+# Paper's fixed mixing weights.
+NEAREST_WEIGHTS = (0.7, 0.3)     # HFL-Nearest (Sec. V-B)
+SELECTIVE_WEIGHTS = (0.8, 0.2)   # HFL-Selective (Eq. 29)
+
+
+def _fog_distance_matrix(fog_pos: jax.Array) -> jax.Array:
+    d = ch.pairwise_distances(fog_pos, fog_pos)
+    return d + jnp.diag(jnp.full((fog_pos.shape[0],), jnp.inf))
+
+
+def no_cooperation(fog_pos: jax.Array) -> CoopDecision:
+    """HFL-NoCoop: N_m = empty set for every fog."""
+    m = fog_pos.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    return CoopDecision(
+        partner=idx,
+        self_weight=jnp.ones((m,), jnp.float32),
+        partner_weight=jnp.zeros((m,), jnp.float32),
+        cooperates=jnp.zeros((m,), bool),
+        dist_m=jnp.zeros((m,), jnp.float32),
+    )
+
+
+def nearest_cooperation(
+    fog_pos: jax.Array, cparams: ch.ChannelParams
+) -> CoopDecision:
+    """HFL-Nearest: always-on cooperation with the nearest *feasible* fog."""
+    d = _fog_distance_matrix(fog_pos)
+    feas = ch.feasible(d, cparams)
+    masked = jnp.where(feas, d, jnp.inf)
+    partner = jnp.argmin(masked, axis=-1).astype(jnp.int32)
+    has_any = jnp.any(feas, axis=-1)
+    pdist = jnp.take_along_axis(d, partner[:, None], axis=-1)[:, 0]
+    w_self, w_peer = NEAREST_WEIGHTS
+    m = fog_pos.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    return CoopDecision(
+        partner=jnp.where(has_any, partner, idx),
+        self_weight=jnp.where(has_any, w_self, 1.0).astype(jnp.float32),
+        partner_weight=jnp.where(has_any, w_peer, 0.0).astype(jnp.float32),
+        cooperates=has_any,
+        dist_m=jnp.where(has_any, pdist, 0.0),
+    )
+
+
+def selective_cooperation(
+    fog_pos: jax.Array,
+    cluster_size: jax.Array,
+    cparams: ch.ChannelParams,
+) -> CoopDecision:
+    """HFL-Selective (paper Eqs. 28-29).
+
+    A fog m cooperates iff
+      1. its cluster is small:  c_m <= max(2, 0.75 * mean nonempty c)   (28)
+      2. a feasible neighbour exists with *larger* cluster whose distance
+         is below the first quartile of feasible fog-fog distances,
+    in which case it mixes 0.8/0.2 with the *nearest* such neighbour (29).
+    """
+    m = fog_pos.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    d = _fog_distance_matrix(fog_pos)
+    feas = ch.feasible(d, cparams)
+
+    c = cluster_size.astype(jnp.float32)
+    nonempty = c > 0
+    mean_c = jnp.sum(c * nonempty) / jnp.maximum(jnp.sum(nonempty), 1.0)
+    eligible = c <= jnp.maximum(2.0, 0.75 * mean_c)                      # (28)
+
+    # First quartile of feasible fog-fog distances (upper triangle of the
+    # symmetric matrix; use all feasible off-diagonal entries — each pair
+    # counted twice, which leaves the quantile unchanged).
+    feas_d = jnp.where(feas, d, jnp.nan)
+    q1 = jnp.nanquantile(feas_d, 0.25)
+
+    larger = c[None, :] > c[:, None]
+    candidate = feas & larger & (d < q1)
+    masked = jnp.where(candidate, d, jnp.inf)
+    partner = jnp.argmin(masked, axis=-1).astype(jnp.int32)
+    has_candidate = jnp.any(candidate, axis=-1)
+
+    coop = eligible & has_candidate & nonempty
+    pdist = jnp.take_along_axis(d, partner[:, None], axis=-1)[:, 0]
+    w_self, w_peer = SELECTIVE_WEIGHTS
+    return CoopDecision(
+        partner=jnp.where(coop, partner, idx),
+        self_weight=jnp.where(coop, w_self, 1.0).astype(jnp.float32),
+        partner_weight=jnp.where(coop, w_peer, 0.0).astype(jnp.float32),
+        cooperates=coop,
+        dist_m=jnp.where(coop, pdist, 0.0),
+    )
+
+
+def decide(
+    rule: CoopRule,
+    fog_pos: jax.Array,
+    cluster_size: jax.Array,
+    cparams: ch.ChannelParams,
+) -> CoopDecision:
+    """Dispatch on the cooperation rule (static — rule is a Python enum)."""
+    if rule is CoopRule.NOCOOP:
+        return no_cooperation(fog_pos)
+    if rule is CoopRule.NEAREST:
+        return nearest_cooperation(fog_pos, cparams)
+    if rule is CoopRule.SELECTIVE:
+        return selective_cooperation(fog_pos, cluster_size, cparams)
+    raise ValueError(f"unknown cooperation rule: {rule}")

@@ -1,0 +1,108 @@
+"""SNR-driven energy model (paper Sec. III-D, Eqs. 5-8) and battery dynamics.
+
+All functions are pure JAX and broadcast over link arrays.  Infeasible links
+(SL_min > SL_max) get ``inf`` energy so downstream argmin/feasibility masks
+compose naturally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyParams:
+    """Static energy parameters (paper Table II baseline)."""
+
+    eta_ea: float = 0.25          # electro-acoustic efficiency
+    p_circuit_tx_w: float = 0.05  # transmit circuit power (W)
+    p_circuit_rx_w: float = 0.03  # receive circuit power (W)
+    e_init_j: float = 500.0       # initial per-sensor battery (J)
+    e_min_j: float = 0.0          # minimum battery reserve (Eq. 25)
+    eps_op_j: float = 1e-9        # energy per FLOP for local compute (Sec. III-D)
+
+    def replace(self, **kw: Any) -> "EnergyParams":
+        return dataclasses.replace(self, **kw)
+
+
+def acoustic_power_w(sl_min_db: jax.Array) -> jax.Array:
+    """Acoustic transmit power P_ac from source level (Eq. 7)."""
+    coef = 4.0 * jnp.pi * ch.P_REF_PA**2 / (ch.RHO_WATER * ch.SOUND_SPEED_M_S)
+    return coef * 10.0 ** (sl_min_db / 10.0)
+
+
+def electrical_tx_power_w(
+    sl_min_db: jax.Array, eparams: EnergyParams
+) -> jax.Array:
+    """Electrical transmit power P_tx = P_ac / eta_ea (Sec. III-D)."""
+    return acoustic_power_w(sl_min_db) / eparams.eta_ea
+
+
+def tx_energy_j(
+    bits: jax.Array,
+    dist_m: jax.Array,
+    cparams: ch.ChannelParams,
+    eparams: EnergyParams,
+) -> jax.Array:
+    """Energy to transmit ``bits`` over distance ``dist_m`` (Eq. 8).
+
+    Power-controls to gamma_tgt; infeasible links return ``inf``.
+    """
+    sl_min = ch.min_source_level_db(dist_m, cparams)
+    p_tx = electrical_tx_power_w(sl_min, eparams)
+    rate = ch.shannon_rate_bps(cparams)
+    e = (p_tx + eparams.p_circuit_tx_w) * jnp.asarray(bits, jnp.float32) / rate
+    return jnp.where(sl_min <= cparams.sl_max_db, e, jnp.inf)
+
+
+def rx_energy_j(
+    bits: jax.Array, cparams: ch.ChannelParams, eparams: EnergyParams
+) -> jax.Array:
+    """Receive energy E_rx = P_c,rx * L / R (Sec. III-D)."""
+    rate = ch.shannon_rate_bps(cparams)
+    return eparams.p_circuit_rx_w * jnp.asarray(bits, jnp.float32) / rate
+
+
+def compute_energy_j(flops: jax.Array, eparams: EnergyParams) -> jax.Array:
+    """Local-training compute energy E_comp = eps_op * Phi (Sec. III-D)."""
+    return eparams.eps_op_j * jnp.asarray(flops, jnp.float32)
+
+
+def link_latency_s(
+    bits: jax.Array, dist_m: jax.Array, cparams: ch.ChannelParams
+) -> jax.Array:
+    """Per-link latency tau = d/c_s + L/R (Eq. 21 inner term)."""
+    rate = ch.shannon_rate_bps(cparams)
+    return ch.propagation_delay_s(dist_m) + jnp.asarray(bits, jnp.float32) / rate
+
+
+def battery_step(
+    residual_j: jax.Array,
+    spent_j: jax.Array,
+    eparams: EnergyParams,
+) -> tuple[jax.Array, jax.Array]:
+    """One round of battery depletion (Sec. IV-C).
+
+    Returns (new_residual, alive_mask) where ``alive`` enforces the minimum
+    reserve constraint (Eq. 25): a sensor whose spend would dip below
+    ``e_min_j`` is marked dead and its residual is floored.
+    """
+    new = residual_j - spent_j
+    alive = new >= eparams.e_min_j
+    return jnp.maximum(new, eparams.e_min_j), alive
+
+
+def autoencoder_flops(d_in: int, hidden: tuple[int, ...], n_samples: int, epochs: int) -> int:
+    """FLOPs for E epochs of AE training (fwd+bwd ~= 3x fwd matmul cost).
+
+    The symmetric AE maps d_in -> hidden... -> d_in, so the output layer
+    back to ``d_in`` is part of the forward cost.
+    """
+    dims = (d_in, *hidden, d_in)
+    mm = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    return 3 * mm * n_samples * epochs

@@ -1,0 +1,275 @@
+"""Flat (star-topology) FL baselines: FedAvg, FedProx, SCAFFOLD, and the
+centralised oracle (paper Sec. VI-B).
+
+Flat methods are participation-limited: only sensors with a feasible
+*direct* sensor->gateway acoustic link upload updates (Sec. IV-E).  The
+centralised oracle pools raw data at the gateway — underwater-infeasible,
+kept as a reference; its energy is the raw-data upload cost through each
+sensor's cheapest feasible path (direct if feasible, else the 2-hop
+sensor->fog->gateway relay), which is the assumption that makes Table IV's
+finite centralised energies reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import aggregation as agg
+from repro.core import association as assoc
+from repro.core import channel as ch
+from repro.core import compression as comp
+from repro.core import energy as en
+from repro.core import topology as topo
+from repro.core.hfl import HFLConfig, HFLState, RoundMetrics, _local_train
+from repro.data.pipeline import multi_epoch_batches
+from repro.data.synthetic import SensorDataset
+from repro.optim import scaffold as scf
+from repro.optim import server as srv
+from repro.optim.sgd import local_sgd
+
+Params = Any
+LossFn = Callable[[Params, jax.Array], jax.Array]
+
+
+def make_flat_round_fn(
+    loss_fn: LossFn, ds: SensorDataset, cfg: HFLConfig
+) -> Callable[[HFLState, None], tuple[HFLState, RoundMetrics]]:
+    """FedAvg (prox_mu=0) / FedProx (prox_mu>0) direct-to-gateway round."""
+
+    def round_fn(state: HFLState, _) -> tuple[HFLState, RoundMetrics]:
+        key, k_mob, k_train = jax.random.split(state.key, 3)
+        dep = state.dep
+        if cfg.fog_mobility:
+            dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
+
+        fa = assoc.flat_association(dep, cfg.channel)
+        alive = state.battery > cfg.energy.e_min_j
+        active = fa.participates & alive
+
+        flat0, unravel = ravel_pytree(state.params)
+        d = flat0.shape[0]
+        n = ds.train.shape[0]
+        keys = jax.random.split(k_train, n)
+
+        def client_step(data, k, err):
+            p1, loss = _local_train(loss_fn, state.params, data, k, cfg)
+            delta = jax.tree_util.tree_map(lambda a, b: a - b, p1, state.params)
+            recon, new_err = comp.compress_update(delta, err, cfg.compressor)
+            return ravel_pytree(recon)[0], new_err, loss
+
+        deltas, new_err, losses = jax.vmap(client_step)(ds.train, keys, state.err)
+        active_f = active.astype(jnp.float32)
+        new_err = jnp.where(active[:, None], new_err, state.err)
+        weights = ds.n_samples * active_f
+
+        mean_delta = agg.weighted_mean(deltas, weights)
+        if cfg.server_opt == "adam":
+            # FedAdam [34] at the gateway: delta is the pseudo-gradient.
+            incr, server = srv.adam_update(
+                mean_delta, state.server, lr=cfg.server_lr
+            )
+        else:
+            incr, server = mean_delta, state.server
+        new_params = unravel(flat0 + incr)
+
+        l_u = comp.payload_bits(d, cfg.compressor)
+        e_up = en.tx_energy_j(l_u, fa.dist_m, cfg.channel, cfg.energy)
+        e_up = jnp.where(active, e_up, 0.0)
+        e_total = jnp.sum(e_up)
+
+        lat_up = jnp.max(
+            jnp.where(active, en.link_latency_s(l_u, fa.dist_m, cfg.channel), 0.0)
+        )
+        flops = en.autoencoder_flops(
+            ds.train.shape[-1], (16, 8, 16), ds.train.shape[1], cfg.local_epochs
+        )
+        e_comp = en.compute_energy_j(jnp.float32(flops), cfg.energy)
+        spent = e_up + jnp.where(active, e_comp, 0.0)
+        battery, _ = en.battery_step(state.battery, spent, cfg.energy)
+
+        metrics = RoundMetrics(
+            loss=jnp.sum(losses * active_f) / jnp.maximum(jnp.sum(active_f), 1.0),
+            e_s2f=e_total,
+            e_f2f=jnp.zeros(()),
+            e_f2g=jnp.zeros(()),
+            e_total=e_total,
+            latency_s=lat_up + flops / cfg.compute_rate_flops,
+            participation=jnp.mean(active_f),
+            coop_links=jnp.zeros((), jnp.int32),
+            battery_min=jnp.min(battery),
+        )
+        return HFLState(new_params, new_err, battery, dep, key, server), metrics
+
+    return round_fn
+
+
+def train_flat(
+    key: jax.Array,
+    init_params: Params,
+    loss_fn: LossFn,
+    ds: SensorDataset,
+    cfg: HFLConfig,
+) -> tuple[Params, RoundMetrics]:
+    from repro.core.hfl import init_state
+
+    state = init_state(key, init_params, cfg)
+    round_fn = make_flat_round_fn(loss_fn, ds, cfg)
+    final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
+    return final.params, metrics
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD
+# ---------------------------------------------------------------------------
+
+class ScaffoldTrainState(NamedTuple):
+    fl: HFLState
+    ctrl: scf.ScaffoldState
+
+
+def train_scaffold(
+    key: jax.Array,
+    init_params: Params,
+    loss_fn: LossFn,
+    ds: SensorDataset,
+    cfg: HFLConfig,
+) -> tuple[Params, RoundMetrics]:
+    """SCAFFOLD over feasible direct links (released-trace baseline)."""
+    from repro.core.hfl import init_state
+
+    n = ds.train.shape[0]
+    state = ScaffoldTrainState(
+        fl=init_state(key, init_params, cfg),
+        ctrl=scf.init_state(init_params, n),
+    )
+
+    def round_fn(s: ScaffoldTrainState, _):
+        st = s.fl
+        key, k_mob, k_train = jax.random.split(st.key, 3)
+        dep = st.dep
+        if cfg.fog_mobility:
+            dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
+        fa = assoc.flat_association(dep, cfg.channel)
+        active = fa.participates & (st.battery > cfg.energy.e_min_j)
+        active_f = active.astype(jnp.float32)
+
+        keys = jax.random.split(k_train, n)
+
+        def client_step(data, k, c_i):
+            batches = multi_epoch_batches(
+                k, data, cfg.batch_size, cfg.local_epochs
+            )
+            p1, new_ci, loss = scf.scaffold_local(
+                loss_fn, st.params, batches, cfg.lr, s.ctrl.c_global, c_i
+            )
+            delta = jax.tree_util.tree_map(lambda a, b: a - b, p1, st.params)
+            dc = jax.tree_util.tree_map(lambda a, b: a - b, new_ci, c_i)
+            return delta, new_ci, dc, loss
+
+        deltas, new_ci, dcs, losses = jax.vmap(client_step)(
+            ds.train, keys, s.ctrl.c_local
+        )
+        weights = ds.n_samples * active_f
+        mean_delta = agg.weighted_mean(deltas, weights)
+        new_params = jax.tree_util.tree_map(
+            lambda p, dlt: p + dlt, st.params, mean_delta
+        )
+        # c <- c + (1/N) sum active dc
+        frac = jnp.sum(active_f) / n
+        mean_dc = agg.weighted_mean(dcs, active_f)
+        new_cg = jax.tree_util.tree_map(
+            lambda c, dc: c + frac * dc, s.ctrl.c_global, mean_dc
+        )
+        keep = active.reshape((-1,) + (1,) * 0)
+        new_cl = jax.tree_util.tree_map(
+            lambda old, new: jnp.where(
+                active.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+            ),
+            s.ctrl.c_local,
+            new_ci,
+        )
+        del keep
+
+        flat0, _ = ravel_pytree(st.params)
+        l_u = comp.payload_bits(flat0.shape[0], cfg.compressor)
+        e_up = jnp.where(
+            active, en.tx_energy_j(l_u, fa.dist_m, cfg.channel, cfg.energy), 0.0
+        )
+        battery, _ = en.battery_step(st.battery, e_up, cfg.energy)
+        metrics = RoundMetrics(
+            loss=jnp.sum(losses * active_f) / jnp.maximum(jnp.sum(active_f), 1.0),
+            e_s2f=jnp.sum(e_up),
+            e_f2f=jnp.zeros(()),
+            e_f2g=jnp.zeros(()),
+            e_total=jnp.sum(e_up),
+            latency_s=jnp.zeros(()),
+            participation=jnp.mean(active_f),
+            coop_links=jnp.zeros((), jnp.int32),
+            battery_min=jnp.min(battery),
+        )
+        return (
+            ScaffoldTrainState(
+                HFLState(new_params, st.err, battery, dep, key, st.server),
+                scf.ScaffoldState(new_cg, new_cl),
+            ),
+            metrics,
+        )
+
+    final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
+    return final.fl.params, metrics
+
+
+# ---------------------------------------------------------------------------
+# Centralised oracle
+# ---------------------------------------------------------------------------
+
+def train_centralised(
+    key: jax.Array,
+    init_params: Params,
+    loss_fn: LossFn,
+    ds: SensorDataset,
+    cfg: HFLConfig,
+) -> tuple[Params, jax.Array, jax.Array]:
+    """All-data oracle at the gateway.
+
+    Returns (params, losses (T,), upload_energy_j scalar).  Energy is the
+    one-time raw-data upload through each sensor's cheapest feasible path.
+    """
+    kd, kt = jax.random.split(key)
+    dep = topo.sample_deployment(kd, cfg.deployment)
+
+    # Raw-data upload energy, cheapest feasible path per sensor.
+    raw_bits = ds.train.shape[1] * ds.train.shape[2] * 32.0
+    flat = assoc.flat_association(dep, cfg.channel)
+    fog = assoc.nearest_feasible_fog(dep, cfg.channel)
+    e_direct = en.tx_energy_j(raw_bits, flat.dist_m, cfg.channel, cfg.energy)
+    e_relay = en.tx_energy_j(
+        raw_bits, fog.dist_m, cfg.channel, cfg.energy
+    ) + en.tx_energy_j(
+        raw_bits, fog.fog_gateway_dist_m[fog.fog_id], cfg.channel, cfg.energy
+    )
+    e_path = jnp.minimum(
+        jnp.where(flat.participates, e_direct, jnp.inf),
+        jnp.where(fog.participates, e_relay, jnp.inf),
+    )
+    upload_energy = jnp.sum(jnp.where(jnp.isfinite(e_path), e_path, 0.0))
+
+    pooled = ds.train.reshape(-1, ds.train.shape[-1])
+
+    def epoch(carry, k):
+        params = carry
+        params, loss = local_sgd(
+            loss_fn,
+            params,
+            multi_epoch_batches(k, pooled, cfg.batch_size, 1),
+            cfg.lr,
+        )
+        return params, loss
+
+    keys = jax.random.split(kt, cfg.rounds * cfg.local_epochs)
+    params, losses = jax.lax.scan(epoch, init_params, keys)
+    return params, losses, upload_energy

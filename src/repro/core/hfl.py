@@ -1,0 +1,245 @@
+"""Hierarchical federated learning main loop (paper Algorithm 1).
+
+The whole federated round is ONE jitted function; training scans it over T
+rounds.  Clients are a vmapped leading axis (their local SGD runs in
+parallel), fog clusters are segment-sum groups, and the three cooperation
+rules from Sec. V-B drive the mixing step.  Per-round energy (Eqs. 17-20),
+latency (Eq. 21), participation, and battery dynamics are all recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import aggregation as agg
+from repro.core import association as assoc
+from repro.core import channel as ch
+from repro.core import compression as comp
+from repro.core import cooperation as coop
+from repro.core import energy as en
+from repro.core import topology as topo
+from repro.data.pipeline import multi_epoch_batches
+from repro.data.synthetic import SensorDataset
+from repro.optim import server as srv
+from repro.optim.sgd import local_sgd, proximal_local_sgd
+
+Params = Any
+LossFn = Callable[[Params, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class HFLConfig:
+    rule: coop.CoopRule = coop.CoopRule.SELECTIVE
+    rounds: int = 20
+    local_epochs: int = 5            # E
+    batch_size: int = 32
+    lr: float = 0.01                 # eta
+    prox_mu: float = 0.0             # >0 => FedProx local solver
+    server_opt: str = "sgd"          # "sgd" (FedAvg identity) | "adam" (FedAdam [34])
+    server_lr: float = 1e-2
+    compressor: comp.CompressorConfig = comp.CompressorConfig()
+    fog_mobility: bool = True
+    compute_rate_flops: float = 1e8  # embedded-DSP local compute rate
+    # Fog exchange payloads are full precision in the paper (Sec. VI-A).
+    channel: ch.ChannelParams = ch.ChannelParams()
+    energy: en.EnergyParams = en.EnergyParams()
+    deployment: topo.DeploymentParams = topo.DeploymentParams()
+
+    def replace(self, **kw: Any) -> "HFLConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array
+    e_s2f: jax.Array          # Eq. 17
+    e_f2f: jax.Array          # Eq. 18
+    e_f2g: jax.Array          # Eq. 19
+    e_total: jax.Array        # Eq. 20
+    latency_s: jax.Array      # Eq. 21
+    participation: jax.Array
+    coop_links: jax.Array     # number of active fog-to-fog exchanges
+    battery_min: jax.Array
+
+
+class HFLState(NamedTuple):
+    params: Params            # global model theta^t
+    err: jax.Array            # (N, d) error-feedback buffers
+    battery: jax.Array        # (N,) residual energy
+    dep: topo.Deployment
+    key: jax.Array
+    server: srv.ServerOptState  # gateway optimiser state (FedAdam)
+
+
+def init_state(
+    key: jax.Array, params: Params, cfg: HFLConfig
+) -> HFLState:
+    kd, kr = jax.random.split(key)
+    dep = topo.sample_deployment(kd, cfg.deployment)
+    flat, _ = ravel_pytree(params)
+    n = cfg.deployment.n_sensors
+    return HFLState(
+        params=params,
+        err=jnp.zeros((n, flat.shape[0]), flat.dtype),
+        battery=jnp.full((n,), cfg.energy.e_init_j),
+        dep=dep,
+        key=kr,
+        server=srv.init_state(flat.shape[0]),
+    )
+
+
+def _local_train(
+    loss_fn: LossFn,
+    params: Params,
+    data: jax.Array,
+    key: jax.Array,
+    cfg: HFLConfig,
+) -> tuple[Params, jax.Array]:
+    batches = multi_epoch_batches(key, data, cfg.batch_size, cfg.local_epochs)
+    if cfg.prox_mu > 0.0:
+        return proximal_local_sgd(loss_fn, params, batches, cfg.lr, cfg.prox_mu)
+    return local_sgd(loss_fn, params, batches, cfg.lr)
+
+
+def make_round_fn(
+    loss_fn: LossFn, ds: SensorDataset, cfg: HFLConfig
+) -> Callable[[HFLState, None], tuple[HFLState, RoundMetrics]]:
+    """Build the jittable single-round function (Algorithm 1)."""
+
+    n_fog = cfg.deployment.n_fog
+    d_model = None  # resolved at first trace via ravel
+
+    def round_fn(state: HFLState, _) -> tuple[HFLState, RoundMetrics]:
+        key, k_mob, k_train = jax.random.split(state.key, 3)
+        dep = state.dep
+        if cfg.fog_mobility:
+            dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
+
+        # --- 1. association + cooperation decisions (lines 1-7) ----------
+        fa = assoc.nearest_feasible_fog(dep, cfg.channel)
+        decision = coop.decide(cfg.rule, dep.fog_pos, fa.cluster_size, cfg.channel)
+
+        alive = state.battery > cfg.energy.e_min_j
+        active = fa.participates & alive
+
+        # --- 2. local training & compression (lines 8-13) ----------------
+        flat0, unravel = ravel_pytree(state.params)
+        d = flat0.shape[0]
+        n = ds.train.shape[0]
+        keys = jax.random.split(k_train, n)
+
+        def client_step(data, k, err):
+            p1, loss = _local_train(loss_fn, state.params, data, k, cfg)
+            delta = jax.tree_util.tree_map(
+                lambda a, b: a - b, p1, state.params
+            )
+            recon, new_err = comp.compress_update(delta, err, cfg.compressor)
+            return ravel_pytree(recon)[0], new_err, loss
+
+        deltas, new_err, losses = jax.vmap(client_step)(
+            ds.train, keys, state.err
+        )
+        # Non-participants keep their error buffer and contribute nothing.
+        active_f = active.astype(jnp.float32)
+        new_err = jnp.where(active[:, None], new_err, state.err)
+        weights = ds.n_samples * active_f
+
+        # --- 3. fog aggregation (Eq. 13, lines 14-18) ---------------------
+        fog_delta, fog_weight = agg.fog_aggregate(
+            deltas, fa.fog_id, weights, n_fog
+        )
+        fog_model = fog_delta + flat0[None, :]          # theta_m^{t+1/2}
+        mixed = agg.cooperative_mix(fog_model, decision)  # Eq. 15
+
+        # --- 4. global aggregation (Eq. 16, lines 19-21) -------------------
+        new_flat = agg.global_aggregate(mixed, fog_weight)
+        if cfg.server_opt == "adam":
+            # FedAdam [34]: the aggregated movement is a pseudo-gradient.
+            incr, server = srv.adam_update(
+                new_flat - flat0, state.server, lr=cfg.server_lr
+            )
+            new_flat = flat0 + incr
+        else:
+            server = state.server
+        new_params = unravel(new_flat)
+
+        # --- 5. energy / latency / battery accounting ---------------------
+        l_u = comp.payload_bits(d, cfg.compressor)     # sensor uplink bits
+        l_full = 32.0 * d                               # fog exchanges, dense
+        e_up = en.tx_energy_j(l_u, fa.dist_m, cfg.channel, cfg.energy)
+        e_up = jnp.where(active, e_up, 0.0)
+        e_s2f = jnp.sum(e_up)
+
+        fog_active = fog_weight > 0
+        e_ff = en.tx_energy_j(l_full, decision.dist_m, cfg.channel, cfg.energy)
+        e_ff = jnp.where(decision.cooperates & fog_active, e_ff, 0.0)
+        e_f2f = jnp.sum(e_ff)
+
+        e_fg = en.tx_energy_j(
+            l_full, fa.fog_gateway_dist_m, cfg.channel, cfg.energy
+        )
+        e_fg = jnp.where(fog_active & fa.fog_gateway_feasible, e_fg, 0.0)
+        e_f2g = jnp.sum(e_fg)
+
+        # Latency (Eq. 21): slowest parallel link per tier + compute time.
+        lat_up = jnp.max(
+            jnp.where(active, en.link_latency_s(l_u, fa.dist_m, cfg.channel), 0.0)
+        )
+        lat_ff = jnp.max(
+            jnp.where(
+                decision.cooperates,
+                en.link_latency_s(l_full, decision.dist_m, cfg.channel),
+                0.0,
+            )
+        )
+        lat_fg = jnp.max(
+            jnp.where(
+                fog_active,
+                en.link_latency_s(l_full, fa.fog_gateway_dist_m, cfg.channel),
+                0.0,
+            )
+        )
+        flops = en.autoencoder_flops(
+            ds.train.shape[-1], (16, 8, 16), ds.train.shape[1], cfg.local_epochs
+        )
+        lat_comp = flops / cfg.compute_rate_flops
+        latency = jnp.maximum(jnp.maximum(lat_up, lat_ff), lat_fg) + lat_comp
+
+        e_comp = en.compute_energy_j(jnp.float32(flops), cfg.energy)
+        spent = e_up + jnp.where(active, e_comp, 0.0)
+        battery, _ = en.battery_step(state.battery, spent, cfg.energy)
+
+        metrics = RoundMetrics(
+            loss=jnp.sum(losses * active_f) / jnp.maximum(jnp.sum(active_f), 1.0),
+            e_s2f=e_s2f,
+            e_f2f=e_f2f,
+            e_f2g=e_f2g,
+            e_total=e_s2f + e_f2f + e_f2g,
+            latency_s=latency,
+            participation=jnp.mean(active_f),
+            coop_links=jnp.sum(decision.cooperates.astype(jnp.int32)),
+            battery_min=jnp.min(battery),
+        )
+        return (
+            HFLState(new_params, new_err, battery, dep, key, server),
+            metrics,
+        )
+
+    return round_fn
+
+
+def train(
+    key: jax.Array,
+    init_params: Params,
+    loss_fn: LossFn,
+    ds: SensorDataset,
+    cfg: HFLConfig,
+) -> tuple[Params, RoundMetrics]:
+    """Run T federated rounds; returns (final params, stacked metrics)."""
+    state = init_state(key, init_params, cfg)
+    round_fn = make_round_fn(loss_fn, ds, cfg)
+    final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
+    return final.params, metrics

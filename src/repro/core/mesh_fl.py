@@ -1,0 +1,207 @@
+"""The paper's hierarchical-FL communication pattern on the TPU mesh
+(beyond-paper optimisation — EXPERIMENTS.md §Perf, pair C).
+
+Mapping (DESIGN.md §3): pods = fog clusters; the `data` axis inside a pod
+is the cluster's sensors; the cross-pod hop is the expensive fog->gateway /
+fog->fog link.  This module implements a *compressed selective-cooperation*
+train step in PURE pjit (mixed manual/auto ``shard_map`` CHECK-fails in
+this XLA build — see experiments/perf/run_pair_c.py):
+
+  1. per-pod gradients via ``vmap(value_and_grad)`` over a leading pod dim
+     that is sharded on the ``pod`` mesh axis (the in-pod `data`/`model`
+     collectives stay within the pod — fog aggregation, Eq. 13),
+  2. per-leaf blockwise Top-K + error feedback + int8 into COMPACT wire
+     buffers (values int8, indices int32, scales f32 — the acoustic
+     payload, Eqs. 30-31),
+  3. a sharding constraint that REPLICATES the compact buffers across
+     pods — the only cross-pod collective is an all-gather of the
+     compressed payload (fog-to-fog exchange, Eq. 15),
+  4. local decompression of every pod's update + fixed-weight mixing
+     (Eq. 29) and the SGD update, identical on all pods.
+
+Cross-pod traffic drops from 4·d bytes (dense f32 gradient all-reduce) to
+~rho_s·d·5 bytes per pod — 16x at rho_s = 0.05.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api
+
+BLOCK = 4096
+
+
+def compress_compact(
+    flat: jax.Array, rho_s: float
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Blockwise Top-K + int8 into compact wire buffers.
+
+    flat: (n,) f32.  Returns (q int8 (nb, k), idx int32 (nb, k),
+    scale f32 (nb, 1)).
+    """
+    n = flat.shape[0]
+    nb = -(-n // BLOCK)
+    k = max(1, int(round(rho_s * BLOCK)))
+    padded = jnp.zeros((nb * BLOCK,), jnp.float32).at[:n].set(flat)
+    blocks = padded.reshape(nb, BLOCK)
+    _, idx = jax.lax.top_k(jnp.abs(blocks), k)          # (nb, k)
+    vals = jnp.take_along_axis(blocks, idx, axis=1)     # signed survivors
+    amax = jnp.max(jnp.abs(vals), axis=1, keepdims=True)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(vals / safe), -127, 127).astype(jnp.int8)
+    return q, idx.astype(jnp.int32), scale.astype(jnp.float32)
+
+
+def decompress_compact(
+    q: jax.Array, idx: jax.Array, scale: jax.Array, n: int
+) -> jax.Array:
+    """Inverse of :func:`compress_compact` -> flat (n,) f32."""
+    vals = q.astype(jnp.float32) * scale
+    blocks = jnp.zeros((q.shape[0], BLOCK), jnp.float32)
+    blocks = jax.vmap(lambda b, i, v: b.at[i].set(v))(blocks, idx, vals)
+    return blocks.reshape(-1)[:n]
+
+
+def wire_bytes(d: int, rho_s: float) -> float:
+    """Compact cross-pod payload per pod per exchange (bytes)."""
+    nb = -(-d // BLOCK)
+    k = max(1, int(round(rho_s * BLOCK)))
+    return nb * k * (1 + 4) + nb * 4
+
+
+def init_err(params: Any, n_pods: int) -> Any:
+    """Zero per-pod, per-leaf error-feedback buffers (Eq. 30)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((n_pods, *p.shape), jnp.float32), params
+    )
+
+
+def make_pod_hfl_train_step(
+    cfg: Any,
+    mesh: jax.sharding.Mesh,
+    rho_s: float = 0.05,
+    self_weight: float = 0.5,
+    mode: str = "int8",
+):
+    """Compressed hierarchical train step (pure pjit; see module doc).
+
+    mode="int8": elementwise int8 + per-leaf scale for the cross-pod
+    exchange.  This is the TPU-grain adaptation of the paper's compressed
+    uplink: blockwise Top-K (mode="topk") needs a flat contiguous view of
+    each gradient leaf, which forces DENSE all-gathers of the sharded
+    leaves before compression and *increases* cross-pod traffic — the
+    refuted-hypothesis measurement in EXPERIMENTS.md §Perf pair C.
+    Elementwise int8 commutes with any sharding, cutting the wire format
+    4x with zero resharding.
+
+    self_weight=0.5 with 2 pods reproduces the exact mean of the
+    compressed pod updates; the paper's selective weights use 0.8.
+    Signature: (params, err, batch) -> (params', err', loss) with ``err``
+    the (n_pods, ...) per-pod error-feedback pytree.
+    """
+    lfn = api.loss_fn(cfg)
+    lr = cfg.learning_rate
+    n_pods = mesh.shape["pod"]
+
+    replicated = NamedSharding(mesh, P())
+
+    def leaf_exchange_int8(g: jax.Array, e: jax.Array):
+        """g, e: (n_pods, *leaf_shape) pod-sharded on dim 0."""
+        v = g.astype(jnp.float32) + e
+        # Per-pod scalar scale: a (n_pods,) f32 reduction, sharding-free.
+        red_axes = tuple(range(1, v.ndim))
+        amax = jnp.max(jnp.abs(v), axis=red_axes)
+        scale = amax / 127.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        sb = safe.reshape((n_pods,) + (1,) * (v.ndim - 1))
+        q = jnp.clip(jnp.round(v / sb), -127, 127).astype(jnp.int8)
+        recon_own = q.astype(jnp.float32) * sb
+        new_e = v - recon_own
+
+        # THE cross-pod hop: replicate the int8 buffer (all-gather of
+        # 1 byte/param instead of a 4-byte f32 all-reduce).
+        q = jax.lax.with_sharding_constraint(q, replicated)
+        scale = jax.lax.with_sharding_constraint(scale, replicated)
+
+        recon_all = q.astype(jnp.float32) * scale.reshape(
+            (n_pods,) + (1,) * (v.ndim - 1)
+        )
+        own_w = self_weight
+        peer_w = (1.0 - self_weight) / max(n_pods - 1, 1)
+        mean_all = jnp.sum(recon_all, axis=0)
+        # mixed_p = own_w recon_p + peer_w sum_{j!=p} recon_j  (Eq. 29);
+        # gateway aggregation (Eq. 16) = mean over pods.
+        mixed = own_w * recon_all + peer_w * (mean_all[None] - recon_all)
+        upd = jnp.mean(mixed, axis=0)
+        return upd, new_e
+
+    def leaf_exchange_topk(g: jax.Array, e: jax.Array):
+        """Blockwise-Top-K compact exchange (kept for the refuted-
+        hypothesis measurement; forces dense gathers on sharded leaves)."""
+        shape = g.shape[1:]
+        n = 1
+        for s in shape:
+            n *= s
+        v = g.astype(jnp.float32).reshape(n_pods, n) + e.reshape(n_pods, n)
+        q, idx, scale = jax.vmap(
+            functools.partial(compress_compact, rho_s=rho_s)
+        )(v)
+        recon_own = jax.vmap(
+            lambda qq, ii, ss: decompress_compact(qq, ii, ss, n)
+        )(q, idx, scale)
+        new_e = (v - recon_own).reshape(n_pods, *shape)
+        q = jax.lax.with_sharding_constraint(q, replicated)
+        idx = jax.lax.with_sharding_constraint(idx, replicated)
+        scale = jax.lax.with_sharding_constraint(scale, replicated)
+        recon_all = jax.vmap(
+            lambda qq, ii, ss: decompress_compact(qq, ii, ss, n)
+        )(q, idx, scale)
+        own_w = self_weight
+        peer_w = (1.0 - self_weight) / max(n_pods - 1, 1)
+        mean_all = jnp.sum(recon_all, axis=0)
+        mixed = own_w * recon_all + peer_w * (mean_all[None] - recon_all)
+        upd = jnp.mean(mixed, axis=0).reshape(shape)
+        return upd, new_e
+
+    leaf_exchange = (
+        leaf_exchange_int8 if mode == "int8" else leaf_exchange_topk
+    )
+
+    def step(params, err, batch):
+        pb = jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x.reshape(n_pods, x.shape[0] // n_pods, *x.shape[1:]),
+                NamedSharding(
+                    mesh, P("pod", "data", *(None,) * (x.ndim - 1))
+                ),
+            ),
+            batch,
+        )
+        losses, grads = jax.vmap(
+            jax.value_and_grad(lfn), in_axes=(None, 0)
+        )(params, pb)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree_util.tree_leaves(err)
+        upds, new_es = [], []
+        for g, e in zip(flat_g, flat_e):
+            u, ne = leaf_exchange(g, e)
+            upds.append(u)
+            new_es.append(ne)
+        upd = jax.tree_util.tree_unflatten(tdef, upds)
+        new_err = jax.tree_util.tree_unflatten(tdef, new_es)
+
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            params, upd,
+        )
+        return new_params, new_err, jnp.mean(losses)
+
+    return step

@@ -1,0 +1,44 @@
+"""Participation accounting (paper contribution #1, Sec. VI-C).
+
+The paper's central evaluation point: report *who can train* alongside
+accuracy and energy.  These helpers compute, per round and per method
+family, the participation fraction and reachability statistics that the
+scalability study (Fig. 5, Table III) plots.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import association as assoc
+from repro.core import channel as ch
+from repro.core.topology import Deployment
+
+
+class Reachability(NamedTuple):
+    direct_gateway: jax.Array   # fraction of sensors with feasible direct link
+    fog_assisted: jax.Array     # fraction with >= 1 feasible fog link
+    fog_to_gateway: jax.Array   # fraction of fogs that can reach the gateway
+
+
+def reachability(dep: Deployment, cparams: ch.ChannelParams) -> Reachability:
+    flat = assoc.flat_association(dep, cparams)
+    fog = assoc.nearest_feasible_fog(dep, cparams)
+    return Reachability(
+        direct_gateway=jnp.mean(flat.participates.astype(jnp.float32)),
+        fog_assisted=jnp.mean(fog.participates.astype(jnp.float32)),
+        fog_to_gateway=jnp.mean(fog.fog_gateway_feasible.astype(jnp.float32)),
+    )
+
+
+def participation_fraction(mask: jax.Array) -> jax.Array:
+    """Fraction of sensors contributing updates this round."""
+    return jnp.mean(mask.astype(jnp.float32))
+
+
+def energy_per_participant(total_energy_j: jax.Array, mask: jax.Array) -> jax.Array:
+    """Energy normalised by the number of *participating* sensors — the
+    per-participant metric from the paper's design rule #1 (Sec. VI-G)."""
+    return total_energy_j / jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)

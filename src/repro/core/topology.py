@@ -1,0 +1,105 @@
+"""3D stratified IoUT deployment and fog mobility (paper Sec. III-A).
+
+Sensors are static and deep; fog nodes are mid-water and quasi-static within
+a round, drifting between rounds with a Gauss-Markov mobility model.  The
+surface gateway sits at z=0 in the centre of the deployment area.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentParams:
+    """Geometry parameters (paper Table II baseline)."""
+
+    lx_m: float = 2000.0
+    ly_m: float = 2000.0
+    depth_m: float = 1000.0
+    n_sensors: int = 100
+    n_fog: int = 10
+    sensor_depth: tuple[float, float] = (500.0, 1000.0)
+    fog_depth: tuple[float, float] = (100.0, 400.0)
+    # Gauss-Markov fog drift
+    fog_speed_m_s: float = 0.5
+    gm_alpha: float = 0.75       # memory factor
+    round_interval_s: float = 60.0
+
+    def replace(self, **kw: Any) -> "DeploymentParams":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Deployment:
+    """Dynamic node state: positions and fog velocities."""
+
+    sensor_pos: jax.Array      # (N, 3)
+    fog_pos: jax.Array         # (M, 3)
+    fog_vel: jax.Array         # (M, 3)
+    gateway_pos: jax.Array     # (3,)
+
+    def tree_flatten(self):
+        return (self.sensor_pos, self.fog_pos, self.fog_vel, self.gateway_pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _uniform_stratum(
+    key: jax.Array, n: int, params: DeploymentParams, depth: tuple[float, float]
+) -> jax.Array:
+    kx, ky, kz = jax.random.split(key, 3)
+    x = jax.random.uniform(kx, (n,), minval=0.0, maxval=params.lx_m)
+    y = jax.random.uniform(ky, (n,), minval=0.0, maxval=params.ly_m)
+    z = jax.random.uniform(kz, (n,), minval=depth[0], maxval=depth[1])
+    return jnp.stack([x, y, z], axis=-1)
+
+
+def sample_deployment(key: jax.Array, params: DeploymentParams) -> Deployment:
+    """Sample a fresh deployment: uniform (x, y), uniform depth per stratum."""
+    ks, kf = jax.random.split(key)
+    sensors = _uniform_stratum(ks, params.n_sensors, params, params.sensor_depth)
+    fogs = _uniform_stratum(kf, params.n_fog, params, params.fog_depth)
+    gateway = jnp.array([params.lx_m / 2.0, params.ly_m / 2.0, 0.0], jnp.float32)
+    return Deployment(
+        sensor_pos=sensors,
+        fog_pos=fogs,
+        fog_vel=jnp.zeros((params.n_fog, 3), jnp.float32),
+        gateway_pos=gateway,
+    )
+
+
+def gauss_markov_step(
+    key: jax.Array, dep: Deployment, params: DeploymentParams
+) -> Deployment:
+    """Drift fog nodes one round with a Gauss-Markov mobility model.
+
+    v_{t+1} = a v_t + (1-a) v_mean + sqrt(1-a^2) sigma w,  w ~ N(0, I).
+    Mean velocity is zero (station-keeping AUVs); positions are reflected
+    into the deployment volume and clamped to the fog stratum depth band.
+    """
+    a = params.gm_alpha
+    sigma = params.fog_speed_m_s
+    noise = jax.random.normal(key, dep.fog_vel.shape) * sigma
+    vel = a * dep.fog_vel + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * noise
+    pos = dep.fog_pos + vel * params.round_interval_s
+
+    lo = jnp.array([0.0, 0.0, params.fog_depth[0]], jnp.float32)
+    hi = jnp.array(
+        [params.lx_m, params.ly_m, params.fog_depth[1]], jnp.float32
+    )
+    # Reflect off the boundaries; flip the corresponding velocity component.
+    over_hi = pos > hi
+    under_lo = pos < lo
+    pos = jnp.where(over_hi, 2.0 * hi - pos, pos)
+    pos = jnp.where(under_lo, 2.0 * lo - pos, pos)
+    pos = jnp.clip(pos, lo, hi)  # guard pathological double-reflection
+    vel = jnp.where(over_hi | under_lo, -vel, vel)
+    return Deployment(dep.sensor_pos, pos, vel, dep.gateway_pos)

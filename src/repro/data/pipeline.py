@@ -1,0 +1,40 @@
+"""Minibatch pipeline for local training (pure-JAX, scan/vmap friendly).
+
+Local SGD runs E epochs over the client's window; an epoch is a random
+permutation of the window split into fixed-size minibatches.  Everything is
+shape-static so the whole federated round jits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def epoch_batches(
+    key: jax.Array, data: jax.Array, batch_size: int
+) -> jax.Array:
+    """Shuffle one client's (n, D) window into (n//bs, bs, D) batches."""
+    n = data.shape[0]
+    nb = n // batch_size
+    perm = jax.random.permutation(key, n)[: nb * batch_size]
+    return data[perm].reshape(nb, batch_size, *data.shape[1:])
+
+
+def multi_epoch_batches(
+    key: jax.Array, data: jax.Array, batch_size: int, epochs: int
+) -> jax.Array:
+    """(epochs * n//bs, bs, D) batch stream for E local epochs."""
+    keys = jax.random.split(key, epochs)
+    batches = jax.vmap(lambda k: epoch_batches(k, data, batch_size))(keys)
+    return batches.reshape(-1, batch_size, *data.shape[1:])
+
+
+def lm_batches(
+    key: jax.Array, tokens: jax.Array, batch: int, seq_len: int
+) -> jax.Array:
+    """Sample (batch, seq_len+1) windows from a token stream (for the LLM
+    federated fine-tuning example)."""
+    n = tokens.shape[0] - seq_len - 1
+    starts = jax.random.randint(key, (batch,), 0, jnp.maximum(n, 1))
+    idx = starts[:, None] + jnp.arange(seq_len + 1)[None, :]
+    return tokens[idx]

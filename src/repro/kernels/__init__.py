@@ -1,0 +1,2 @@
+# Pallas TPU kernels for the compute hot-spots (update compression and the
+# long-context sliding-window decode attention) + jnp oracles in ref.py.

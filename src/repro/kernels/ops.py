@@ -1,0 +1,135 @@
+"""Public jitted wrappers around the Pallas kernels.
+
+These own layout: flat update vectors are zero-padded to a whole number of
+(BLOCK_ROWS x BLOCK_LANES) tiles and reshaped for the kernels; outputs are
+un-padded back.  ``use_pallas=False`` routes to the pure-jnp oracle (the
+default on the CPU dry-run path, so lowered HLO stays clean for roofline
+analysis); ``use_pallas=True`` with ``interpret=True`` exercises the kernel
+body on CPU, and on a real TPU ``interpret=False`` compiles it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quant8 as _q8
+from repro.kernels import ref as _ref
+from repro.kernels import topk_ef as _tk
+from repro.kernels import swa_attention as _swa
+
+BLOCK_ELEMS = _tk.BLOCK_ELEMS
+
+
+def _pad_blocks(x: jax.Array) -> tuple[jax.Array, int]:
+    """Zero-pad flat (n,) to (nb, ROWS, LANES); return original length."""
+    n = x.shape[0]
+    nb = max(1, -(-n // BLOCK_ELEMS))
+    padded = jnp.zeros((nb * BLOCK_ELEMS,), x.dtype).at[:n].set(x)
+    return padded.reshape(nb, _tk.BLOCK_ROWS, _tk.BLOCK_LANES), n
+
+
+def _unpad(x: jax.Array, n: int) -> jax.Array:
+    return x.reshape(-1)[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_frac", "use_pallas", "interpret")
+)
+def topk_ef(
+    delta: jax.Array,
+    err: jax.Array,
+    k_frac: float,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Blockwise EF Top-K on a flat vector.  Keeps ~k_frac of each block."""
+    blocks, n = _pad_blocks(delta)
+    err_blocks, _ = _pad_blocks(err)
+    k = max(1, int(round(k_frac * BLOCK_ELEMS)))
+    if use_pallas:
+        sparse, new_err = _tk.topk_ef_blocks(blocks, err_blocks, k, interpret)
+    else:
+        flat = blocks.reshape(blocks.shape[0], -1)
+        eflat = err_blocks.reshape(blocks.shape[0], -1)
+        sparse, new_err = _ref.blockwise_topk_ef_ref(flat, eflat, k)
+    return _unpad(sparse, n), _unpad(new_err, n)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quant8(
+    x: jax.Array, use_pallas: bool = False, interpret: bool = True
+) -> tuple[jax.Array, jax.Array, int]:
+    """Blockwise int8 quantise a flat vector -> (q blocks, scales, n)."""
+    blocks, n = _pad_blocks(x)
+    if use_pallas:
+        q, scale = _q8.quant8_blocks(blocks, interpret)
+        scale = scale.reshape(-1, 1)
+        q = q.reshape(q.shape[0], -1)
+    else:
+        q, scale = _ref.quant8_ref(blocks.reshape(blocks.shape[0], -1))
+    return q, scale, n
+
+
+@jax.jit
+def dequant8(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`quant8`; returns the flat (n,) vector."""
+    return _ref.dequant8_ref(q, scale).reshape(-1)[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_frac", "use_pallas", "interpret")
+)
+def compress(
+    delta: jax.Array,
+    err: jax.Array,
+    k_frac: float,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused EF + blockwise Top-K + int8 for a flat update vector.
+
+    Returns (recon, new_err, payload_bits) where ``recon`` is the
+    dequantised sparse update the receiver reconstructs (same length as
+    ``delta``) and ``payload_bits`` is the acoustic payload size per the
+    paper's accounting (Eq. 31): kept coords * (8 + ceil(log2 d)) bits.
+    """
+    blocks, n = _pad_blocks(delta)
+    err_blocks, _ = _pad_blocks(err)
+    k = max(1, int(round(k_frac * BLOCK_ELEMS)))
+    if use_pallas:
+        q, scale, new_err = _q8.compress_blocks(blocks, err_blocks, k, interpret)
+        qf = q.reshape(q.shape[0], -1)
+        scale = scale.reshape(-1, 1)
+    else:
+        qf, scale, new_err = _ref.compress_ref(
+            blocks.reshape(blocks.shape[0], -1),
+            err_blocks.reshape(blocks.shape[0], -1),
+            k,
+        )
+    recon = _ref.dequant8_ref(qf, scale)
+    nnz = jnp.sum(qf != 0)
+    d = jnp.maximum(n, 2)
+    b_idx = jnp.ceil(jnp.log2(d.astype(jnp.float32)))
+    payload_bits = nnz.astype(jnp.float32) * (8.0 + b_idx)
+    return _unpad(recon, n), _unpad(new_err, n), payload_bits
+
+
+def swa_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    window: int,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-token sliding-window GQA attention (see swa_attention.py)."""
+    if use_pallas:
+        return _swa.swa_decode_attention(
+            q, k_cache, v_cache, cache_len, window, interpret
+        )
+    return _ref.sliding_window_decode_attention_ref(
+        q, k_cache, v_cache, cache_len, window
+    )

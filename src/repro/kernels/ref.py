@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *semantics* the kernels must match bit-for-bit (or to
+float tolerance where reductions reorder).  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle.
+
+Semantics notes
+---------------
+Block Top-K uses *threshold-by-bisection* selection: a per-block magnitude
+threshold t is refined for a fixed number of iterations so that the number
+of entries with |x| > t is as large as possible while <= k.  This is the
+TPU-native replacement for CUDA radix-select (see DESIGN.md §4); the oracle
+implements the identical iteration so kernel and oracle agree exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BISECT_ITERS = 32
+
+
+def bisect_threshold(absx: jax.Array, k: int, iters: int = BISECT_ITERS) -> jax.Array:
+    """Magnitude threshold t with |{i : absx_i > t}| <= k, maximal keep.
+
+    ``absx``: (..., block) non-negative.  Returns (..., 1) threshold.
+    Invariant maintained: count(> hi) <= k <= count(> lo)  (lo starts at -1
+    so every entry passes; hi starts at max so none does).
+    """
+    lo = jnp.full(absx.shape[:-1] + (1,), -1.0, absx.dtype)
+    hi = jnp.max(absx, axis=-1, keepdims=True)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(absx > mid, axis=-1, keepdims=True)
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi
+
+
+def blockwise_topk_ef_ref(
+    delta: jax.Array, err: jax.Array, k_per_block: int
+) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback block Top-K (paper Eq. 30, blockwise TPU variant).
+
+    Inputs are (nb, block).  Returns (sparse, new_err) with
+    sparse + new_err == delta + err exactly (mask decomposition).
+    """
+    v = delta + err
+    absv = jnp.abs(v)
+    t = bisect_threshold(absv, k_per_block)
+    mask = absv > t
+    sparse = jnp.where(mask, v, 0.0)
+    return sparse, v - sparse
+
+
+def quant8_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantisation.
+
+    x: (nb, block) -> (q int8 (nb, block), scale f32 (nb, 1));
+    scale = max|x| / 127, q = round(x / scale).  All-zero blocks get
+    scale 0 and q 0.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    q = jnp.where(scale > 0, q, jnp.zeros_like(q))
+    return q, scale
+
+
+def dequant8_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quant8_ref` (lossy)."""
+    return q.astype(jnp.float32) * scale
+
+
+def compress_ref(
+    delta: jax.Array, err: jax.Array, k_per_block: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused EF Top-K + int8 quantisation (the full paper pipeline, Sec. V-C).
+
+    Returns (q int8, scale, new_err).  The error buffer absorbs *both* the
+    sparsification residual and the quantisation residual, so no update
+    information is permanently lost:
+        dequant(q, scale) + new_err == delta + err   (up to f32 rounding)
+    """
+    v = delta + err
+    absv = jnp.abs(v)
+    t = bisect_threshold(absv, k_per_block)
+    mask = absv > t
+    sparse = jnp.where(mask, v, 0.0)
+    q, scale = quant8_ref(sparse)
+    recon = dequant8_ref(q, scale)
+    return q, scale, v - recon
+
+
+def sliding_window_decode_attention_ref(
+    q: jax.Array,          # (Hq, d)
+    k_cache: jax.Array,    # (S, Hkv, d)
+    v_cache: jax.Array,    # (S, Hkv, d)
+    cache_len: jax.Array,  # scalar int — number of valid cache entries
+    window: int,           # attend to the last `window` positions
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token GQA decode attention over a sliding window. Returns (Hq, d)."""
+    hq, d = q.shape
+    s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qg = q.reshape(hkv, g, d).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    scores = jnp.einsum("hgd,shd->hgs", qg, kf) * scale     # (hkv, g, s)
+    pos = jnp.arange(s)
+    valid = (pos < cache_len) & (pos >= cache_len - window)
+    scores = jnp.where(valid[None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hgs,shd->hgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(hq, d).astype(q.dtype)

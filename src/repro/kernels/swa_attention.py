@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: sliding-window flash-style decode attention.
+
+Serves the `long_500k` decode path: ONE query token attends to the last
+``window`` positions of a KV cache of length up to 524 288.  The kernel
+streams KV blocks HBM->VMEM with an online-softmax accumulator so the full
+(1 x S) score row never materialises — VMEM holds one (BLOCK_S, Hkv, d) KV
+tile plus the (Hq, d) accumulator.
+
+GQA layout: q is (Hkv, G, d); each grid step computes scores for one KV
+tile against all query groups.  Grid is 1-D over KV tiles; running max /
+denominator / weighted accumulator persist in VMEM scratch across steps
+(the standard flash-decoding recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_S = 512
+
+NEG_INF = -1e30
+
+
+def _swa_decode_kernel(
+    cache_len_ref,  # (1,) int32 — replicated to every grid step
+    q_ref,          # (hkv, g, d)
+    k_ref,          # (BLOCK_S, hkv, d)
+    v_ref,          # (BLOCK_S, hkv, d)
+    out_ref,        # (hkv, g, d)
+    m_ref,          # scratch (hkv, g)   running max
+    l_ref,          # scratch (hkv, g)   running denominator
+    acc_ref,        # scratch (hkv, g, d) running weighted sum
+    *,
+    window: int,
+    scale: float,
+):
+    step = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # (hkv, g, d)
+    k = k_ref[...].astype(jnp.float32)                  # (bs, hkv, d)
+    scores = jnp.einsum(
+        "hgd,shd->hgs", q, k, preferred_element_type=jnp.float32
+    )                                                   # (hkv, g, bs)
+
+    cache_len = cache_len_ref[0]
+    pos = step * BLOCK_S + jax.lax.iota(jnp.int32, BLOCK_S)
+    valid = (pos < cache_len) & (pos >= cache_len - window)
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    # If every position so far is masked, m stays NEG_INF; clamp the exp
+    # arguments so the arithmetic remains finite until real scores arrive.
+    alpha = jnp.exp(jnp.clip(m_prev - m_new, -80.0, 0.0))
+    p = jnp.exp(jnp.clip(scores - m_new[..., None], -80.0, 0.0))
+    p = jnp.where(valid[None, None, :], p, 0.0)
+
+    v = v_ref[...].astype(jnp.float32)                  # (bs, hkv, d)
+    pv = jnp.einsum("hgs,shd->hgd", p, v, preferred_element_type=jnp.float32)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(step == nsteps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        out_ref[...] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def swa_decode_attention(
+    q: jax.Array,           # (hq, d)
+    k_cache: jax.Array,     # (s, hkv, d)
+    v_cache: jax.Array,     # (s, hkv, d)
+    cache_len: jax.Array,   # scalar int32
+    window: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-token sliding-window GQA attention; returns (hq, d)."""
+    s, hkv, d = k_cache.shape
+    hq = q.shape[0]
+    g = hq // hkv
+    assert hq == g * hkv, (hq, hkv)
+    assert s % BLOCK_S == 0, s
+    qg = q.reshape(hkv, g, d)
+    scale = d ** -0.5
+    cache_len = jnp.reshape(cache_len, (1,)).astype(jnp.int32)
+
+    kv_spec = pl.BlockSpec((BLOCK_S, hkv, d), lambda i: (i, 0, 0))
+    rep_q = pl.BlockSpec((hkv, g, d), lambda i: (0, 0, 0))
+    out_spec = pl.BlockSpec((hkv, g, d), lambda i: (0, 0, 0))
+    len_spec = pl.BlockSpec((1,), lambda i: (0,))
+
+    out = pl.pallas_call(
+        functools.partial(_swa_decode_kernel, window=window, scale=scale),
+        grid=(s // BLOCK_S,),
+        in_specs=[len_spec, rep_q, kv_spec, kv_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g), jnp.float32),
+            pltpu.VMEM((hkv, g), jnp.float32),
+            pltpu.VMEM((hkv, g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, qg, k_cache, v_cache)
+    return out.reshape(hq, d)

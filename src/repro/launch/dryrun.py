@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry run: lower + compile every (architecture x input shape)
+against the production mesh, with no device allocation (ShapeDtypeStruct
+stand-ins), and dump memory/cost/collective analysis for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                     # noqa: E402
+from repro.configs.base import SHAPES         # noqa: E402
+from repro.launch import sharding as shlib    # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api                  # noqa: E402
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64)\[([\d,]*)\]")
+
+_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "f32": 4, "s32": 4,
+    "u32": 4, "f64": 8, "s64": 8,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Uses the *result* shape of each collective instruction line (the data
+    that actually crosses links, up to the usual 2(n-1)/n ring factor which
+    the roofline treats as 1 — conservative and mesh-size independent).
+    """
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    out["count"] = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # HLO lines look like: `%x = bf16[..] all-gather(...)` — take ops only.
+        m = re.match(r"%?[\w.\-]+ = (.+?) ([a-z\-]+)\(", s)
+        if not m:
+            continue
+        opname = m.group(2)
+        if opname in COLLECTIVE_OPS:
+            out[opname] += _shape_bytes(m.group(1))
+            out["count"] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+def _lower_one(cfg, shape, mesh):
+    """Lower + compile one (config, shape) on ``mesh``; returns compiled."""
+    params_abs = api.abstract_params(cfg)
+    params_sh = shlib.tree_shardings(params_abs, api.param_axes(cfg), mesh)
+    specs = api.input_specs(cfg, shape)
+    specs_sh = shlib.batch_shardings(specs, mesh)
+    long_ctx = shape.name == "long_500k"
+
+    # set_mesh (not the legacy `with mesh:`) so the ambient abstract mesh
+    # is visible to in-model activation sharding hints (layers.shard_hint).
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            fn = api.make_train_step(cfg)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(params_sh, specs_sh),
+                out_shardings=(params_sh, None),
+                donate_argnums=(0,),
+            ).lower(params_abs, specs)
+        elif shape.kind == "prefill":
+            fn = api.make_prefill_step(cfg)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(params_sh, specs_sh),
+            ).lower(params_abs, specs)
+        else:  # decode
+            fn = api.make_serve_step(cfg, long_context=long_ctx)
+            cache_abs = api.abstract_cache(
+                cfg, shape.global_batch, shape.seq_len, long_ctx
+            )
+            cache_ax = api.module(cfg).cache_axes(cfg) if hasattr(
+                api.module(cfg), "cache_axes"
+            ) else None
+            if cache_ax is not None:
+                cache_sh = shlib.tree_shardings(cache_abs, cache_ax, mesh)
+            else:
+                cache_sh = jax.tree_util.tree_map(
+                    lambda leaf: shlib.NamedSharding(
+                        mesh,
+                        shlib.resolve_spec(
+                            _default_cache_logical(leaf), leaf.shape, mesh
+                        ),
+                    ),
+                    cache_abs,
+                )
+            lowered = jax.jit(
+                fn,
+                in_shardings=(params_sh, cache_sh, specs_sh["tokens"]),
+                out_shardings=((cache_sh, None)),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, specs["tokens"])
+
+        compiled = lowered.compile()
+    return compiled
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = api.supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    compiled = _lower_one(cfg.replace(scan_unroll=1), shape, mesh)
+    compile_s = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_stats = {"error": str(e)}
+    coll = collective_bytes(compiled.as_text())
+
+    # --- while-body correction -------------------------------------------
+    # XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    # count, so rolled layer stacks under-report FLOPs/bytes/collective
+    # traffic by ~n_layers x.  Recover the per-layer cost from a second
+    # lowering with the scan body unrolled 2x and extrapolate linearly:
+    #   corrected = c1 + (L - 1) * max(c2 - c1, 0).
+    # (Python-looped stacks — recurrentgemma — give c2 == c1 and stay put.)
+    L = cfg.n_layers
+    corr = {}
+    try:
+        compiled2 = _lower_one(cfg.replace(scan_unroll=2), shape, mesh)
+        cost2 = compiled2.cost_analysis() or {}
+        coll2 = collective_bytes(compiled2.as_text())
+
+        def extrap(c1, c2):
+            return c1 + (L - 1) * max(c2 - c1, 0.0)
+
+        corr = {
+            "flops": extrap(cost.get("flops", 0.0), cost2.get("flops", 0.0)),
+            "bytes_accessed": extrap(
+                cost.get("bytes accessed", 0.0),
+                cost2.get("bytes accessed", 0.0),
+            ),
+            "collective_total": extrap(coll["total"], coll2["total"]),
+            "per_layer_flops": max(
+                cost2.get("flops", 0.0) - cost.get("flops", 0.0), 0.0
+            ),
+        }
+    except Exception as e:  # fall back to raw numbers
+        corr = {"error": str(e)}
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.shape.values()),
+        "axes": list(mesh.axis_names),
+        "chips": n_chips,
+        "status": "ok",
+        "kind": shape.kind,
+        "compile_s": round(compile_s, 1),
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "collectives": coll,
+        "corrected": corr,
+        "memory": mem_stats,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return result
+
+
+def _default_cache_logical(leaf):
+    nd = len(leaf.shape)
+    if nd >= 4:
+        return ("layers", "batch", "cache_seq", "kv_heads", "head_dim")[:nd]
+    if nd == 2:
+        return ("layers", "batch")
+    return (None,) * nd
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    archs = configs.model_archs() if (args.all or not args.arch) else [
+        configs.canonical(args.arch)
+    ]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+
+    n_fail = 0
+    for a, s in combos:
+        tag = "multipod" if args.multi_pod else "pod"
+        try:
+            res = dryrun_one(a, s, multi_pod=args.multi_pod)
+        except Exception as e:
+            res = {"arch": a, "shape": s, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            n_fail += 1
+        path = os.path.join(args.out, f"{a}__{s}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            extra = (
+                f"flops={res['flops']:.3e} "
+                f"coll={res['collectives']['total']:.3e}B "
+                f"compile={res['compile_s']}s"
+            )
+        elif status == "error":
+            extra = res["error"][:160]
+        else:
+            extra = res.get("reason", "")[:80]
+        print(f"[{status:7s}] {a:18s} x {s:12s} {extra}", flush=True)
+
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+"""Shared federated-experiment runner (one call = one paper table cell).
+
+Every benchmark module and the training launcher funnel through
+:func:`run_method`, so the evaluation protocol (train -> calibrate on
+normal-only validation -> score test -> F1 / PA-F1, plus the per-round
+energy/participation traces) is identical everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import anomaly, cooperation as coop, flat_fl, hfl
+from repro.core import topology as topo
+from repro.data.synthetic import SensorDataset
+from repro.models import autoencoder as ae
+
+METHODS = (
+    "centralised",
+    "fedavg",
+    "fedprox",
+    "fedadam",
+    "scaffold",
+    "hfl-nocoop",
+    "hfl-selective",
+    "hfl-nearest",
+    "hfl-adam",
+)
+
+_RULES = {
+    "hfl-nocoop": coop.CoopRule.NOCOOP,
+    "hfl-selective": coop.CoopRule.SELECTIVE,
+    "hfl-nearest": coop.CoopRule.NEAREST,
+    "hfl-adam": coop.CoopRule.SELECTIVE,   # FedAdam server + selective coop
+}
+
+# FedProx proximal coefficient (paper uses mu ~ 0.01 scale defaults).
+PROX_MU = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentResult:
+    method: str
+    f1: float
+    precision: float
+    recall: float
+    participation: float       # mean over rounds
+    e_total: float             # sum over rounds (J)
+    e_s2f: float
+    e_f2f: float
+    e_f2g: float
+    losses: tuple[float, ...]  # per-round mean training loss
+    coop_links: float          # mean active fog-to-fog exchanges per round
+
+
+def _detector_eval(
+    params: Any, ds: SensorDataset, percentile: float, point_adjusted: bool
+) -> anomaly.F1Result:
+    """Paper protocol with the GLOBAL threshold variant (Sec. V-D)."""
+    d = ds.val.shape[-1]
+    val = ds.val.reshape(-1, d)
+    test = ds.test.reshape(-1, d)
+    label = ds.test_label.reshape(-1)
+    return anomaly.evaluate_detector(
+        lambda p, x: ae.apply(p, x),
+        params,
+        val,
+        test,
+        label,
+        percentile=percentile,
+        point_adjusted=point_adjusted,
+    )
+
+
+def run_method(
+    method: str,
+    ds: SensorDataset,
+    cfg: hfl.HFLConfig,
+    seed: int = 0,
+    percentile: float = 99.0,
+    point_adjusted: bool = False,
+    hidden: tuple[int, ...] = (16, 8, 16),
+) -> ExperimentResult:
+    """Train ``method`` on ``ds`` and evaluate the paper's metrics."""
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+    key = jax.random.key(seed)
+    k_init, k_train = jax.random.split(key)
+    dim = ds.train.shape[-1]
+    params0 = ae.init(k_init, dim, hidden)
+
+    zeros = dict.fromkeys(
+        ("e_s2f", "e_f2f", "e_f2g", "participation", "coop_links"), 0.0
+    )
+    if method == "centralised":
+        params, losses, e_up = flat_fl.train_centralised(
+            k_train, params0, ae.loss, ds, cfg
+        )
+        # Oracle sees everything by construction.
+        metrics = dict(zeros, e_total=float(e_up), participation=1.0)
+        loss_trace = tuple(float(x) for x in losses)
+    else:
+        if method in ("fedavg", "fedprox", "fedadam"):
+            run_cfg = cfg.replace(
+                prox_mu=PROX_MU if method == "fedprox" else 0.0,
+                server_opt="adam" if method == "fedadam" else cfg.server_opt,
+            )
+            params, m = flat_fl.train_flat(k_train, params0, ae.loss, ds, run_cfg)
+        elif method == "scaffold":
+            params, m = flat_fl.train_scaffold(k_train, params0, ae.loss, ds, cfg)
+        else:
+            run_cfg = cfg.replace(
+                rule=_RULES[method],
+                prox_mu=0.0,
+                server_opt="adam" if method == "hfl-adam" else cfg.server_opt,
+            )
+            params, m = hfl.train(k_train, params0, ae.loss, ds, run_cfg)
+        metrics = {
+            "e_total": float(jnp.sum(m.e_total)),
+            "e_s2f": float(jnp.sum(m.e_s2f)),
+            "e_f2f": float(jnp.sum(m.e_f2f)),
+            "e_f2g": float(jnp.sum(m.e_f2g)),
+            "participation": float(jnp.mean(m.participation)),
+            "coop_links": float(jnp.mean(m.coop_links)),
+        }
+        loss_trace = tuple(float(x) for x in m.loss)
+
+    f1 = _detector_eval(params, ds, percentile, point_adjusted)
+    return ExperimentResult(
+        method=method,
+        f1=float(f1.f1),
+        precision=float(f1.precision),
+        recall=float(f1.recall),
+        losses=loss_trace,
+        **{k: metrics.get(k, 0.0) for k in (
+            "participation", "e_total", "e_s2f", "e_f2f", "e_f2g", "coop_links"
+        )},
+    )
+
+
+def audit_method(
+    method: str,
+    cfg: hfl.HFLConfig,
+    d: int = 1352,
+    seed: int = 0,
+) -> dict:
+    """Replay Algorithm 1's decision + energy accounting WITHOUT training.
+
+    Per-round communication energy in the simulator depends only on the
+    topology, association/cooperation decisions, and payload sizes — not on
+    model values — so the paper's *energy and participation* tables can be
+    reproduced at full scale (N=200, T=20) cheaply.  F1 columns still come
+    from :func:`run_method` at whatever scale the budget allows.
+    """
+    from repro.core import association as assoc
+    from repro.core import channel as chm
+    from repro.core import compression as comp
+    from repro.core import cooperation as coop_m
+    from repro.core import energy as en
+    from repro.core import topology as topo_m
+
+    if method in ("fedavg", "fedprox", "fedadam", "scaffold"):
+        kind = "flat"
+    elif method in _RULES:
+        kind = "hfl"
+    else:
+        raise ValueError(f"audit unsupported for {method!r}")
+
+    key = jax.random.key(seed)
+    dep0 = topo_m.sample_deployment(key, cfg.deployment)
+    l_u = comp.payload_bits(d, cfg.compressor)
+    l_full = 32.0 * d
+
+    def round_fn(carry, k):
+        dep = carry
+        dep = topo_m.gauss_markov_step(k, dep, cfg.deployment) if cfg.fog_mobility else dep
+        if kind == "flat":
+            fa = assoc.flat_association(dep, cfg.channel)
+            e_up = en.tx_energy_j(l_u, fa.dist_m, cfg.channel, cfg.energy)
+            e_s2f = jnp.sum(jnp.where(fa.participates, e_up, 0.0))
+            out = dict(
+                e_s2f=e_s2f, e_f2f=jnp.zeros(()), e_f2g=jnp.zeros(()),
+                participation=jnp.mean(fa.participates.astype(jnp.float32)),
+                coop_links=jnp.zeros(()),
+            )
+        else:
+            fa = assoc.nearest_feasible_fog(dep, cfg.channel)
+            decision = coop_m.decide(
+                _RULES[method], dep.fog_pos, fa.cluster_size, cfg.channel
+            )
+            e_up = en.tx_energy_j(l_u, fa.dist_m, cfg.channel, cfg.energy)
+            e_s2f = jnp.sum(jnp.where(fa.participates, e_up, 0.0))
+            fog_active = fa.cluster_size > 0
+            e_ff = en.tx_energy_j(
+                l_full, decision.dist_m, cfg.channel, cfg.energy
+            )
+            e_f2f = jnp.sum(
+                jnp.where(decision.cooperates & fog_active, e_ff, 0.0)
+            )
+            e_fg = en.tx_energy_j(
+                l_full, fa.fog_gateway_dist_m, cfg.channel, cfg.energy
+            )
+            e_f2g = jnp.sum(
+                jnp.where(fog_active & fa.fog_gateway_feasible, e_fg, 0.0)
+            )
+            out = dict(
+                e_s2f=e_s2f, e_f2f=e_f2f, e_f2g=e_f2g,
+                participation=jnp.mean(fa.participates.astype(jnp.float32)),
+                coop_links=jnp.sum(decision.cooperates.astype(jnp.float32)),
+            )
+        return dep, out
+
+    keys = jax.random.split(jax.random.fold_in(key, 1), cfg.rounds)
+    _, m = jax.lax.scan(jax.jit(round_fn), dep0, keys)
+    total = {k: float(jnp.sum(v)) for k, v in m.items() if k.startswith("e_")}
+    total["e_total"] = total["e_s2f"] + total["e_f2f"] + total["e_f2g"]
+    total["participation"] = float(jnp.mean(m["participation"]))
+    total["coop_links"] = float(jnp.mean(m["coop_links"]))
+    total["method"] = method
+    return total
+
+
+def make_config(
+    n_sensors: int,
+    n_fog: int,
+    rounds: int,
+    **overrides: Any,
+) -> hfl.HFLConfig:
+    """Paper Table II defaults with per-experiment overrides."""
+    dep = topo.DeploymentParams(n_sensors=n_sensors, n_fog=n_fog)
+    return hfl.HFLConfig(deployment=dep, rounds=rounds).replace(**overrides)
+
+
+def seed_sweep(
+    method: str,
+    ds_fn,
+    cfg: hfl.HFLConfig,
+    seeds: tuple[int, ...] = (0, 1, 2),
+    **kw: Any,
+) -> tuple[ExperimentResult, ...]:
+    """Run ``method`` over seeds; ``ds_fn(seed) -> SensorDataset``."""
+    return tuple(
+        run_method(method, ds_fn(s), cfg, seed=s, **kw) for s in seeds
+    )
+
+
+def mean_std(values: list[float]) -> tuple[float, float]:
+    arr = jnp.asarray(values)
+    return float(jnp.mean(arr)), float(jnp.std(arr))

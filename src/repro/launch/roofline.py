@@ -1,0 +1,132 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by launch/dryrun.py) and derives
+the three roofline terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs      / (chips * PEAK_FLOPS_BF16)
+    memory     = HLO_bytes      / (chips * HBM_BW)
+    collective = coll_bytes     / (chips * ICI_BW)
+
+plus MODEL_FLOPS = 6*N*D (dense; N_active for MoE) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs.  Dominant term = the bottleneck the perf
+loop iterates on.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any
+
+from repro import configs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6 * N_active * D for train (fwd+bwd); 2 * N_active * D for fwd-only."""
+    cfg = configs.get(arch)
+    shape = configs.SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyse(rec: dict[str, Any]) -> dict[str, Any] | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    # Prefer the while-body-corrected totals (see launch/dryrun.py): raw
+    # cost_analysis counts rolled layer scans once.
+    corr = rec.get("corrected") or {}
+    flops = corr.get("flops", rec["flops"])
+    nbytes = corr.get("bytes_accessed", rec["bytes_accessed"])
+    coll_total = corr.get("collective_total", rec["collectives"]["total"])
+    # cost_analysis() of the SPMD-partitioned module reports PER-DEVICE
+    # work (per-device op shapes), so the roofline terms divide by the
+    # per-chip peaks directly — NOT by chips again.
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = nbytes / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "x".join(str(x) for x in rec["mesh"]),
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "model_flops": mf,
+        "hlo_flops": flops,
+        # per-device share of MODEL_FLOPS vs per-device compiled FLOPs.
+        "useful_ratio": (mf / chips) / flops if flops else 0.0,
+        "coll_bytes": coll_total,
+        "peak_bytes_per_chip": (rec.get("memory") or {}).get("peak_bytes"),
+    }
+
+
+def load_all(directory: str, tag: str = "pod") -> list[dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, f"*__{tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyse(rec)
+        if row is not None:
+            rows.append(row)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.1f}us"
+
+
+def table(rows: list[dict[str, Any]]) -> str:
+    hdr = (
+        f"{'arch':18s} {'shape':12s} {'mesh':8s} "
+        f"{'compute':>9s} {'memory':>9s} {'collective':>10s} "
+        f"{'dominant':>10s} {'useful':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{fmt_s(r['t_compute_s']):>9s} {fmt_s(r['t_memory_s']):>9s} "
+            f"{fmt_s(r['t_collective_s']):>10s} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:6.1%}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="pod")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    rows = load_all(args.dir, args.tag)
+    print(table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

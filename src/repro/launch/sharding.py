@@ -1,0 +1,135 @@
+"""Logical-axis -> mesh-axis resolution (MaxText-style rules with
+divisibility fallback).
+
+Each model exposes an ``axes(cfg)`` pytree whose leaves are tuples of
+logical dimension names (or None for replicated leaves).  This module maps
+them onto the physical mesh:
+
+  model axis  <- first divisible logical dim in MODEL_PRIORITY
+  data axis   <- "batch" when divisible (jointly with "pod" on multi-pod
+                 meshes), else "embed" (FSDP), else "cache_seq"
+  pod axis    <- only ever combined with "batch": parameters stay
+                 replicated across pods (pure DP over the pod axis — the
+                 fog-cluster analogue, DESIGN.md §3)
+
+A dim never gets an axis it is not divisible by; a mesh axis is used at
+most once per tensor.  The fallback chain is what lets every assigned
+architecture (40 q-heads, 8 kv-heads, 60 experts, ...) lower on the same
+16x16 mesh.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Order matters: prefer the big compute dims, fall back to head_dim.
+# "seq_shard" is an ACTIVATION-only logical name (sequence-parallel
+# attention for indivisible head counts — layers.shard_hint callers).
+MODEL_PRIORITY = (
+    "ff",
+    "vocab",
+    "heads",
+    "kv_heads",
+    "inner",
+    "inner_proj",
+    "inner_conv",
+    "ssm_heads",
+    "experts",
+    "head_dim",
+    "seq_shard",
+)
+
+DATA_PRIORITY = ("batch", "embed", "cache_seq", "tokens")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def resolve_spec(
+    logical: tuple[str | None, ...] | None,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+) -> P:
+    """Resolve one leaf's logical axes to a PartitionSpec."""
+    if logical is None:
+        return P()
+    assert len(logical) == len(shape), (logical, shape)
+    assignment: list[Any] = [None] * len(shape)
+
+    has_pod = "pod" in mesh.axis_names
+    model_n = _axis_size(mesh, "model")
+    data_n = _axis_size(mesh, "data")
+    pod_n = _axis_size(mesh, "pod") if has_pod else 1
+
+    # --- model axis ---
+    for name in MODEL_PRIORITY:
+        placed = False
+        for i, ax in enumerate(logical):
+            if ax == name and shape[i] % model_n == 0 and shape[i] > 0:
+                assignment[i] = "model"
+                placed = True
+                break
+        if placed:
+            break
+
+    # --- data (+pod) axis ---
+    for name in DATA_PRIORITY:
+        placed = False
+        for i, ax in enumerate(logical):
+            if ax != name or assignment[i] is not None or shape[i] == 0:
+                continue
+            if name == "batch" and has_pod and shape[i] % (pod_n * data_n) == 0:
+                assignment[i] = ("pod", "data")
+                placed = True
+            elif shape[i] % data_n == 0:
+                assignment[i] = "data"
+                placed = True
+            if placed:
+                break
+        if placed:
+            break
+
+    return P(*assignment)
+
+
+def tree_shardings(abstract: Any, axes_tree: Any, mesh: Mesh) -> Any:
+    """NamedSharding tree for an abstract (ShapeDtypeStruct) pytree.
+
+    ``axes_tree`` must be none-for-none structurally compatible: leaves of
+    ``abstract`` that are None in ``axes_tree`` are replicated.
+    """
+
+    def one(leaf, logical):
+        return NamedSharding(mesh, resolve_spec(logical, leaf.shape, mesh))
+
+    # axes_tree leaves are tuples (which jax would treat as pytrees), so
+    # walk `abstract`'s structure and look the logical tuple up positionally.
+    flat_abs, treedef = jax.tree_util.tree_flatten(abstract)
+    # Flatten axes_tree treating tuples-of-strings/None as leaves.
+    def is_leaf(x):
+        # Logical-axes tuples are leaves; bare None stays a (dropped) empty
+        # node, matching how None params vanish from `abstract`.
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+
+    flat_axes = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_leaf)[0]
+    # None-axes leaves pair with None abstract leaves and are dropped by
+    # tree_flatten of `abstract` too, so lengths must match.
+    assert len(flat_abs) == len(flat_axes), (
+        f"axes tree mismatch: {len(flat_abs)} params vs {len(flat_axes)} axes"
+    )
+    shardings = [one(a, x) for a, x in zip(flat_abs, flat_axes)]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def batch_shardings(specs: dict[str, jax.ShapeDtypeStruct], mesh: Mesh) -> dict:
+    """Input batches: shard the leading (batch) dim over (pod, data)."""
+    out = {}
+    for k, v in specs.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, resolve_spec(logical, v.shape, mesh))
+    return out

@@ -1,0 +1,1 @@
+from repro.models import autoencoder  # noqa: F401

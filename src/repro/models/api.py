@@ -1,0 +1,144 @@
+"""Unified model API over the architecture zoo.
+
+Every family exposes: init / axes / loss / decode_step / init_cache.  This
+module adds the train/serve step builders the launchers and the federated
+runtime consume, plus ShapeDtypeStruct input specs for the dry run (no
+device allocation ever happens for the full-size configs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, moe, rglru, ssm, transformer
+
+Params = Any
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": rglru,
+    "encdec": encdec,
+}
+
+
+def module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    return module(cfg).init(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(module(cfg).init, cfg=cfg), jax.random.PRNGKey(0)
+    )
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    return module(cfg).axes(cfg)
+
+
+def loss_fn(cfg: ModelConfig) -> Callable[[Params, dict], jax.Array]:
+    mod = module(cfg)
+    return lambda params, batch: mod.loss(params, batch, cfg)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Plain-SGD train step (the dry-run/production default; the federated
+    runtime wraps its own local-epoch solvers around `loss_fn`)."""
+    lfn = loss_fn(cfg)
+
+    def train_step(params: Params, batch: dict) -> tuple[Params, jax.Array]:
+        loss, grads = jax.value_and_grad(lfn)(params, batch)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p - cfg.learning_rate * g.astype(jnp.float32)).astype(
+                p.dtype
+            )
+            if p.dtype != jnp.int32
+            else p,
+            params,
+            grads,
+        )
+        return new_params, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward-only full-sequence step (prefill_32k): returns last hidden."""
+    mod = module(cfg)
+
+    def prefill_step(params: Params, batch: dict) -> jax.Array:
+        if cfg.family == "moe":
+            h, _ = mod.forward(params, batch, cfg)
+        else:
+            h = mod.forward(params, batch, cfg)
+        return h[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, long_context: bool = False):
+    mod = module(cfg)
+
+    def serve_step(params: Params, cache, tokens: jax.Array):
+        return mod.decode_step(params, cache, tokens, cfg,
+                               long_context=long_context)
+
+    return serve_step
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               long_context: bool = False):
+    return module(cfg).init_cache(cfg, batch, max_seq, long_context)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   long_context: bool = False):
+    return jax.eval_shape(
+        functools.partial(
+            module(cfg).init_cache, cfg, batch, max_seq, long_context
+        )
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    train/prefill: token batch (+ stubbed modality embeddings).
+    decode: ONE new token per sequence (the KV cache is a separate
+    argument; see launch/dryrun.py).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.family == "encdec":
+            specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_frames, cfg.d_model), cfg.dtype
+            )
+        if cfg.n_visual_tokens > 0:
+            specs["visual_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_visual_tokens, cfg.d_model), cfg.dtype
+            )
+        return specs
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), tok)}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable; reason recorded in DESIGN.md."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "full-attention architecture without a sub-quadratic variant; "
+            "long_500k decode skipped (DESIGN.md §5)"
+        )
+    return True, ""

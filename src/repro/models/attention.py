@@ -1,0 +1,203 @@
+"""Attention for the zoo: GQA with optional qk-norm, soft-capping, and
+sliding-window (local) masking; full-sequence (train/prefill) and
+single-token decode (KV cache) paths.
+
+Shapes follow the (batch, seq, heads, head_dim) convention.  KV caches are
+(batch, max_seq, kv_heads, head_dim) and are updated functionally.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.kernels import ops as kops
+
+NEG_INF = -2.3819763e38  # min bf16-representable-ish; standard mask value
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array        # (d_model, n_heads, head_dim)
+    wk: jax.Array        # (d_model, n_kv, head_dim)
+    wv: jax.Array        # (d_model, n_kv, head_dim)
+    wo: jax.Array        # (n_heads, head_dim, d_model)
+    q_norm: jax.Array | None    # (head_dim,) qk-norm scales (qwen3)
+    k_norm: jax.Array | None
+
+
+def init(
+    key: jax.Array,
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    qk_norm: bool = False,
+    dtype=jnp.bfloat16,
+) -> AttnParams:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return AttnParams(
+        wq=L.dense_init(kq, (d_model, n_heads, head_dim), dtype),
+        wk=L.dense_init(kk, (d_model, n_kv, head_dim), dtype),
+        wv=L.dense_init(kv, (d_model, n_kv, head_dim), dtype),
+        wo=L.dense_init(ko, (n_heads, head_dim, d_model), dtype,
+                        scale=(n_heads * head_dim) ** -0.5),
+        q_norm=jnp.zeros((head_dim,), dtype) if qk_norm else None,
+        k_norm=jnp.zeros((head_dim,), dtype) if qk_norm else None,
+    )
+
+
+def axes(qk_norm: bool = False):
+    """Logical sharding axes matching AttnParams."""
+    return AttnParams(
+        wq=("embed", "heads", "head_dim"),
+        wk=("embed", "kv_heads", "head_dim"),
+        wv=("embed", "kv_heads", "head_dim"),
+        wo=("heads", "head_dim", "embed"),
+        q_norm=("head_dim",) if qk_norm else None,
+        k_norm=("head_dim",) if qk_norm else None,
+    )
+
+
+def _project_qkv(
+    p: AttnParams, x: jax.Array, positions: jax.Array,
+    rope_theta: float | None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if p.q_norm is not None:
+        q = L.rms_norm(q, p.q_norm)
+        k = L.rms_norm(k, p.k_norm)
+    if rope_theta is not None:  # None => absolute-position models (whisper)
+        q = L.apply_rope(q, positions, rope_theta)
+        k = L.apply_rope(k, positions, rope_theta)
+    # Anchor activation shardings AFTER rope: heads when divisible, else
+    # the QUERY-SEQUENCE dim (sequence-parallel attention: each device
+    # holds a q-block against the full batch-local K/V, so the quadratic
+    # scores tensor is 1/16 per device and stays local).  head_dim is
+    # deliberately NOT offered — see layers.shard_hint.  Without an
+    # anchor, the head_dim-sharded weight layout propagates through rope
+    # into the scores einsum, turning the contraction into partial sums +
+    # an all-reduce of the full (b, h, g, s, s) f32 scores (343 GB/layer
+    # at prefill_32k on qwen3-14b — EXPERIMENTS.md §Perf).
+    q = L.shard_hint(q, ("batch", "seq_shard", "heads", None))
+    k = L.shard_hint(k, ("batch", None, "kv_heads", None))
+    v = L.shard_hint(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def full_attention(
+    p: AttnParams,
+    x: jax.Array,                 # (b, s, d)
+    positions: jax.Array,         # (b, s)
+    window: jax.Array | int | None = None,   # sliding window (tokens) or None
+    attn_softcap: float | None = None,
+    rope_theta: float = 10000.0,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,  # enc-dec cross-attn
+    causal: bool = True,
+) -> jax.Array:
+    """Dense (possibly masked) attention for train/prefill."""
+    b, s, d = x.shape
+    if cross_kv is None:
+        q, k, v = _project_qkv(p, x, positions, rope_theta)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+        if p.q_norm is not None:
+            q = L.rms_norm(q, p.q_norm)
+        k, v = cross_kv
+    n_heads, head_dim = q.shape[-2], q.shape[-1]
+    n_kv = k.shape[-2]
+    g = n_heads // n_kv
+
+    qg = q.reshape(b, s, n_kv, g, head_dim)
+    scores = jnp.einsum(
+        "bqhgd,bthd->bhgqt", qg, k, preferred_element_type=jnp.float32
+    ) * (head_dim**-0.5)                          # (b, n_kv, g, s_q, s_k)
+    if attn_softcap is not None:
+        scores = L.softcap(scores, attn_softcap)
+
+    s_k = k.shape[1]
+    qpos = positions[:, :, None]                   # (b, s_q, 1)
+    kpos = jnp.arange(s_k)[None, None, :]          # (1, 1, s_k)
+    mask = jnp.ones((b, s, s_k), bool)
+    if causal and cross_kv is None:
+        mask &= kpos <= qpos
+    if window is not None and cross_kv is None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqt,bthk->bqhgk", probs, v)
+    out = out.reshape(b, s, n_heads, head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p.wo)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (b, max_seq, n_kv, head_dim)
+    v: jax.Array
+    length: jax.Array     # (b,) int32 — valid entries
+
+
+def init_cache(
+    batch: int, max_seq: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16
+) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_seq, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, max_seq, n_kv, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def decode_step(
+    p: AttnParams,
+    cache: KVCache,
+    x: jax.Array,                 # (b, 1, d) — the new token's activations
+    window: jax.Array | int | None = None,
+    attn_softcap: float | None = None,
+    rope_theta: float = 10000.0,
+    use_pallas_swa: bool = False,
+) -> tuple[KVCache, jax.Array]:
+    """One decode step: append to cache, attend, return (cache, out)."""
+    b = x.shape[0]
+    positions = cache.length[:, None]              # (b, 1)
+    q, k_new, v_new = _project_qkv(p, x, positions, rope_theta)
+
+    idx = cache.length                              # (b,)
+    k = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice(
+        c, kn, (i, 0, 0)))(cache.k, k_new, idx)
+    v = jax.vmap(lambda c, vn, i: jax.lax.dynamic_update_slice(
+        c, vn, (i, 0, 0)))(cache.v, v_new, idx)
+    new_len = cache.length + 1
+
+    max_seq = k.shape[1]
+    n_heads, head_dim = q.shape[-2], q.shape[-1]
+    n_kv = k.shape[-2]
+    g = n_heads // n_kv
+
+    if use_pallas_swa and window is not None:
+        out = jax.vmap(
+            lambda qq, kk, vv, ln: kops.swa_decode_attention(
+                qq.reshape(n_heads, head_dim), kk, vv, ln,
+                int(window), use_pallas=True,
+            )
+        )(q[:, 0], k, v, new_len)
+        out = out.reshape(b, 1, n_heads, head_dim)
+    else:
+        qg = q.reshape(b, 1, n_kv, g, head_dim)
+        scores = jnp.einsum(
+            "bqhgk,bthk->bhgqt", qg, k, preferred_element_type=jnp.float32
+        ) * (head_dim**-0.5)
+        if attn_softcap is not None:
+            scores = L.softcap(scores, attn_softcap)
+        kpos = jnp.arange(max_seq)[None, :]
+        valid = kpos < new_len[:, None]
+        if window is not None:
+            valid &= kpos >= (new_len[:, None] - window)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        out = jnp.einsum("bhgqt,bthk->bqhgk", probs, v)
+        out = out.reshape(b, 1, n_heads, head_dim)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p.wo)
+    return KVCache(k, v, new_len), y

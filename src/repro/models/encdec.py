@@ -1,0 +1,279 @@
+"""Whisper-style encoder-decoder transformer backbone (arXiv:2212.04356).
+
+Per the assignment, the mel-spectrogram + conv feature extractor is a STUB:
+``input_specs`` supplies precomputed frame embeddings (B, n_audio_frames,
+d_model).  We implement the transformer backbone faithfully: bidirectional
+encoder with sinusoidal positions, causal decoder with self- and
+cross-attention.  Deviation recorded in DESIGN.md: RoPE-free absolute
+positions use the sinusoidal table on both sides (whisper's decoder uses a
+learned table capped at 448 positions; the assigned decode shapes require
+32k-token caches, so a fixed sinusoidal table is the faithful-in-spirit
+choice that scales).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+class EncBlock(NamedTuple):
+    ln1: jax.Array
+    attn: attn.AttnParams
+    ln2: jax.Array
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+
+
+class DecBlock(NamedTuple):
+    ln1: jax.Array
+    self_attn: attn.AttnParams
+    ln_x: jax.Array
+    cross_attn: attn.AttnParams
+    ln2: jax.Array
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+
+
+class Params(NamedTuple):
+    enc_blocks: EncBlock          # stacked (n_enc_layers, ...)
+    enc_final: jax.Array
+    embed: jax.Array
+    dec_blocks: DecBlock          # stacked (n_layers, ...)
+    final_norm: jax.Array
+
+
+def _init_enc(key: jax.Array, cfg: ModelConfig) -> EncBlock:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, ff = cfg.d_model, cfg.d_ff
+    return EncBlock(
+        ln1=jnp.zeros((d,), cfg.dtype),
+        attn=attn.init(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       False, cfg.dtype),
+        ln2=jnp.zeros((d,), cfg.dtype),
+        w_gate=L.dense_init(k2, (d, ff), cfg.dtype),
+        w_up=L.dense_init(k3, (d, ff), cfg.dtype),
+        w_down=L.dense_init(k4, (ff, d), cfg.dtype),
+    )
+
+
+def _init_dec(key: jax.Array, cfg: ModelConfig) -> DecBlock:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, ff = cfg.d_model, cfg.d_ff
+    return DecBlock(
+        ln1=jnp.zeros((d,), cfg.dtype),
+        self_attn=attn.init(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                            False, cfg.dtype),
+        ln_x=jnp.zeros((d,), cfg.dtype),
+        cross_attn=attn.init(k2, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                             False, cfg.dtype),
+        ln2=jnp.zeros((d,), cfg.dtype),
+        w_gate=L.dense_init(k3, (d, ff), cfg.dtype),
+        w_up=L.dense_init(k4, (d, ff), cfg.dtype),
+        w_down=L.dense_init(k5, (ff, d), cfg.dtype),
+    )
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kb, kd = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: _init_enc(k, cfg))(
+        jax.random.split(kb, cfg.n_enc_layers)
+    )
+    dec = jax.vmap(lambda k: _init_dec(k, cfg))(
+        jax.random.split(kd, cfg.n_layers)
+    )
+    return Params(
+        enc_blocks=enc,
+        enc_final=jnp.zeros((cfg.d_model,), cfg.dtype),
+        embed=L.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        dec_blocks=dec,
+        final_norm=jnp.zeros((cfg.d_model,), cfg.dtype),
+    )
+
+
+def axes(cfg: ModelConfig) -> Params:
+    a = attn.AttnParams(
+        wq=("layers", "embed", "heads", "head_dim"),
+        wk=("layers", "embed", "kv_heads", "head_dim"),
+        wv=("layers", "embed", "kv_heads", "head_dim"),
+        wo=("layers", "heads", "head_dim", "embed"),
+        q_norm=None, k_norm=None,
+    )
+    return Params(
+        enc_blocks=EncBlock(
+            ln1=("layers", "embed"), attn=a, ln2=("layers", "embed"),
+            w_gate=("layers", "embed", "ff"), w_up=("layers", "embed", "ff"),
+            w_down=("layers", "ff", "embed"),
+        ),
+        enc_final=("embed",),
+        embed=("vocab", "embed"),
+        dec_blocks=DecBlock(
+            ln1=("layers", "embed"), self_attn=a, ln_x=("layers", "embed"),
+            cross_attn=a, ln2=("layers", "embed"),
+            w_gate=("layers", "embed", "ff"), w_up=("layers", "embed", "ff"),
+            w_down=("layers", "ff", "embed"),
+        ),
+        final_norm=("embed",),
+    )
+
+
+def encode(params: Params, audio_embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Bidirectional encoder over stubbed frame embeddings (b, t_a, d)."""
+    b, t_a, d = audio_embeds.shape
+    pos = L.sinusoidal_positions(t_a, d).astype(audio_embeds.dtype)
+    x = audio_embeds + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(t_a), (b, t_a))
+
+    def block(x, bp):
+        def fn(bp, x):
+            h = attn.full_attention(
+                bp.attn, L.rms_norm(x, bp.ln1), positions,
+                rope_theta=None, causal=False,
+            )
+            x = x + h
+            return x + L.swiglu(
+                L.rms_norm(x, bp.ln2), bp.w_gate, bp.w_up, bp.w_down,
+                act=jax.nn.gelu,
+            )
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return fn(bp, x), None
+
+    x, _ = jax.lax.scan(block, x, params.enc_blocks, unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params.enc_final)
+
+
+def _dec_block(cfg, bp, x, positions, enc_out):
+    h = attn.full_attention(
+        bp.self_attn, L.rms_norm(x, bp.ln1), positions, rope_theta=None
+    )
+    x = x + h
+    ekv_k = jnp.einsum("btd,dhk->bthk", enc_out, bp.cross_attn.wk)
+    ekv_v = jnp.einsum("btd,dhk->bthk", enc_out, bp.cross_attn.wv)
+    h = attn.full_attention(
+        bp.cross_attn, L.rms_norm(x, bp.ln_x), positions,
+        rope_theta=None, cross_kv=(ekv_k, ekv_v), causal=False,
+    )
+    x = x + h
+    return x + L.swiglu(
+        L.rms_norm(x, bp.ln2), bp.w_gate, bp.w_up, bp.w_down, act=jax.nn.gelu
+    )
+
+
+def forward(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    d = cfg.d_model
+    pos_tab = L.sinusoidal_positions(s, d).astype(cfg.dtype)
+    x = params.embed[tokens] + pos_tab[None]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def block(x, bp):
+        fn = _dec_block
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        return fn(cfg, bp, x, positions, enc_out), None
+
+    x, _ = jax.lax.scan(block, x, params.dec_blocks, unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params.final_norm)
+
+
+def loss(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    h = forward(params, batch, cfg)
+    b, s, d = h.shape
+    return L.chunked_cross_entropy(
+        h[:, :-1].reshape(-1, d),
+        params.embed.T,
+        batch["tokens"][:, 1:].reshape(-1),
+        jnp.ones((b * (s - 1),), jnp.float32),
+        n_chunks=cfg.loss_chunks,
+    )
+
+
+class DecodeCache(NamedTuple):
+    kv: attn.KVCache            # decoder self-attn cache, stacked (layers,)
+    cross_k: jax.Array          # (layers, b, t_a, kv, hd) — frozen
+    cross_v: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               long_context: bool = False) -> DecodeCache:
+    kv = attn.init_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
+    stack = lambda leaf: jnp.broadcast_to(leaf[None], (cfg.n_layers, *leaf.shape))
+    t_a = cfg.n_audio_frames
+    return DecodeCache(
+        kv=jax.tree_util.tree_map(stack, kv),
+        cross_k=jnp.zeros(
+            (cfg.n_layers, batch, t_a, cfg.n_kv_heads, cfg.head_dim), cfg.dtype
+        ),
+        cross_v=jnp.zeros(
+            (cfg.n_layers, batch, t_a, cfg.n_kv_heads, cfg.head_dim), cfg.dtype
+        ),
+    )
+
+
+def precompute_cross_kv(
+    params: Params, enc_out: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Cross-attention KV from encoder output, all layers at once."""
+    ck = jnp.einsum("btd,ldhk->lbthk", enc_out, params.dec_blocks.cross_attn.wk)
+    cv = jnp.einsum("btd,ldhk->lbthk", enc_out, params.dec_blocks.cross_attn.wv)
+    return ck, cv
+
+
+def decode_step(
+    params: Params,
+    cache: DecodeCache,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    long_context: bool = False,
+) -> tuple[DecodeCache, jax.Array]:
+    del long_context
+    b = tokens.shape[0]
+    d = cfg.d_model
+    # Absolute sinusoidal position for the current step.
+    step = cache.kv.length[0, 0]
+    angle_tab = L.sinusoidal_positions(1, d)  # row 0; shift by step phases
+    # For decode we evaluate the sinusoid at `step` directly:
+    div = jnp.exp(
+        jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d)
+    )
+    pos_vec = jnp.zeros((d,), jnp.float32)
+    pos_vec = pos_vec.at[0::2].set(jnp.sin(step.astype(jnp.float32) * div))
+    pos_vec = pos_vec.at[1::2].set(jnp.cos(step.astype(jnp.float32) * div))
+    del angle_tab
+    x = params.embed[tokens] + pos_vec.astype(cfg.dtype)[None, None, :]
+
+    def block(x, scanned):
+        bp, kv, ck, cv = scanned
+        new_kv, h = attn.decode_step(
+            bp.self_attn, kv, L.rms_norm(x, bp.ln1), rope_theta=None
+        )
+        x = x + h
+        h = attn.full_attention(
+            bp.cross_attn, L.rms_norm(x, bp.ln_x),
+            jnp.zeros((x.shape[0], 1), jnp.int32),
+            rope_theta=None, cross_kv=(ck, cv), causal=False,
+        )
+        x = x + h
+        x = x + L.swiglu(
+            L.rms_norm(x, bp.ln2), bp.w_gate, bp.w_up, bp.w_down,
+            act=jax.nn.gelu,
+        )
+        return x, new_kv
+
+    x, new_kv = jax.lax.scan(
+        block, x, (params.dec_blocks, cache.kv, cache.cross_k, cache.cross_v),
+        unroll=cfg.scan_unroll,
+    )
+    h = L.rms_norm(x, params.final_norm)
+    logits = jnp.einsum("bsd,dv->bsv", h, params.embed.T).astype(jnp.float32)
+    return DecodeCache(new_kv, cache.cross_k, cache.cross_v), logits

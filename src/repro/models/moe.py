@@ -1,0 +1,272 @@
+"""Mixture-of-Experts decoder (qwen2-moe / grok-1).
+
+Routing is GShard/Switch-style capacity-based dispatch expressed as
+einsums, which shards cleanly under pjit: tokens are processed in groups,
+each group dispatches at most ``capacity`` tokens per expert, and the
+(group, tokens, experts, capacity) one-hot tensors stay bounded because
+capacity scales with the *group* size, not the global token count.  Expert
+FFN weights are stacked (E, ...) and shard over the ``model`` axis on the
+ff dim (tensor-parallel experts — valid for any expert count; see
+EXPERIMENTS.md §Perf for the expert-parallel variant).
+
+Shared experts (qwen2-moe: 4 always-on) are a single fused swiglu with
+n_shared * moe_hidden width.  The router aux (load-balance) loss follows
+Switch: E * sum_e f_e * P_e.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+
+MOE_GROUP = 2048  # dispatch group size (tokens)
+
+
+class MoEMLP(NamedTuple):
+    w_router: jax.Array           # (d, E) f32
+    w_gate: jax.Array             # (E, d, ff_e)
+    w_up: jax.Array               # (E, d, ff_e)
+    w_down: jax.Array             # (E, ff_e, d)
+    shared_gate: jax.Array | None  # (d, ff_s)
+    shared_up: jax.Array | None
+    shared_down: jax.Array | None
+
+
+class BlockParams(NamedTuple):
+    ln1: jax.Array
+    attn: attn.AttnParams
+    ln2: jax.Array
+    mlp: MoEMLP
+
+
+class Params(NamedTuple):
+    embed: jax.Array
+    blocks: BlockParams
+    final_norm: jax.Array
+    unembed: jax.Array
+
+
+def _init_mlp(key: jax.Array, cfg: ModelConfig) -> MoEMLP:
+    kr, kg, ku, kd, ksg, ksu, ksd = jax.random.split(key, 7)
+    d, ffe, e = cfg.d_model, cfg.moe_hidden, cfg.n_experts
+    shared = cfg.n_shared_experts > 0
+    ffs = cfg.moe_hidden * cfg.n_shared_experts
+    init3 = lambda k, shape: (
+        (shape[1] ** -0.5)
+        * jax.random.normal(k, shape, jnp.float32)
+    ).astype(cfg.dtype)
+    return MoEMLP(
+        w_router=(d**-0.5) * jax.random.normal(kr, (d, e), jnp.float32),
+        w_gate=init3(kg, (e, d, ffe)),
+        w_up=init3(ku, (e, d, ffe)),
+        w_down=(
+            (ffe**-0.5) * jax.random.normal(kd, (e, ffe, d), jnp.float32)
+        ).astype(cfg.dtype),
+        shared_gate=L.dense_init(ksg, (d, ffs), cfg.dtype) if shared else None,
+        shared_up=L.dense_init(ksu, (d, ffs), cfg.dtype) if shared else None,
+        shared_down=L.dense_init(ksd, (ffs, d), cfg.dtype) if shared else None,
+    )
+
+
+def _init_block(key: jax.Array, cfg: ModelConfig) -> BlockParams:
+    k1, k2 = jax.random.split(key)
+    return BlockParams(
+        ln1=jnp.zeros((cfg.d_model,), cfg.dtype),
+        attn=attn.init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            cfg.qk_norm, cfg.dtype,
+        ),
+        ln2=jnp.zeros((cfg.d_model,), cfg.dtype),
+        mlp=_init_mlp(k2, cfg),
+    )
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kb, ku = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(
+        jax.random.split(kb, cfg.n_layers)
+    )
+    return Params(
+        embed=L.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        blocks=blocks,
+        final_norm=jnp.zeros((cfg.d_model,), cfg.dtype),
+        unembed=L.dense_init(ku, (cfg.d_model, cfg.vocab_size), cfg.dtype),
+    )
+
+
+def axes(cfg: ModelConfig) -> Params:
+    shared = cfg.n_shared_experts > 0
+    return Params(
+        embed=("vocab", "embed"),
+        blocks=BlockParams(
+            ln1=("layers", "embed"),
+            attn=attn.AttnParams(
+                wq=("layers", "embed", "heads", "head_dim"),
+                wk=("layers", "embed", "kv_heads", "head_dim"),
+                wv=("layers", "embed", "kv_heads", "head_dim"),
+                wo=("layers", "heads", "head_dim", "embed"),
+                q_norm=("layers", "head_dim") if cfg.qk_norm else None,
+                k_norm=("layers", "head_dim") if cfg.qk_norm else None,
+            ),
+            ln2=("layers", "embed"),
+            mlp=MoEMLP(
+                w_router=("layers", "embed", "experts"),
+                w_gate=("layers", "experts", "embed", "ff"),
+                w_up=("layers", "experts", "embed", "ff"),
+                w_down=("layers", "experts", "ff", "embed"),
+                shared_gate=("layers", "embed", "ff") if shared else None,
+                shared_up=("layers", "embed", "ff") if shared else None,
+                shared_down=("layers", "ff", "embed") if shared else None,
+            ),
+        ),
+        final_norm=("embed",),
+        unembed=("embed", "vocab"),
+    )
+
+
+def moe_apply(
+    mlp: MoEMLP, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Capacity-dispatch MoE over (..., d) tokens; returns (out, aux_loss)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    flat = x.reshape(-1, d)
+    t = flat.shape[0]
+    g_size = min(MOE_GROUP, t)
+    n_groups = t // g_size
+    xg = flat.reshape(n_groups, g_size, d)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), mlp.w_router
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                # (g, t, E)
+    k = cfg.n_experts_per_tok
+    e = cfg.n_experts
+    topv, topi = jax.lax.top_k(probs, k)                   # (g, t, k)
+    topv = topv / jnp.maximum(
+        jnp.sum(topv, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Aux load-balance loss (Switch): E * sum_e f_e P_e.
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    onehot_top = jax.nn.one_hot(topi, e)                    # (g, t, k, E)
+    fe = jnp.mean(jnp.sum(onehot_top, axis=2), axis=(0, 1)) / k
+    aux = e * jnp.sum(fe * me)
+
+    capacity = max(
+        1, int(cfg.capacity_factor * k * g_size / e)
+    )
+
+    # Slot-major priority positions: slot 0 assignments beat slot 1.
+    sel = jnp.transpose(onehot_top, (0, 2, 1, 3))           # (g, k, t, E)
+    sel_flat = sel.reshape(n_groups, k * g_size, e)
+    pos = jnp.cumsum(sel_flat, axis=1) - sel_flat           # rank in queue
+    keep = (pos < capacity) * sel_flat
+    pos_oh = jax.nn.one_hot(pos, capacity) * keep[..., None]
+    disp = pos_oh.reshape(n_groups, k, g_size, e, capacity)
+
+    gates = jnp.transpose(topv, (0, 2, 1))                  # (g, k, t)
+    combine = jnp.einsum("gktec,gkt->gtec", disp, gates)    # (g, t, E, C)
+    dispatch = jnp.sum(disp, axis=1)                        # (g, t, E, C)
+
+    expert_in = jnp.einsum(
+        "gtec,gtd->gecd", dispatch.astype(x.dtype), xg
+    )
+    hg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, mlp.w_gate))
+    hu = jnp.einsum("gecd,edf->gecf", expert_in, mlp.w_up)
+    expert_out = jnp.einsum("gecf,efd->gecd", hg * hu, mlp.w_down)
+    out = jnp.einsum(
+        "gtec,gecd->gtd", combine.astype(x.dtype), expert_out
+    )
+
+    if mlp.shared_gate is not None:
+        out = out + L.swiglu(xg, mlp.shared_gate, mlp.shared_up, mlp.shared_down)
+    return out.reshape(orig_shape), aux
+
+
+def _block_apply(
+    cfg: ModelConfig,
+    bp: BlockParams,
+    x: jax.Array,
+    positions: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    h = attn.full_attention(
+        bp.attn, L.rms_norm(x, bp.ln1), positions, rope_theta=cfg.rope_theta
+    )
+    x = x + h
+    h, aux = moe_apply(bp.mlp, L.rms_norm(x, bp.ln2), cfg)
+    return x + h, aux
+
+
+def forward(
+    params: Params, batch: dict[str, jax.Array], cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    x = params.embed[batch["tokens"]]
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def block(x, bp):
+        fn = _block_apply
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        x, aux = fn(cfg, bp, x, positions)
+        return x, aux
+
+    x, auxes = jax.lax.scan(block, x, params.blocks, unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params.final_norm), jnp.sum(auxes)
+
+
+def loss(
+    params: Params, batch: dict[str, jax.Array], cfg: ModelConfig
+) -> jax.Array:
+    h, aux = forward(params, batch, cfg)
+    b, s, d = h.shape
+    ce = L.chunked_cross_entropy(
+        h[:, :-1].reshape(-1, d),
+        params.unembed,
+        batch["tokens"][:, 1:].reshape(-1),
+        jnp.ones((b * (s - 1),), jnp.float32),
+        n_chunks=cfg.loss_chunks,
+    )
+    return ce + cfg.router_aux_coef * aux
+
+
+class DecodeCache(NamedTuple):
+    kv: attn.KVCache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               long_context: bool = False) -> DecodeCache:
+    kv = attn.init_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
+    stack = lambda leaf: jnp.broadcast_to(leaf[None], (cfg.n_layers, *leaf.shape))
+    return DecodeCache(kv=jax.tree_util.tree_map(stack, kv))
+
+
+def decode_step(
+    params: Params,
+    cache: DecodeCache,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    long_context: bool = False,
+) -> tuple[DecodeCache, jax.Array]:
+    x = params.embed[tokens]
+
+    def block(x, scanned):
+        bp, kv = scanned
+        new_kv, h = attn.decode_step(
+            bp.attn, kv, L.rms_norm(x, bp.ln1), rope_theta=cfg.rope_theta
+        )
+        x = x + h
+        h, _ = moe_apply(bp.mlp, L.rms_norm(x, bp.ln2), cfg)
+        return x + h, new_kv
+
+    x, new_kv = jax.lax.scan(block, x, (params.blocks, cache.kv),
+                             unroll=cfg.scan_unroll)
+    h = L.rms_norm(x, params.final_norm)
+    logits = jnp.einsum("bsd,dv->bsv", h, params.unembed).astype(jnp.float32)
+    return DecodeCache(kv=new_kv), logits

@@ -1,0 +1,338 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA
+attention in a (rec, rec, attn) pattern (arXiv:2402.19427).
+
+Temporal-mixing blocks alternate per ``cfg.block_pattern``; every block is
+followed by a gated-MLP.  The RG-LRU gated linear recurrence
+
+    r_t = sigmoid(W_r x + b_r);  i_t = sigmoid(W_i x + b_i)
+    log a_t = -c * softplus(lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+runs as a lax.associative_scan for train/prefill (parallel over L, the
+TPU-friendly formulation of the recurrence) and as a single fused update
+for decode.  Layers are a Python loop (heterogeneous structure), which is
+fine at 26 layers.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+class RecParams(NamedTuple):
+    ln: jax.Array
+    w_x: jax.Array        # (d, r) linear branch into the recurrence
+    w_gate: jax.Array     # (d, r) gelu gate branch
+    conv_w: jax.Array     # (width, r) depthwise temporal conv
+    conv_b: jax.Array
+    w_rg: jax.Array       # (r, r) recurrence gate
+    b_rg: jax.Array
+    w_ig: jax.Array       # (r, r) input gate
+    b_ig: jax.Array
+    lam: jax.Array        # (r,) learnable decay parameter
+    w_out: jax.Array      # (r, d)
+
+
+class AttnBlock(NamedTuple):
+    ln: jax.Array
+    attn: attn.AttnParams
+
+
+class MLPParams(NamedTuple):
+    ln: jax.Array
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+
+
+class Params(NamedTuple):
+    embed: jax.Array
+    temporal: tuple[Any, ...]     # RecParams | AttnBlock per layer
+    mlps: tuple[MLPParams, ...]
+    final_norm: jax.Array
+
+
+def pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    base = cfg.block_pattern or ("rec", "rec", "attn")
+    return tuple(base[i % len(base)] for i in range(cfg.n_layers))
+
+
+def _init_rec(key: jax.Array, cfg: ModelConfig) -> RecParams:
+    d = cfg.d_model
+    r = d  # lru width = d_model for recurrentgemma-2b
+    ks = jax.random.split(key, 6)
+    return RecParams(
+        ln=jnp.zeros((d,), cfg.dtype),
+        w_x=L.dense_init(ks[0], (d, r), cfg.dtype),
+        w_gate=L.dense_init(ks[1], (d, r), cfg.dtype),
+        conv_w=L.dense_init(ks[2], (cfg.conv_width, r), cfg.dtype,
+                            scale=cfg.conv_width**-0.5),
+        conv_b=jnp.zeros((r,), cfg.dtype),
+        w_rg=L.dense_init(ks[3], (r, r), cfg.dtype),
+        b_rg=jnp.zeros((r,), jnp.float32),
+        w_ig=L.dense_init(ks[4], (r, r), cfg.dtype),
+        b_ig=jnp.zeros((r,), jnp.float32),
+        # softplus(lam) ~ U[...] so a^c starts in a stable range
+        lam=jax.random.uniform(ks[5], (r,), jnp.float32, 0.3, 0.8),
+        w_out=L.dense_init(jax.random.fold_in(key, 9), (r, d), cfg.dtype),
+    )
+
+
+def _init_attn(key: jax.Array, cfg: ModelConfig) -> AttnBlock:
+    return AttnBlock(
+        ln=jnp.zeros((cfg.d_model,), cfg.dtype),
+        attn=attn.init(
+            key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            False, cfg.dtype,
+        ),
+    )
+
+
+def _init_mlp(key: jax.Array, cfg: ModelConfig) -> MLPParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    return MLPParams(
+        ln=jnp.zeros((d,), cfg.dtype),
+        w_gate=L.dense_init(k1, (d, ff), cfg.dtype),
+        w_up=L.dense_init(k2, (d, ff), cfg.dtype),
+        w_down=L.dense_init(k3, (ff, d), cfg.dtype),
+    )
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kt, km = jax.random.split(key, 3)
+    pat = pattern(cfg)
+    tkeys = jax.random.split(kt, cfg.n_layers)
+    mkeys = jax.random.split(km, cfg.n_layers)
+    temporal = tuple(
+        _init_rec(k, cfg) if p == "rec" else _init_attn(k, cfg)
+        for k, p in zip(tkeys, pat)
+    )
+    mlps = tuple(_init_mlp(k, cfg) for k in mkeys)
+    return Params(
+        embed=L.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        temporal=temporal,
+        mlps=mlps,
+        final_norm=jnp.zeros((cfg.d_model,), cfg.dtype),
+    )
+
+
+def axes(cfg: ModelConfig) -> Params:
+    pat = pattern(cfg)
+    rec_ax = RecParams(
+        ln=("embed",), w_x=("embed", "inner"), w_gate=("embed", "inner"),
+        conv_w=(None, "inner"), conv_b=("inner",),
+        w_rg=("inner", "inner2"), b_rg=("inner",),
+        w_ig=("inner", "inner2"), b_ig=("inner",),
+        lam=("inner",), w_out=("inner", "embed"),
+    )
+    attn_ax = AttnBlock(
+        ln=("embed",),
+        attn=attn.AttnParams(
+            wq=("embed", "heads", "head_dim"),
+            wk=("embed", "kv_heads", "head_dim"),
+            wv=("embed", "kv_heads", "head_dim"),
+            wo=("heads", "head_dim", "embed"),
+            q_norm=None, k_norm=None,
+        ),
+    )
+    mlp_ax = MLPParams(
+        ln=("embed",), w_gate=("embed", "ff"), w_up=("embed", "ff"),
+        w_down=("ff", "embed"),
+    )
+    return Params(
+        embed=("vocab", "embed"),
+        temporal=tuple(rec_ax if p == "rec" else attn_ax for p in pat),
+        mlps=tuple(mlp_ax for _ in pat),
+        final_norm=("embed",),
+    )
+
+
+def _rglru_scan(
+    a: jax.Array, bx: jax.Array, h0: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t h_{t-1} + bx_t over axis 1. a, bx: (b, l, r).
+
+    Associative composition of (a, b) pairs; returns (all h, final h).
+    """
+    if h0 is not None:
+        # Fold the initial state into the first element.
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h, h[:, -1, :]
+
+
+def _rec_apply(
+    p: RecParams, x: jax.Array, cfg: ModelConfig,
+    conv_state: jax.Array | None = None,
+    h0: jax.Array | None = None,
+):
+    """Full-sequence RG-LRU block. x: (b, l, d)."""
+    u = L.rms_norm(x, p.ln)
+    xb = jnp.einsum("bld,dr->blr", u, p.w_x)
+    gate = jax.nn.gelu(jnp.einsum("bld,dr->blr", u, p.w_gate))
+
+    # Temporal conv (causal, depthwise).
+    width = p.conv_w.shape[0]
+    pad = jnp.pad(xb, ((0, 0), (width - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + xb.shape[1], :] * p.conv_w[i] for i in range(width)
+    ) + p.conv_b
+    xb = conv
+
+    # The square gate maps contract over the model-sharded `inner` dim;
+    # anchoring their outputs back to inner-sharded turns the partial-sum
+    # all-reduce of a REPLICATED f32 (b, l, r) tensor into a
+    # reduce-scatter onto the shard (16x less traffic) and keeps every
+    # downstream elementwise op and the associative scan fully sharded
+    # (EXPERIMENTS.md §Perf, recurrentgemma iteration).
+    r = jax.nn.sigmoid(
+        L.shard_hint(
+            jnp.einsum("blr,rk->blk", xb, p.w_rg).astype(jnp.float32),
+            ("batch", None, "inner"),
+        ) + p.b_rg
+    )
+    i = jax.nn.sigmoid(
+        L.shard_hint(
+            jnp.einsum("blr,rk->blk", xb, p.w_ig).astype(jnp.float32),
+            ("batch", None, "inner"),
+        ) + p.b_ig
+    )
+    log_a = -cfg.rglru_c * jax.nn.softplus(p.lam) * r
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6))
+    bx = scale * (i * xb.astype(jnp.float32))
+    h, hlast = _rglru_scan(a, bx, h0)
+    y = (h.astype(x.dtype) * gate)
+    return x + jnp.einsum("blr,rd->bld", y, p.w_out), hlast
+
+
+def _mlp_apply(p: MLPParams, x: jax.Array) -> jax.Array:
+    return x + L.swiglu(L.rms_norm(x, p.ln), p.w_gate, p.w_up, p.w_down,
+                        act=jax.nn.gelu)
+
+
+def forward(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    x = params.embed[batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for tp, mp in zip(params.temporal, params.mlps):
+        if isinstance(tp, RecParams):
+            fn = lambda tpp, xx: _rec_apply(tpp, xx, cfg)[0]
+        else:
+            fn = lambda tpp, xx: xx + attn.full_attention(
+                tpp.attn, L.rms_norm(xx, tpp.ln), positions,
+                window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+            )
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x = fn(tp, x)
+        x = jax.checkpoint(_mlp_apply)(mp, x) if cfg.remat else _mlp_apply(mp, x)
+    return L.rms_norm(x, params.final_norm)
+
+
+def loss(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    h = forward(params, batch, cfg)
+    b, s, d = h.shape
+    return L.chunked_cross_entropy(
+        h[:, :-1].reshape(-1, d),
+        params.embed.T,
+        batch["tokens"][:, 1:].reshape(-1),
+        jnp.ones((b * (s - 1),), jnp.float32),
+        n_chunks=cfg.loss_chunks,
+        softcap_value=cfg.logit_softcap,
+    )
+
+
+class DecodeCache(NamedTuple):
+    kv: tuple[Any, ...]           # per-attn-layer KVCache (window-sized)
+    rec_h: tuple[jax.Array, ...]  # per-rec-layer (b, r) hidden states
+    rec_conv: tuple[jax.Array, ...]  # per-rec-layer (b, width-1, r)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               long_context: bool = False) -> DecodeCache:
+    pat = pattern(cfg)
+    window = cfg.sliding_window or 2048
+    cache_seq = min(max_seq, window) if long_context else max_seq
+    kv, rec_h, rec_conv = [], [], []
+    r = cfg.d_model
+    for p in pat:
+        if p == "attn":
+            kv.append(attn.init_cache(
+                batch, cache_seq, cfg.n_kv_heads, cfg.head_dim, cfg.dtype
+            ))
+        else:
+            rec_h.append(jnp.zeros((batch, r), jnp.float32))
+            rec_conv.append(jnp.zeros((batch, cfg.conv_width - 1, r), cfg.dtype))
+    return DecodeCache(kv=tuple(kv), rec_h=tuple(rec_h), rec_conv=tuple(rec_conv))
+
+
+def decode_step(
+    params: Params,
+    cache: DecodeCache,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    long_context: bool = False,
+) -> tuple[DecodeCache, jax.Array]:
+    del long_context  # window-sized cache handles any context length
+    x = params.embed[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    new_kv, new_h, new_conv = [], [], []
+    i_kv = i_rec = 0
+    for tp, mp in zip(params.temporal, params.mlps):
+        if isinstance(tp, RecParams):
+            res = x
+            u = L.rms_norm(x, tp.ln)[:, 0]
+            xb = jnp.einsum("bd,dr->br", u, tp.w_x)
+            gate = jax.nn.gelu(jnp.einsum("bd,dr->br", u, tp.w_gate))
+            hist = jnp.concatenate(
+                [cache.rec_conv[i_rec], xb[:, None, :]], axis=1
+            )
+            xb = jnp.einsum("bwr,wr->br", hist, tp.conv_w) + tp.conv_b
+            new_conv.append(hist[:, 1:, :])
+            r_g = jax.nn.sigmoid(
+                jnp.einsum("br,rk->bk", xb, tp.w_rg).astype(jnp.float32) + tp.b_rg
+            )
+            i_g = jax.nn.sigmoid(
+                jnp.einsum("br,rk->bk", xb, tp.w_ig).astype(jnp.float32) + tp.b_ig
+            )
+            a = jnp.exp(-cfg.rglru_c * jax.nn.softplus(tp.lam) * r_g)
+            scale = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6))
+            h = a * cache.rec_h[i_rec] + scale * (i_g * xb.astype(jnp.float32))
+            new_h.append(h)
+            y = h.astype(x.dtype) * gate
+            x = res + jnp.einsum("br,rd->bd", y, tp.w_out)[:, None, :]
+            i_rec += 1
+        else:
+            kv, h = attn.decode_step(
+                tp.attn, cache.kv[i_kv], L.rms_norm(x, tp.ln),
+                window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+            )
+            new_kv.append(kv)
+            x = x + h
+            i_kv += 1
+        x = _mlp_apply(mp, x)
+    h = L.rms_norm(x, params.final_norm)
+    logits = jnp.einsum("bsd,dv->bsv", h, params.embed.T).astype(jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    return (
+        DecodeCache(kv=tuple(new_kv), rec_h=tuple(new_h), rec_conv=tuple(new_conv)),
+        logits,
+    )

@@ -1,0 +1,302 @@
+"""Mamba-2 (SSD — state-space duality) decoder, attention-free.
+
+Training/prefill use the chunked SSD algorithm (Dao & Gu, 2024): quadratic
+attention-like compute *within* chunks (MXU-friendly (Q x Q) blocks), a
+linear recurrence *across* chunk states (lax.scan over n_chunks), never
+materialising the (L x L) kernel.  Decode is the O(1) recurrent update on
+the (H, N, P) state.
+
+Layout notes for TPU: heads H shard over ``model``; the chunk dimension is
+batch-like.  Chunk size Q=64 keeps the intra-chunk (Q x Q) matmuls and the
+(Q, N) B/C blocks VMEM-resident under the default BlockSpec-free XLA path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class BlockParams(NamedTuple):
+    ln: jax.Array          # (d,)
+    in_proj: jax.Array     # (d, 2*d_in + 2*N + H)
+    conv_w: jax.Array      # (width, d_in + 2*N) depthwise
+    conv_b: jax.Array      # (d_in + 2*N,)
+    a_log: jax.Array       # (H,)
+    d_skip: jax.Array      # (H,)
+    dt_bias: jax.Array     # (H,)
+    gate_norm: jax.Array   # (d_in,)
+    out_proj: jax.Array    # (d_in, d)
+
+
+class Params(NamedTuple):
+    embed: jax.Array
+    blocks: BlockParams
+    final_norm: jax.Array
+
+
+def dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim P, state N)."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    return d_in, d_in // p, p, cfg.ssm_state
+
+
+def _init_block(key: jax.Array, cfg: ModelConfig) -> BlockParams:
+    d = cfg.d_model
+    d_in, h, p, n = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * n + h
+    return BlockParams(
+        ln=jnp.zeros((d,), cfg.dtype),
+        in_proj=L.dense_init(k1, (d, proj_out), cfg.dtype),
+        conv_w=L.dense_init(k2, (cfg.conv_width, d_in + 2 * n), cfg.dtype,
+                            scale=cfg.conv_width**-0.5),
+        conv_b=jnp.zeros((d_in + 2 * n,), cfg.dtype),
+        a_log=jnp.log(
+            jax.random.uniform(k3, (h,), jnp.float32, 1.0, 16.0)
+        ),
+        d_skip=jnp.ones((h,), jnp.float32),
+        dt_bias=jnp.log(
+            jnp.exp(jax.random.uniform(k4, (h,), jnp.float32, 1e-3, 0.1)) - 1.0
+        ),
+        gate_norm=jnp.zeros((d_in,), cfg.dtype),
+        out_proj=L.dense_init(jax.random.fold_in(k1, 7), (d_in, d), cfg.dtype),
+    )
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kb = jax.random.split(key)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(
+        jax.random.split(kb, cfg.n_layers)
+    )
+    return Params(
+        embed=L.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        blocks=blocks,
+        final_norm=jnp.zeros((cfg.d_model,), cfg.dtype),
+    )
+
+
+def axes(cfg: ModelConfig) -> Params:
+    return Params(
+        embed=("vocab", "embed"),
+        blocks=BlockParams(
+            ln=("layers", "embed"),
+            in_proj=("layers", "embed", "inner_proj"),
+            conv_w=("layers", None, "inner_conv"),
+            conv_b=("layers", "inner_conv"),
+            a_log=("layers", "ssm_heads"),
+            d_skip=("layers", "ssm_heads"),
+            dt_bias=("layers", "ssm_heads"),
+            gate_norm=("layers", "inner"),
+            out_proj=("layers", "inner", "embed"),
+        ),
+        final_norm=("embed",),
+    )
+
+
+def _split_proj(z_xbc_dt: jax.Array, cfg: ModelConfig):
+    d_in, h, p, n = dims(cfg)
+    z = z_xbc_dt[..., :d_in]
+    xbc = z_xbc_dt[..., d_in : 2 * d_in + 2 * n]
+    dt = z_xbc_dt[..., 2 * d_in + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (b, l, ch) with (width, ch) weights."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (b, l, h, p)
+    dt: jax.Array,     # (b, l, h) — post-softplus
+    a: jax.Array,      # (h,) negative
+    bmat: jax.Array,   # (b, l, n)
+    cmat: jax.Array,   # (b, l, n)
+    chunk: int,
+    h0: jax.Array | None = None,   # (b, h, n, p) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (b,l,h,p), final_state (b,h,n,p))."""
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = l // chunk
+    q = chunk
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    br = bmat.reshape(b, nc, q, n)
+    cr = cmat.reshape(b, nc, q, n)
+
+    da = dtr * a  # (b, nc, q, h) log-decay per step
+    cum = jnp.cumsum(da, axis=2)                    # (b, nc, q, h)
+
+    # Intra-chunk (quadratic within chunk).
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,q_i,q_j,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cr, br)       # (b,nc,q,q)
+    m = scores[..., None] * decay                        # (b,nc,q,q,h)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", m, dtr, xr)
+
+    # Chunk summary states.
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (b,nc,q,h)
+    s_chunk = jnp.einsum(
+        "bcqh,bcqn,bcqhp->bchnp", decay_to_end * dtr, br, xr
+    )
+
+    # Inter-chunk linear recurrence over chunk states.
+    g = jnp.exp(cum[:, :, -1, :])                        # (b, nc, h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), x.dtype)
+
+    def step(hprev, inp):
+        gc, sc = inp
+        hnew = gc[:, :, None, None] * hprev + sc
+        return hnew, hprev  # emit state at chunk START
+
+    hfin, hstart = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(g, 1, 0), jnp.moveaxis(s_chunk, 1, 0)),
+    )
+    hstart = jnp.moveaxis(hstart, 0, 1)                  # (b, nc, h, n, p)
+
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", cr, jnp.exp(cum), hstart
+    )
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, hfin
+
+
+def _block_apply(
+    cfg: ModelConfig, bp: BlockParams, x: jax.Array
+) -> jax.Array:
+    d_in, h, p, n = dims(cfg)
+    res = x
+    u = L.rms_norm(x, bp.ln)
+    z, xbc, dt = _split_proj(jnp.einsum("bld,dk->blk", u, bp.in_proj), cfg)
+    xbc = _causal_conv(xbc, bp.conv_w, bp.conv_b)
+    xs = xbc[..., :d_in].reshape(*x.shape[:2], h, p)
+    bmat = xbc[..., d_in : d_in + n].astype(jnp.float32)
+    cmat = xbc[..., d_in + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + bp.dt_bias)
+    a = -jnp.exp(bp.a_log)
+
+    y, _ = ssd_chunked(
+        xs.astype(jnp.float32), dt, a, bmat, cmat, cfg.ssm_chunk
+    )
+    y = y + bp.d_skip[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), bp.gate_norm)
+    return res + jnp.einsum("blk,kd->bld", y, bp.out_proj)
+
+
+def forward(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    x = params.embed[batch["tokens"]]
+
+    def block(x, bp):
+        fn = _block_apply
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        return fn(cfg, bp, x), None
+
+    x, _ = jax.lax.scan(block, x, params.blocks, unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params.final_norm)
+
+
+def loss(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    h = forward(params, batch, cfg)
+    b, s, d = h.shape
+    return L.chunked_cross_entropy(
+        h[:, :-1].reshape(-1, d),
+        params.embed.T,
+        batch["tokens"][:, 1:].reshape(-1),
+        jnp.ones((b * (s - 1),), jnp.float32),
+        n_chunks=cfg.loss_chunks,
+    )
+
+
+class DecodeCache(NamedTuple):
+    ssm_state: jax.Array    # (layers, b, h, n, p)
+    conv_state: jax.Array   # (layers, b, width-1, d_in + 2n)
+    length: jax.Array       # (b,)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               long_context: bool = False) -> DecodeCache:
+    del max_seq, long_context  # O(1) state regardless of context length
+    d_in, h, p, n = dims(cfg)
+    return DecodeCache(
+        ssm_state=jnp.zeros((cfg.n_layers, batch, h, n, p), jnp.float32),
+        conv_state=jnp.zeros(
+            (cfg.n_layers, batch, cfg.conv_width - 1, d_in + 2 * n), cfg.dtype
+        ),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_axes(cfg: ModelConfig) -> DecodeCache:
+    return DecodeCache(
+        ssm_state=("layers", "batch", "ssm_heads", None, None),
+        conv_state=("layers", "batch", None, "inner_conv"),
+        length=("batch",),
+    )
+
+
+def decode_step(
+    params: Params,
+    cache: DecodeCache,
+    tokens: jax.Array,       # (b, 1)
+    cfg: ModelConfig,
+    long_context: bool = False,
+) -> tuple[DecodeCache, jax.Array]:
+    del long_context
+    d_in, h, p, n = dims(cfg)
+    x = params.embed[tokens][:, 0]                  # (b, d)
+
+    def block(x, scanned):
+        bp, hstate, cstate = scanned
+        res = x
+        u = L.rms_norm(x, bp.ln)
+        z, xbc, dt = _split_proj(jnp.einsum("bd,dk->bk", u, bp.in_proj), cfg)
+        # Depthwise causal conv from the rolling buffer.
+        hist = jnp.concatenate([cstate, xbc[:, None, :]], axis=1)  # (b,w,ch)
+        conv = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", hist, bp.conv_w) + bp.conv_b
+        )
+        new_cstate = hist[:, 1:, :]
+        xs = conv[:, :d_in].reshape(-1, h, p).astype(jnp.float32)
+        bmat = conv[:, d_in : d_in + n].astype(jnp.float32)
+        cmat = conv[:, d_in + n :].astype(jnp.float32)
+        dt1 = jax.nn.softplus(dt.astype(jnp.float32) + bp.dt_bias)  # (b,h)
+        a = -jnp.exp(bp.a_log)
+        decay = jnp.exp(dt1 * a)                                     # (b,h)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt1, bmat, xs)
+        hnew = decay[:, :, None, None] * hstate + upd
+        y = jnp.einsum("bn,bhnp->bhp", cmat, hnew)
+        y = y + bp.d_skip[None, :, None] * xs
+        y = y.reshape(-1, d_in).astype(x.dtype)
+        y = L.rms_norm(y * jax.nn.silu(z), bp.gate_norm)
+        out = res + jnp.einsum("bk,kd->bd", y, bp.out_proj)
+        return out, (hnew, new_cstate)
+
+    x, (new_h, new_c) = jax.lax.scan(
+        block, x, (params.blocks, cache.ssm_state, cache.conv_state),
+        unroll=cfg.scan_unroll,
+    )
+    hfinal = L.rms_norm(x, params.final_norm)
+    logits = jnp.einsum("bd,dv->bv", hfinal, params.embed.T)
+    return (
+        DecodeCache(new_h, new_c, cache.length + 1),
+        logits[:, None, :].astype(jnp.float32),
+    )

@@ -1,0 +1,290 @@
+"""Dense decoder-only transformer (llama3 / qwen3 / gemma2 / internvl LM).
+
+Scan-over-layers with stacked per-layer parameters (the MaxText pattern):
+compile time is O(1) in depth, and per-layer remat gives the standard
+activation-checkpoint memory profile.  Handles:
+
+  - GQA with optional qk-norm (qwen3) and RoPE,
+  - gemma2 extras: attn/logit soft-caps, sandwich post-norms, sqrt(d)
+    embedding scaling, query_pre_attn scaling, alternating local/global
+    attention (per-layer window array scanned with the params),
+  - VLM (internvl2): visual patch embeddings scattered into the first
+    ``n_visual_tokens`` positions, loss masked to text positions,
+  - chunked cross-entropy so 256k-vocab logits never fully materialise.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+class BlockParams(NamedTuple):
+    ln1: jax.Array
+    attn: attn.AttnParams
+    post_attn: jax.Array | None
+    ln2: jax.Array
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+    post_mlp: jax.Array | None
+
+
+class Params(NamedTuple):
+    embed: jax.Array
+    blocks: BlockParams              # leaves stacked (n_layers, ...)
+    final_norm: jax.Array
+    unembed: jax.Array | None        # None when tied
+
+
+def layer_windows(cfg: ModelConfig, long_context: bool = False) -> jax.Array:
+    """Per-layer attention window; "global" layers get a huge window."""
+    big = jnp.int32(2**30)
+    if cfg.sliding_window is None:
+        return jnp.full((cfg.n_layers,), big, jnp.int32)
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.local_global_period > 0:
+        is_global = (idx % cfg.local_global_period) == (
+            cfg.local_global_period - 1
+        )
+    else:
+        is_global = jnp.zeros((cfg.n_layers,), bool)
+    if long_context:
+        # Long-context serving mode: every layer windowed (sub-quadratic).
+        is_global = jnp.zeros((cfg.n_layers,), bool)
+        return jnp.full((cfg.n_layers,), cfg.long_context_window, jnp.int32)
+    return jnp.where(is_global, big, jnp.int32(cfg.sliding_window))
+
+
+def _init_block(key: jax.Array, cfg: ModelConfig) -> BlockParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, ff = cfg.d_model, cfg.d_ff
+    return BlockParams(
+        ln1=jnp.zeros((d,), cfg.dtype),
+        attn=attn.init(
+            k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm,
+            cfg.dtype,
+        ),
+        post_attn=jnp.zeros((d,), cfg.dtype) if cfg.post_norms else None,
+        ln2=jnp.zeros((d,), cfg.dtype),
+        w_gate=L.dense_init(k2, (d, ff), cfg.dtype),
+        w_up=L.dense_init(k3, (d, ff), cfg.dtype),
+        w_down=L.dense_init(k4, (ff, d), cfg.dtype),
+        post_mlp=jnp.zeros((d,), cfg.dtype) if cfg.post_norms else None,
+    )
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kb, ku = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(block_keys)
+    return Params(
+        embed=L.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        blocks=blocks,
+        final_norm=jnp.zeros((cfg.d_model,), cfg.dtype),
+        unembed=None
+        if cfg.tie_embeddings
+        else L.dense_init(ku, (cfg.d_model, cfg.vocab_size), cfg.dtype),
+    )
+
+
+def axes(cfg: ModelConfig) -> Params:
+    """Logical sharding axes, same structure as Params."""
+    nrm = ("embed",)
+    return Params(
+        embed=("vocab", "embed"),
+        blocks=BlockParams(
+            ln1=("layers", "embed"),
+            attn=attn.AttnParams(
+                wq=("layers", "embed", "heads", "head_dim"),
+                wk=("layers", "embed", "kv_heads", "head_dim"),
+                wv=("layers", "embed", "kv_heads", "head_dim"),
+                wo=("layers", "heads", "head_dim", "embed"),
+                q_norm=("layers", "head_dim") if cfg.qk_norm else None,
+                k_norm=("layers", "head_dim") if cfg.qk_norm else None,
+            ),
+            post_attn=("layers", "embed") if cfg.post_norms else None,
+            ln2=("layers", "embed"),
+            w_gate=("layers", "embed", "ff"),
+            w_up=("layers", "embed", "ff"),
+            w_down=("layers", "ff", "embed"),
+            post_mlp=("layers", "embed") if cfg.post_norms else None,
+        ),
+        final_norm=nrm,
+        unembed=None if cfg.tie_embeddings else ("embed", "vocab"),
+    )
+
+
+def _block_apply(
+    cfg: ModelConfig,
+    bp: BlockParams,
+    window: jax.Array,
+    x: jax.Array,
+    positions: jax.Array,
+) -> jax.Array:
+    h = attn.full_attention(
+        bp.attn,
+        L.rms_norm(x, bp.ln1),
+        positions,
+        window=window,
+        attn_softcap=cfg.attn_softcap,
+        rope_theta=cfg.rope_theta,
+    )
+    if bp.post_attn is not None:
+        h = L.rms_norm(h, bp.post_attn)
+    x = x + h
+    h = L.swiglu(
+        L.rms_norm(x, bp.ln2), bp.w_gate, bp.w_up, bp.w_down,
+        act=jax.nn.gelu if cfg.post_norms else jax.nn.silu,
+    )
+    if bp.post_mlp is not None:
+        h = L.rms_norm(h, bp.post_mlp)
+    return x + h
+
+
+def _embed_inputs(
+    cfg: ModelConfig, params: Params, batch: dict[str, jax.Array]
+) -> jax.Array:
+    x = params.embed[batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.n_visual_tokens > 0 and "visual_embeds" in batch:
+        nv = batch["visual_embeds"].shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, batch["visual_embeds"].astype(x.dtype), (0, 0, 0)
+        )
+        del nv
+    return x
+
+
+def forward(
+    params: Params, batch: dict[str, jax.Array], cfg: ModelConfig
+) -> jax.Array:
+    """Hidden states after the final norm: (b, s, d)."""
+    x = _embed_inputs(cfg, params, batch)
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows = layer_windows(cfg)
+
+    def block(x, scanned):
+        bp, window = scanned
+        # Pin the residual stream to batch sharding at every layer
+        # boundary so the scanned body never round-trips it through a
+        # replicated layout (EXPERIMENTS.md §Perf iter 2).
+        x = L.shard_hint(x, ("batch", None, None))
+        fn = _block_apply
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        return fn(cfg, bp, window, x, positions), None
+
+    x, _ = jax.lax.scan(block, x, (params.blocks, windows),
+                        unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params.final_norm)
+
+
+def loss(
+    params: Params, batch: dict[str, jax.Array], cfg: ModelConfig
+) -> jax.Array:
+    """Next-token cross-entropy (text positions only for VLM)."""
+    h = forward(params, batch, cfg)
+    b, s, d = h.shape
+    unembed = (
+        params.unembed if params.unembed is not None else params.embed.T
+    )
+    targets = batch["tokens"][:, 1:]
+    hidden = h[:, :-1].reshape(-1, d)
+    mask = jnp.ones((b, s - 1), jnp.float32)
+    if cfg.n_visual_tokens > 0:
+        pos = jnp.arange(s - 1)[None, :]
+        mask = (pos >= cfg.n_visual_tokens).astype(jnp.float32) * mask
+    return L.chunked_cross_entropy(
+        hidden,
+        unembed,
+        targets.reshape(-1),
+        mask.reshape(-1),
+        n_chunks=cfg.loss_chunks,
+        softcap_value=cfg.logit_softcap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    kv: attn.KVCache        # leaves stacked (n_layers, ...)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, long_context: bool = False
+) -> DecodeCache:
+    if long_context:
+        # Sub-quadratic serving: only the window is cached (ring buffer
+        # semantics are approximated with a window-sized linear cache for
+        # the dry run; positions wrap via modulo in a real server).
+        max_seq = min(max_seq, cfg.long_context_window)
+    kv = attn.init_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
+    stack = lambda leaf: jnp.broadcast_to(
+        leaf[None], (cfg.n_layers, *leaf.shape)
+    )
+    return DecodeCache(kv=jax.tree_util.tree_map(stack, kv))
+
+
+def cache_axes(cfg: ModelConfig) -> DecodeCache:
+    return DecodeCache(
+        kv=attn.KVCache(
+            k=("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            v=("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            length=("layers", "batch"),
+        )
+    )
+
+
+def decode_step(
+    params: Params,
+    cache: DecodeCache,
+    tokens: jax.Array,           # (b, 1) int32
+    cfg: ModelConfig,
+    long_context: bool = False,
+) -> tuple[DecodeCache, jax.Array]:
+    """Serve one token for the whole batch; returns (cache, logits)."""
+    x = params.embed[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    windows = layer_windows(cfg, long_context=long_context)
+
+    def block(x, scanned):
+        bp, window, kv = scanned
+        new_kv, h = attn.decode_step(
+            bp.attn,
+            kv,
+            L.rms_norm(x, bp.ln1),
+            window=window,
+            attn_softcap=cfg.attn_softcap,
+            rope_theta=cfg.rope_theta,
+        )
+        if bp.post_attn is not None:
+            h = L.rms_norm(h, bp.post_attn)
+        x = x + h
+        h = L.swiglu(
+            L.rms_norm(x, bp.ln2), bp.w_gate, bp.w_up, bp.w_down,
+            act=jax.nn.gelu if cfg.post_norms else jax.nn.silu,
+        )
+        if bp.post_mlp is not None:
+            h = L.rms_norm(h, bp.post_mlp)
+        return x + h, new_kv
+
+    x, new_kv = jax.lax.scan(
+        block, x, (params.blocks, windows, cache.kv), unroll=cfg.scan_unroll
+    )
+    h = L.rms_norm(x, params.final_norm)
+    unembed = params.unembed if params.unembed is not None else params.embed.T
+    logits = jnp.einsum("bsd,dv->bsv", h, unembed).astype(jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    return DecodeCache(kv=new_kv), logits

@@ -1,0 +1,7 @@
+from repro.optim.sgd import (  # noqa: F401
+    adam,
+    local_sgd,
+    proximal_local_sgd,
+    sgd,
+)
+from repro.optim.scaffold import ScaffoldState, scaffold_local  # noqa: F401

@@ -1,0 +1,62 @@
+"""SCAFFOLD control variates (Karimireddy et al., ICML'20).
+
+The paper reports SCAFFOLD unstable under its severe heterogeneity and
+keeps it out of the headline tables; we implement it anyway (deliverable:
+"if the paper compares against a baseline, implement the baseline too") so
+the released traces can include it.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class ScaffoldState(NamedTuple):
+    c_global: Params   # server control variate
+    c_local: Params    # per-client control variates (stacked leaves, (N, ...))
+
+
+def init_state(params: Params, n_clients: int) -> ScaffoldState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    stacked = jax.tree_util.tree_map(
+        lambda z: jnp.zeros((n_clients, *z.shape), z.dtype), params
+    )
+    return ScaffoldState(zeros, stacked)
+
+
+def scaffold_local(
+    loss_fn: Callable[[Params, jax.Array], jax.Array],
+    params: Params,
+    batches: jax.Array,
+    lr: float,
+    c_global: Params,
+    c_i: Params,
+) -> tuple[Params, Params, jax.Array]:
+    """Option-II SCAFFOLD local update.
+
+    Returns (new_params, new_c_i, mean_loss).  Local steps use the
+    variance-corrected gradient g - c_i + c; the new client control variate
+    is c_i - c + (theta^t - theta_i) / (K lr).
+    """
+    anchor = params
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(p, batch):
+        loss, g = grad_fn(p, batch)
+        g = jax.tree_util.tree_map(
+            lambda gg, ci, cg: gg - ci + cg, g, c_i, c_global
+        )
+        p = jax.tree_util.tree_map(lambda pp, gg: pp - lr * gg, p, g)
+        return p, loss
+
+    params, losses = jax.lax.scan(step, params, batches)
+    k_steps = jnp.maximum(batches.shape[0], 1)
+    new_c_i = jax.tree_util.tree_map(
+        lambda ci, cg, a, p: ci - cg + (a - p) / (k_steps * lr),
+        c_i, c_global, anchor, params,
+    )
+    return params, new_c_i, jnp.mean(losses)

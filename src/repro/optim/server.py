@@ -1,0 +1,45 @@
+"""Server-side adaptive optimisers for federated aggregation (FedAdam,
+Reddi et al., ICLR'21 — the paper's related-work family [34]).
+
+The aggregated client update acts as a pseudo-gradient at the gateway:
+    theta_{t+1} = theta_t + server_opt(mean_delta).
+Plain FedAvg is the identity server optimiser.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServerOptState(NamedTuple):
+    m: jax.Array       # (d,) first moment
+    v: jax.Array       # (d,) second moment
+    step: jax.Array    # () int32
+
+
+def init_state(d: int) -> ServerOptState:
+    return ServerOptState(
+        m=jnp.zeros((d,), jnp.float32),
+        v=jnp.zeros((d,), jnp.float32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adam_update(
+    pseudo_grad: jax.Array,
+    state: ServerOptState,
+    lr: float = 1e-2,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    eps: float = 1e-8,
+) -> tuple[jax.Array, ServerOptState]:
+    """One FedAdam step; returns (parameter increment, new state)."""
+    step = state.step + 1
+    m = b1 * state.m + (1.0 - b1) * pseudo_grad
+    v = b2 * state.v + (1.0 - b2) * jnp.square(pseudo_grad)
+    mhat = m / (1.0 - b1 ** step.astype(jnp.float32))
+    vhat = v / (1.0 - b2 ** step.astype(jnp.float32))
+    incr = lr * mhat / (jnp.sqrt(vhat) + eps)
+    return incr, ServerOptState(m, v, step)

@@ -1,0 +1,104 @@
+"""Optimisers for local client training and server-side updates.
+
+Implemented from scratch (no optax dependency): plain SGD, FedProx's
+proximal SGD (Li et al., MLSys'20), Adam for the LLM-scale examples, and
+the E-epoch local-training drivers used by the federated round (Eq. 12).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+LossFn = Callable[[Params, jax.Array], jax.Array]
+
+
+def sgd(params: Params, grads: Params, lr: float) -> Params:
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def proximal_grad(params: Params, anchor: Params, grads: Params, mu: float) -> Params:
+    """grad + mu (theta - theta_anchor): the FedProx proximal term."""
+    return jax.tree_util.tree_map(
+        lambda g, p, a: g + mu * (p - a), grads, params, anchor
+    )
+
+
+def local_sgd(
+    loss_fn: LossFn,
+    params: Params,
+    batches: jax.Array,
+    lr: float,
+) -> tuple[Params, jax.Array]:
+    """Run SGD over a (nb, bs, ...) batch stream; returns (params, mean loss)."""
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(p, batch):
+        loss, g = grad_fn(p, batch)
+        return sgd(p, g, lr), loss
+
+    params, losses = jax.lax.scan(step, params, batches)
+    return params, jnp.mean(losses)
+
+
+def proximal_local_sgd(
+    loss_fn: LossFn,
+    params: Params,
+    batches: jax.Array,
+    lr: float,
+    mu: float,
+) -> tuple[Params, jax.Array]:
+    """FedProx local solver: SGD on F_i(theta) + mu/2 ||theta - theta^t||^2."""
+    anchor = params
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(p, batch):
+        loss, g = grad_fn(p, batch)
+        g = proximal_grad(p, anchor, g, mu)
+        return sgd(p, g, lr), loss
+
+    params, losses = jax.lax.scan(step, params, batches)
+    return params, jnp.mean(losses)
+
+
+class AdamState(NamedTuple):
+    mu: Params
+    nu: Params
+    count: jax.Array
+
+
+def adam_init(params: Params) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(zeros, zeros, jnp.zeros((), jnp.int32))
+
+
+def adam(
+    params: Params,
+    grads: Params,
+    state: AdamState,
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[Params, AdamState]:
+    count = state.count + 1
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads
+    )
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads
+    )
+    c = count.astype(jnp.float32)
+    mhat_scale = 1.0 / (1.0 - b1**c)
+    vhat_scale = 1.0 / (1.0 - b2**c)
+
+    def upd(p, m, v):
+        step = lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p
+        return p - step
+
+    return jax.tree_util.tree_map(upd, params, mu, nu), AdamState(mu, nu, count)

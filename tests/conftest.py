@@ -1,0 +1,23 @@
+import jax
+import pytest
+
+from repro.core import channel as ch
+from repro.core import energy as en
+from repro.core import topology as topo
+
+
+@pytest.fixture(scope="session")
+def cparams() -> ch.ChannelParams:
+    return ch.ChannelParams()
+
+
+@pytest.fixture(scope="session")
+def eparams() -> en.EnergyParams:
+    return en.EnergyParams()
+
+
+@pytest.fixture(scope="session")
+def small_deployment():
+    params = topo.DeploymentParams(n_sensors=24, n_fog=5)
+    dep = topo.sample_deployment(jax.random.key(7), params)
+    return dep, params

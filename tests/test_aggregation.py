@@ -1,0 +1,90 @@
+"""Tests for hierarchical aggregation operators (Eqs. 13, 15, 16)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import aggregation as agg
+from repro.core import cooperation as coop
+
+
+def test_fog_aggregate_matches_manual():
+    updates = jnp.arange(12.0).reshape(6, 2)
+    fog_id = jnp.array([0, 0, 1, 1, 1, 2], jnp.int32)
+    weights = jnp.array([1.0, 3.0, 2.0, 2.0, 0.0, 5.0])
+    out, fog_w = agg.fog_aggregate(updates, fog_id, weights, n_fog=4)
+    np.testing.assert_allclose(np.asarray(fog_w), [4.0, 4.0, 5.0, 0.0])
+    m0 = (1 * updates[0] + 3 * updates[1]) / 4
+    m1 = (2 * updates[2] + 2 * updates[3]) / 4
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(m0), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(m1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[3]), 0.0)  # empty cluster
+
+
+def test_cooperative_mix_identity_for_noncooperating():
+    models = jnp.arange(8.0).reshape(4, 2)
+    d = coop.no_cooperation(jnp.zeros((4, 3)))
+    mixed = agg.cooperative_mix(models, d)
+    np.testing.assert_array_equal(np.asarray(mixed), np.asarray(models))
+
+
+def test_cooperative_mix_convex_combination():
+    models = jnp.array([[0.0], [10.0]])
+    d = coop.CoopDecision(
+        partner=jnp.array([1, 1], jnp.int32),
+        self_weight=jnp.array([0.8, 1.0]),
+        partner_weight=jnp.array([0.2, 0.0]),
+        cooperates=jnp.array([True, False]),
+        dist_m=jnp.zeros((2,)),
+    )
+    mixed = agg.cooperative_mix(models, d)
+    np.testing.assert_allclose(np.asarray(mixed), [[2.0], [10.0]])
+
+
+def test_global_aggregate_weighted():
+    models = jnp.array([[1.0], [2.0], [3.0]])
+    w = jnp.array([1.0, 1.0, 2.0])
+    out = agg.global_aggregate(models, w)
+    np.testing.assert_allclose(np.asarray(out), [(1 + 2 + 6) / 4.0])
+
+
+def test_hierarchy_equals_flat_when_weights_consistent():
+    """Two-level weighted mean == one-level weighted mean (associativity of
+    weighted averages) — the algebraic fact the paper's Eq. 13+16 rely on."""
+    key = jax.random.key(5)
+    updates = jax.random.normal(key, (10, 3))
+    weights = jax.random.uniform(jax.random.fold_in(key, 1), (10,)) + 0.1
+    fog_id = jnp.array([0, 1, 2, 0, 1, 2, 0, 1, 2, 0], jnp.int32)
+    fog_up, fog_w = agg.fog_aggregate(updates, fog_id, weights, 3)
+    two_level = agg.global_aggregate(fog_up, fog_w)
+    flat = agg.weighted_mean(updates, weights)
+    np.testing.assert_allclose(np.asarray(two_level), np.asarray(flat), rtol=1e-5)
+
+
+def test_hierarchical_mean_shard_map_matches_flat():
+    """Mesh two-level reduction == flat weighted mean on a 1x1 mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    update = jnp.arange(4.0)
+    weight = jnp.float32(2.0)
+
+    def f(u, w):
+        return agg.hierarchical_mean(u, w, intra_axis="data", inter_axis="pod")
+
+    out = jax.shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_vma=False
+    )(update, weight)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(update))
+
+
+def test_ring_mix_single_device_identity():
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("pod",))
+    x = jnp.arange(3.0)
+    out = jax.shard_map(
+        lambda u: agg.ring_mix(u, 0.3, axis="pod"),
+        mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False,
+    )(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))

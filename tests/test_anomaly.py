@@ -1,0 +1,69 @@
+"""Tests for anomaly scoring, calibration (Eq. 32), F1 and PA-F1."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anomaly
+
+
+def test_reconstruction_error_is_squared_l2():
+    x = jnp.array([[1.0, 2.0], [0.0, 0.0]])
+    err = anomaly.reconstruction_errors(lambda p, a: a * 0.0, None, x)
+    np.testing.assert_allclose(np.asarray(err), [5.0, 0.0])
+
+
+def test_threshold_is_percentile():
+    errors = jnp.arange(100.0)
+    tau = anomaly.calibrate_threshold(errors, 99.0)
+    assert float(tau) == pytest.approx(98.01, abs=0.1)
+
+
+def test_flagging():
+    pred = anomaly.flag_anomalies(jnp.array([0.5, 2.0]), jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(pred), [False, True])
+
+
+def test_pointwise_f1_hand_case():
+    pred = jnp.array([1, 0, 1, 1, 0], bool)
+    label = jnp.array([1, 1, 0, 1, 0], bool)
+    r = anomaly.pointwise_f1(pred, label)
+    # tp=2 fp=1 fn=1 -> P=2/3 R=2/3 F1=2/3
+    assert float(r.f1) == pytest.approx(2 / 3, abs=1e-6)
+
+
+def test_point_adjust_credits_whole_segment():
+    label = jnp.array([0, 1, 1, 1, 0, 1, 1, 0], bool)
+    pred = jnp.array([0, 0, 1, 0, 0, 0, 0, 0], bool)
+    adj = anomaly.point_adjust(pred, label)
+    # first segment fully credited, second untouched, outside unchanged
+    np.testing.assert_array_equal(
+        np.asarray(adj), [0, 1, 1, 1, 0, 0, 0, 0]
+    )
+
+
+def test_point_adjust_keeps_false_positives():
+    label = jnp.array([0, 0, 1, 1], bool)
+    pred = jnp.array([1, 0, 0, 1], bool)
+    adj = anomaly.point_adjust(pred, label)
+    np.testing.assert_array_equal(np.asarray(adj), [1, 0, 1, 1])
+
+
+def test_pa_f1_at_least_pointwise():
+    """PA is strictly more generous than point-wise (paper Sec. VI-F)."""
+    rng = np.random.default_rng(0)
+    label = jnp.asarray(rng.random(200) < 0.2)
+    pred = jnp.asarray(rng.random(200) < 0.3)
+    pw = anomaly.pointwise_f1(pred, label)
+    pa = anomaly.point_adjusted_f1(pred, label)
+    assert float(pa.f1) >= float(pw.f1) - 1e-9
+
+
+def test_evaluate_detector_perfect_separation():
+    """An oracle reconstruction separates anomalies exactly -> F1 == 1."""
+    val = jnp.zeros((64, 4))
+    test = jnp.concatenate([jnp.zeros((32, 4)), jnp.ones((8, 4)) * 10], axis=0)
+    label = jnp.concatenate([jnp.zeros((32,), bool), jnp.ones((8,), bool)])
+    r = anomaly.evaluate_detector(
+        lambda p, x: jnp.zeros_like(x), None, val, test, label
+    )
+    assert float(r.f1) == pytest.approx(1.0)

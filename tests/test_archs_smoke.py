@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests: REDUCED config (<=2 layers, d_model<=512,
+<=4 experts), one forward/train step on CPU, shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import api
+
+ARCHS = configs.model_archs()
+DECODE_ARCHS = ARCHS  # every assigned arch has a decoder path
+
+
+def _batch(key, cfg, b=2, s=16):
+    if cfg.n_visual_tokens > 0:
+        # Visual embeddings occupy the first n_visual_tokens positions;
+        # keep at least `s` text positions carrying loss.
+        s = s + cfg.n_visual_tokens
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jax.random.normal(
+            key, (b, cfg.n_audio_frames, cfg.d_model), cfg.dtype
+        )
+    if cfg.n_visual_tokens > 0:
+        batch["visual_embeds"] = jax.random.normal(
+            key, (b, cfg.n_visual_tokens, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = configs.get(arch, reduced=True)
+    # recurrentgemma keeps 3 layers to preserve the 1:2 local-attn:RG-LRU
+    # block pattern; everything else is <= 2.
+    assert cfg.n_layers <= (3 if cfg.family == "hybrid" else 2)
+    assert cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config must carry the exact published spec."""
+    spec = {
+        "whisper_medium": dict(n_layers=24, d_model=1024, n_heads=16, vocab_size=51865),
+        "qwen3_14b": dict(n_layers=40, d_model=5120, n_heads=40, vocab_size=151936),
+        "qwen2_moe_a2_7b": dict(n_layers=24, d_model=2048, n_heads=16, vocab_size=151936, n_experts=60),
+        "grok_1_314b": dict(n_layers=64, d_model=6144, n_heads=48, vocab_size=131072, n_experts=8),
+        "gemma2_27b": dict(n_layers=46, d_model=4608, n_heads=32, vocab_size=256000),
+        "internvl2_26b": dict(n_layers=48, d_model=6144, n_heads=48, vocab_size=92553),
+        "llama3_8b": dict(n_layers=32, d_model=4096, n_heads=32, vocab_size=128256),
+        "recurrentgemma_2b": dict(n_layers=26, d_model=2560, n_heads=10, vocab_size=256000),
+        "mamba2_2_7b": dict(n_layers=64, d_model=2560, vocab_size=50280),
+        "qwen3_32b": dict(n_layers=64, d_model=5120, n_heads=64, vocab_size=151936),
+    }[arch]
+    cfg = configs.get(arch)
+    for k, v in spec.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = configs.get(arch, reduced=True)
+    key = jax.random.key(0)
+    params = api.init_params(key, cfg)
+    batch = _batch(jax.random.fold_in(key, 1), cfg)
+    step = api.make_train_step(cfg)
+    new_params, loss = jax.jit(step)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    # params updated in place structurally
+    assert jax.tree_util.tree_structure(new_params) == jax.tree_util.tree_structure(params)
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_decreases_over_steps(arch):
+    """A few steps on a repeated batch must reduce the loss (learnability)."""
+    cfg = configs.get(arch, reduced=True)
+    key = jax.random.key(1)
+    params = api.init_params(key, cfg)
+    batch = _batch(jax.random.fold_in(key, 2), cfg, b=2, s=16)
+    step = jax.jit(api.make_train_step(cfg))
+    first = None
+    for _ in range(5):
+        params, loss = step(params, batch)
+        first = float(loss) if first is None else first
+    assert float(loss) < first, f"{arch}: {first} -> {float(loss)}"
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = configs.get(arch, reduced=True)
+    key = jax.random.key(2)
+    params = api.init_params(key, cfg)
+    cache = api.init_cache(cfg, 2, 32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    step = jax.jit(api.make_serve_step(cfg))
+    cache2, logits = step(params, cache, tok)
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+    assert jax.tree_util.tree_structure(cache2) == jax.tree_util.tree_structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["gemma2_27b", "recurrentgemma_2b", "mamba2_2_7b"])
+def test_long_context_decode_smoke(arch):
+    """Sub-quadratic archs must also run the long-context decode path."""
+    cfg = configs.get(arch, reduced=True)
+    key = jax.random.key(3)
+    params = api.init_params(key, cfg)
+    cache = api.init_cache(cfg, 1, 64, long_context=True)
+    step = jax.jit(api.make_serve_step(cfg, long_context=True))
+    cache2, logits = step(params, cache, jnp.zeros((1, 1), jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_shapes(arch):
+    cfg = configs.get(arch)
+    for shape in configs.SHAPES.values():
+        ok, reason = api.supports_shape(cfg, shape)
+        if not ok:
+            assert shape.name == "long_500k" and reason
+            continue
+        specs = api.input_specs(cfg, shape)
+        assert "tokens" in specs
+        b = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            assert specs["tokens"].shape == (b, shape.seq_len)
+        else:
+            assert specs["tokens"].shape == (b, 1)
+
+
+def test_param_counts_in_published_ballpark():
+    """Sanity: total parameter counts should be near the model names."""
+    expect = {
+        "llama3_8b": (7e9, 9.5e9),
+        "qwen3_14b": (13e9, 16e9),
+        "qwen3_32b": (30e9, 35e9),
+        "gemma2_27b": (25e9, 30e9),
+        "grok_1_314b": (280e9, 340e9),
+        "mamba2_2_7b": (2.2e9, 3.2e9),
+        "recurrentgemma_2b": (2e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n:.3e} not in ({lo:.1e}, {hi:.1e})"

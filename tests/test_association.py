@@ -1,0 +1,56 @@
+"""Tests for feasibility-aware association (Sec. IV-E / V-B)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import association as assoc
+from repro.core import channel as ch
+from repro.core import participation as part
+
+
+def test_flat_association_matches_manual_feasibility(small_deployment, cparams):
+    dep, _ = small_deployment
+    fa = assoc.flat_association(dep, cparams)
+    d = np.linalg.norm(
+        np.asarray(dep.sensor_pos) - np.asarray(dep.gateway_pos)[None], axis=-1
+    )
+    rmax = float(ch.max_feasible_range_m(cparams))
+    np.testing.assert_array_equal(np.asarray(fa.participates), d <= rmax)
+    np.testing.assert_allclose(np.asarray(fa.dist_m), d, rtol=1e-5)
+
+
+def test_nearest_fog_is_nearest_among_feasible(small_deployment, cparams):
+    dep, _ = small_deployment
+    fa = assoc.nearest_feasible_fog(dep, cparams)
+    d_sf = np.asarray(ch.pairwise_distances(dep.sensor_pos, dep.fog_pos))
+    feas = np.asarray(ch.feasible(jnp.asarray(d_sf), cparams))
+    for i in range(d_sf.shape[0]):
+        if not feas[i].any():
+            assert not bool(fa.participates[i])
+            continue
+        masked = np.where(feas[i], d_sf[i], np.inf)
+        assert int(fa.fog_id[i]) == int(np.argmin(masked))
+        assert float(fa.dist_m[i]) == float(d_sf[i, int(fa.fog_id[i])])
+
+
+def test_cluster_sizes_count_participants_only(small_deployment, cparams):
+    dep, _ = small_deployment
+    fa = assoc.nearest_feasible_fog(dep, cparams)
+    assert int(jnp.sum(fa.cluster_size)) == int(jnp.sum(fa.participates))
+
+
+def test_fog_reachability_dominates_direct(small_deployment, cparams):
+    """The paper's Fig. 5 structural claim: fog-assisted reachability >=
+    direct gateway reachability (fogs are mid-water, strictly closer)."""
+    dep, _ = small_deployment
+    r = part.reachability(dep, cparams)
+    assert float(r.fog_assisted) >= float(r.direct_gateway)
+
+
+def test_participation_fraction():
+    mask = jnp.array([True, False, True, True])
+    assert float(part.participation_fraction(mask)) == 0.75
+
+
+def test_energy_per_participant():
+    mask = jnp.array([True, False, True, False])
+    assert float(part.energy_per_participant(jnp.float32(10.0), mask)) == 5.0

@@ -1,0 +1,128 @@
+"""Unit + property tests for the underwater acoustic channel (Sec. III-B/C)."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import channel as ch
+
+
+def test_thorp_at_12khz_matches_closed_form():
+    # Eq. 2 evaluated by hand at f = 12 kHz.
+    f = 12.0
+    f2 = f * f
+    expected = 0.11 * f2 / (1 + f2) + 44 * f2 / (4100 + f2) + 2.75e-4 * f2 + 0.003
+    got = float(ch.thorp_absorption_db_per_km(f))
+    np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+
+def test_thorp_increases_with_frequency():
+    f = jnp.linspace(1.0, 100.0, 64)
+    a = ch.thorp_absorption_db_per_km(f)
+    assert bool(jnp.all(jnp.diff(a) > 0))
+
+
+def test_transmission_loss_monotone_in_distance():
+    d = jnp.linspace(1.0, 10_000.0, 256)
+    tl = ch.transmission_loss_db(d, 12.0)
+    assert bool(jnp.all(jnp.diff(tl) > 0))
+
+
+def test_transmission_loss_at_reference_distance_is_zero_spreading():
+    # At d = 1 m the spreading term vanishes; only absorption d/1000 remains.
+    tl = float(ch.transmission_loss_db(1.0, 12.0))
+    alpha = float(ch.thorp_absorption_db_per_km(12.0))
+    np.testing.assert_allclose(tl, alpha / 1000.0, atol=1e-6)
+
+
+def test_sub_metre_distances_clipped():
+    assert float(ch.transmission_loss_db(0.01, 12.0)) == pytest.approx(
+        float(ch.transmission_loss_db(1.0, 12.0))
+    )
+
+
+def test_wenz_noise_all_components_positive_contribution():
+    # Total PSD must exceed each individual component (linear-scale sum).
+    f = 12.0
+    total = float(ch.wenz_noise_psd_db(f))
+    logf = np.log10(f)
+    n_wind = 50 + 7.5 * np.sqrt(5.0) + 20 * logf - 40 * np.log10(f + 0.4)
+    assert total > n_wind  # wind dominates at 12 kHz but total is larger
+
+
+def test_wenz_wind_increases_noise():
+    lo = float(ch.wenz_noise_psd_db(12.0, wind_m_s=0.0))
+    hi = float(ch.wenz_noise_psd_db(12.0, wind_m_s=15.0))
+    assert hi > lo
+
+
+def test_snr_at_min_source_level_equals_target(cparams):
+    """Eq. 5 must invert Eq. 4: SNR(SL_min, d) == gamma_tgt exactly."""
+    d = jnp.array([10.0, 100.0, 1000.0, 3000.0])
+    sl_min = ch.min_source_level_db(d, cparams)
+    snr = ch.snr_db(sl_min, d, cparams)
+    np.testing.assert_allclose(
+        np.asarray(snr), cparams.gamma_tgt_db, rtol=1e-5
+    )
+
+
+def test_feasibility_is_distance_threshold(cparams):
+    """Feasibility must be monotone: feasible at d implies feasible closer."""
+    rmax = float(ch.max_feasible_range_m(cparams))
+    assert 100.0 < rmax < 50_000.0
+    assert bool(ch.feasible(rmax * 0.999, cparams))
+    assert not bool(ch.feasible(rmax * 1.001, cparams))
+
+
+def test_higher_sl_cap_extends_range(cparams):
+    r1 = float(ch.max_feasible_range_m(cparams))
+    r2 = float(ch.max_feasible_range_m(cparams.replace(sl_max_db=160.0)))
+    assert r2 > r1
+
+
+def test_shannon_rate_matches_formula(cparams):
+    expected = 4000.0 * np.log2(1.0 + 10.0)  # B log2(1 + 10^(10/10))
+    np.testing.assert_allclose(
+        float(ch.shannon_rate_bps(cparams)), expected, rtol=1e-6
+    )
+
+
+def test_propagation_delay():
+    np.testing.assert_allclose(
+        float(ch.propagation_delay_s(1500.0)), 1.0, rtol=1e-6
+    )
+
+
+def test_pairwise_distances_against_numpy():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(7, 3)).astype(np.float32)
+    b = rng.normal(size=(5, 3)).astype(np.float32)
+    got = np.asarray(ch.pairwise_distances(jnp.asarray(a), jnp.asarray(b)))
+    want = np.linalg.norm(a[:, None] - b[None, :], axis=-1)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.floats(min_value=1.0, max_value=20_000.0),
+    f=st.floats(min_value=1.0, max_value=60.0),
+    gamma=st.floats(min_value=0.0, max_value=20.0),
+)
+def test_property_sl_min_inverts_snr(d, f, gamma):
+    p = ch.ChannelParams(freq_khz=f, gamma_tgt_db=gamma)
+    sl = float(ch.min_source_level_db(jnp.float32(d), p))
+    snr = float(ch.snr_db(jnp.float32(sl), jnp.float32(d), p))
+    assert snr == pytest.approx(gamma, abs=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d1=st.floats(min_value=1.0, max_value=10_000.0),
+    d2=st.floats(min_value=1.0, max_value=10_000.0),
+)
+def test_property_tl_monotone(d1, d2):
+    lo, hi = sorted((d1, d2))
+    tl_lo = float(ch.transmission_loss_db(jnp.float32(lo), 12.0))
+    tl_hi = float(ch.transmission_loss_db(jnp.float32(hi), 12.0))
+    assert tl_lo <= tl_hi + 1e-6

@@ -1,0 +1,51 @@
+"""Tests for the npz pytree checkpoint store."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore, load_pytree, save_pytree
+
+
+@pytest.fixture
+def tree():
+    return {
+        "layer": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((3,))},
+        "scale": jnp.float32(2.5),
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    restored = load_pytree(path, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(restored), jax.tree_util.tree_leaves(tree)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_raises(tmp_path, tree):
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    bad = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape + (1,)), tree)
+    with pytest.raises(ValueError):
+        load_pytree(path, bad)
+
+
+def test_store_retention_and_latest(tmp_path, tree):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        store.save(step, tree)
+    assert store.steps() == [3, 4]
+    assert store.latest_step() == 4
+    restored, step = store.restore(tree)
+    assert step == 4
+    restored, step = store.restore(tree, step=3)
+    assert step == 3
+
+
+def test_store_empty_raises(tmp_path, tree):
+    store = CheckpointStore(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        store.restore(tree)

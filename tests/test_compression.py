@@ -1,0 +1,145 @@
+"""Tests for the Top-K + error-feedback + int8 compression pipeline (Sec. V-C)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import compression as comp
+
+
+def _rand_tree(key, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (32, 16)) * scale,
+        "b1": jax.random.normal(k2, (16,)) * scale,
+        "w2": jax.random.normal(k3, (16, 32)) * scale,
+    }
+
+
+def test_payload_bits_matches_paper_example():
+    """Paper Sec. V-C: d~1350, b_idx=11, rho_s=0.05 -> ~1.3 kbit payload."""
+    d = 1350
+    cfg = comp.CompressorConfig(rho_s=0.05, quant_bits=8)
+    bits = comp.payload_bits(d, cfg)
+    k = round(0.05 * d)
+    assert bits == k * (8 + 11)
+    assert 1200 < bits < 1400          # ~1.3 kbit
+    dense = comp.payload_bits(d, comp.CompressorConfig(rho_s=1.0, quant_bits=32))
+    assert dense == 32 * d             # ~43 kbit
+    assert 0.025 < bits / dense < 0.035  # effective rho ~ 0.03
+
+
+def test_disabled_compressor_is_identity():
+    cfg = comp.CompressorConfig(rho_s=1.0, quant_bits=32)
+    tree = _rand_tree(jax.random.key(0))
+    err = comp.init_error(tree)
+    recon, new_err = comp.compress_update(tree, err, cfg)
+    for a, b in zip(jax.tree_util.tree_leaves(recon), jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(new_err), 0.0)
+
+
+def test_error_feedback_invariant_sparsify_only():
+    """Eq. 30 with no quantisation: recon + err' == delta + err exactly."""
+    cfg = comp.CompressorConfig(rho_s=0.1, quant_bits=32)
+    tree = _rand_tree(jax.random.key(1))
+    err = comp.init_error(tree) + 0.05
+    recon, new_err = comp.compress_update(tree, err, cfg)
+    flat_recon = jax.flatten_util.ravel_pytree(recon)[0]
+    flat_delta = jax.flatten_util.ravel_pytree(tree)[0]
+    np.testing.assert_allclose(
+        np.asarray(flat_recon + new_err),
+        np.asarray(flat_delta + err),
+        atol=1e-6,
+    )
+
+
+def test_error_feedback_absorbs_quantisation_residual():
+    cfg = comp.CompressorConfig(rho_s=0.1, quant_bits=8)
+    tree = _rand_tree(jax.random.key(2))
+    err = comp.init_error(tree)
+    recon, new_err = comp.compress_update(tree, err, cfg)
+    flat_recon = jax.flatten_util.ravel_pytree(recon)[0]
+    flat_delta = jax.flatten_util.ravel_pytree(tree)[0]
+    np.testing.assert_allclose(
+        np.asarray(flat_recon + new_err), np.asarray(flat_delta), atol=1e-5
+    )
+
+
+def test_topk_keeps_largest():
+    v = jnp.array([0.1, -5.0, 0.3, 4.0, -0.2, 0.05])
+    sparse, err = comp._global_topk_ef(v, 2)
+    np.testing.assert_allclose(
+        np.asarray(sparse), [0, -5.0, 0, 4.0, 0, 0], atol=1e-7
+    )
+    np.testing.assert_allclose(np.asarray(sparse + err), np.asarray(v), atol=1e-7)
+
+
+def test_quantise_bounds_relative_error():
+    x = jax.random.normal(jax.random.key(3), (512,))
+    q = comp._quantize_global(x, 8)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(q - x))) <= amax / 127.0 * 0.5 + 1e-6
+
+
+def test_compression_ratio_example():
+    cfg = comp.CompressorConfig(rho_s=0.05, quant_bits=8)
+    rho = comp.compression_ratio(1350, cfg)
+    assert 0.025 < rho < 0.035
+
+
+def test_blockwise_mode_matches_ef_semantics():
+    cfg = comp.CompressorConfig(rho_s=0.05, quant_bits=8, mode="blockwise")
+    tree = _rand_tree(jax.random.key(4))
+    err = comp.init_error(tree)
+    recon, new_err = comp.compress_update(tree, err, cfg)
+    flat_recon = jax.flatten_util.ravel_pytree(recon)[0]
+    flat_delta = jax.flatten_util.ravel_pytree(tree)[0]
+    np.testing.assert_allclose(
+        np.asarray(flat_recon + new_err), np.asarray(flat_delta), atol=1e-5
+    )
+
+
+def test_ef_conserves_information_over_rounds():
+    """Telescoping EF invariant: after T rounds of compressing the same
+    update, sum(reconstructions) + final_err == T * delta exactly — no
+    gradient information is ever lost (Sec. V-C / [48])."""
+    cfg = comp.CompressorConfig(rho_s=0.34, quant_bits=32)
+    delta = jnp.array([1.0, 0.01, 0.5])  # rho*3 ~ 1 coord per round
+    err = jnp.zeros((3,))
+    total_recon = jnp.zeros((3,))
+    for _ in range(60):
+        recon, err = comp.compress_update(delta, err, cfg)
+        total_recon = total_recon + jax.flatten_util.ravel_pytree(recon)[0]
+    np.testing.assert_allclose(
+        np.asarray(total_recon + err), np.asarray(delta) * 60, rtol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    rho=st.sampled_from([0.02, 0.05, 0.2, 0.5]),
+    bits=st.sampled_from([8, 32]),
+)
+def test_property_ef_invariant(seed, rho, bits):
+    """recon + err' == delta + err for every (rho, bits) configuration."""
+    cfg = comp.CompressorConfig(rho_s=rho, quant_bits=bits)
+    key = jax.random.key(seed)
+    delta = jax.random.normal(key, (257,))
+    err = jax.random.normal(jax.random.fold_in(key, 1), (257,)) * 0.1
+    recon, new_err = comp.compress_update(delta, err, cfg)
+    flat = jax.flatten_util.ravel_pytree(recon)[0]
+    np.testing.assert_allclose(
+        np.asarray(flat + new_err), np.asarray(delta + err), atol=2e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(min_value=2, max_value=100_000))
+def test_property_payload_monotone_in_d(d):
+    cfg = comp.CompressorConfig(rho_s=0.05, quant_bits=8)
+    assert comp.payload_bits(d, cfg) <= comp.payload_bits(d, comp.CompressorConfig())
+    assert comp.payload_bits(d, cfg) < 32.0 * d

@@ -1,0 +1,134 @@
+"""Tests for the fog cooperation rules (Eqs. 14, 28-29)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel as ch
+from repro.core import cooperation as coop
+
+
+@pytest.fixture(scope="module")
+def fog_setup(cparams):
+    key = jax.random.key(11)
+    pos = jax.random.uniform(key, (8, 3), minval=0.0, maxval=1200.0)
+    sizes = jnp.array([12, 1, 9, 2, 15, 3, 8, 0], jnp.int32)
+    return pos, sizes
+
+
+def test_nocoop_is_identity(fog_setup):
+    pos, _ = fog_setup
+    d = coop.no_cooperation(pos)
+    assert not bool(jnp.any(d.cooperates))
+    np.testing.assert_array_equal(np.asarray(d.partner), np.arange(8))
+    np.testing.assert_allclose(np.asarray(d.self_weight), 1.0)
+    np.testing.assert_allclose(np.asarray(d.partner_weight), 0.0)
+
+
+def test_mixing_rows_are_stochastic(fog_setup, cparams):
+    pos, sizes = fog_setup
+    for rule in coop.CoopRule:
+        d = coop.decide(rule, pos, sizes, cparams)
+        np.testing.assert_allclose(
+            np.asarray(d.self_weight + d.partner_weight), 1.0, rtol=1e-6
+        )
+        assert bool(jnp.all(d.self_weight >= 0))
+        assert bool(jnp.all(d.partner_weight >= 0))
+
+
+def test_nearest_uses_paper_weights(fog_setup, cparams):
+    pos, sizes = fog_setup
+    d = coop.nearest_cooperation(pos, cparams)
+    coop_mask = np.asarray(d.cooperates)
+    assert coop_mask.any()
+    np.testing.assert_allclose(
+        np.asarray(d.self_weight)[coop_mask], 0.7, rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(d.partner_weight)[coop_mask], 0.3, rtol=1e-6
+    )
+
+
+def test_nearest_picks_nearest_feasible(fog_setup, cparams):
+    pos, _ = fog_setup
+    d = coop.nearest_cooperation(pos, cparams)
+    dm = np.array(ch.pairwise_distances(pos, pos))
+    np.fill_diagonal(dm, np.inf)
+    feas = np.asarray(ch.feasible(jnp.asarray(dm), cparams))
+    for m in range(pos.shape[0]):
+        if feas[m].any():
+            masked = np.where(feas[m], dm[m], np.inf)
+            assert int(d.partner[m]) == int(np.argmin(masked))
+
+
+def test_selective_eligibility_rule(fog_setup, cparams):
+    """Eq. 28: only clusters with c_m <= max(2, 0.75 mean) may cooperate."""
+    pos, sizes = fog_setup
+    d = coop.selective_cooperation(pos, sizes, cparams)
+    c = np.asarray(sizes, np.float32)
+    mean_c = c[c > 0].mean()
+    threshold = max(2.0, 0.75 * mean_c)
+    coop_mask = np.asarray(d.cooperates)
+    # every cooperating fog is eligible and nonempty
+    assert (c[coop_mask] <= threshold).all()
+    assert (c[coop_mask] > 0).all()
+
+
+def test_selective_partner_is_larger_and_close(fog_setup, cparams):
+    pos, sizes = fog_setup
+    d = coop.selective_cooperation(pos, sizes, cparams)
+    c = np.asarray(sizes)
+    dm = np.array(ch.pairwise_distances(pos, pos))
+    np.fill_diagonal(dm, np.inf)
+    feas = np.asarray(ch.feasible(jnp.asarray(dm), cparams))
+    q1 = np.nanquantile(np.where(feas, dm, np.nan), 0.25)
+    for m in np.flatnonzero(np.asarray(d.cooperates)):
+        j = int(d.partner[m])
+        assert c[j] > c[m]
+        assert dm[m, j] < q1
+        assert feas[m, j]
+        # weights are the paper's (0.8, 0.2)
+        assert float(d.self_weight[m]) == pytest.approx(0.8)
+        assert float(d.partner_weight[m]) == pytest.approx(0.2)
+
+
+def test_selective_subset_of_nearest_energy(fog_setup, cparams):
+    """Selective must activate at most as many links as always-on."""
+    pos, sizes = fog_setup
+    ds = coop.selective_cooperation(pos, sizes, cparams)
+    dn = coop.nearest_cooperation(pos, cparams)
+    assert int(jnp.sum(ds.cooperates)) <= int(jnp.sum(dn.cooperates))
+
+
+def test_selective_all_equal_clusters_no_coop(cparams):
+    """With perfectly balanced clusters nobody passes Eq. 28 (c > 0.75 mean
+    and c > 2)."""
+    key = jax.random.key(1)
+    pos = jax.random.uniform(key, (6, 3), minval=0.0, maxval=500.0)
+    sizes = jnp.full((6,), 10, jnp.int32)
+    d = coop.selective_cooperation(pos, sizes, cparams)
+    assert not bool(jnp.any(d.cooperates))
+
+
+def test_selective_needs_larger_neighbour(cparams):
+    """A small cluster with only equal-size neighbours cannot cooperate."""
+    pos = jnp.array([[0.0, 0.0, 100.0], [100.0, 0.0, 100.0]])
+    sizes = jnp.array([1, 1], jnp.int32)
+    d = coop.selective_cooperation(pos, sizes, cparams)
+    assert not bool(jnp.any(d.cooperates))
+
+
+def test_selective_small_joins_nearby_large(cparams):
+    # Three isolated fog pairs with distinct intra-pair distances 30/50/100 m
+    # (inter-pair links are infeasible at ~2.6 km under the 140 dB cap), so
+    # the first quartile of feasible distances is 35 m and only the small
+    # fog 0 has a larger neighbour strictly inside it.
+    pos = jnp.array(
+        [[0.0, 0.0, 100.0], [30.0, 0.0, 100.0],
+         [1900.0, 0.0, 100.0], [1950.0, 0.0, 100.0],
+         [0.0, 1900.0, 100.0], [100.0, 1900.0, 100.0]]
+    )
+    sizes = jnp.array([1, 20, 10, 10, 10, 10], jnp.int32)
+    d = coop.selective_cooperation(pos, sizes, cparams)
+    assert bool(d.cooperates[0])
+    assert int(d.partner[0]) == 1

@@ -1,0 +1,110 @@
+"""Tests for the data substrate: synthetic IoUT series, benchmark
+loaders/surrogates, partitioning, batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import benchmarks, partition, pipeline
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    cfg = SyntheticConfig(n_sensors=8, train_len=64, val_len=16, test_len=48)
+    return generate(jax.random.key(0), cfg), cfg
+
+
+def test_synthetic_shapes(small_ds):
+    ds, cfg = small_ds
+    assert ds.train.shape == (8, 64, cfg.feature_dim)
+    assert ds.val.shape == (8, 16, cfg.feature_dim)
+    assert ds.test.shape == (8, 48, cfg.feature_dim)
+    assert ds.test_label.shape == (8, 48)
+    assert ds.test_label.dtype == jnp.bool_
+
+
+def test_synthetic_anomaly_rate(small_ds):
+    ds, cfg = small_ds
+    rate = float(jnp.mean(ds.test_label))
+    assert 0.3 * cfg.anomaly_rate < rate < 3.0 * cfg.anomaly_rate
+
+
+def test_anomalous_points_differ_from_normal(small_ds):
+    ds, _ = small_ds
+    # Anomalies are injected, so labeled points deviate more from the mean.
+    mean = jnp.mean(ds.train, axis=(1,), keepdims=True)
+    dev = jnp.linalg.norm(ds.test - mean, axis=-1)
+    anom = float(jnp.mean(jnp.where(ds.test_label, dev, jnp.nan), where=ds.test_label))
+    norm = float(jnp.mean(jnp.where(~ds.test_label, dev, jnp.nan), where=~ds.test_label))
+    assert anom > norm
+
+
+def test_normalize_zero_mean_unit_std(small_ds):
+    ds, _ = small_ds
+    nds = normalize(ds)
+    mu = np.asarray(jnp.mean(nds.train, axis=1))
+    sd = np.asarray(jnp.std(nds.train, axis=1))
+    np.testing.assert_allclose(mu, 0.0, atol=1e-4)
+    np.testing.assert_allclose(sd, 1.0, atol=1e-2)
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    key = jax.random.key(1)
+    p_noniid = partition.dirichlet_proportions(key, 100, 5, 0.1)
+    p_iid = partition.dirichlet_proportions(key, 100, 5, 1e4)
+    # strongly non-IID rows are peaky; near-IID rows are uniform
+    assert float(jnp.mean(jnp.max(p_noniid, 1))) > 0.6
+    assert float(jnp.mean(jnp.max(p_iid, 1))) < 0.35
+
+
+def test_contiguous_split():
+    x = jnp.arange(20.0).reshape(10, 2)
+    parts = partition.contiguous_split(x, 3)
+    assert parts.shape == (3, 3, 2)
+    np.testing.assert_array_equal(np.asarray(parts[0]), np.asarray(x[:3]))
+
+
+def test_entity_replication():
+    key = jax.random.key(2)
+    assign = partition.entities_to_sensors(key, 4, 10)
+    assert assign.shape == (10,)
+    assert int(jnp.max(assign)) <= 3
+    data = jnp.arange(8.0).reshape(4, 2)
+    rep = partition.replicate_entities(data, assign)
+    assert rep.shape == (10, 2)
+
+
+@pytest.mark.parametrize("name", ["smd", "smap", "msl"])
+def test_benchmark_surrogate_shapes(name):
+    bd = benchmarks.load(name, data_dir="/nonexistent", length=128)
+    spec = benchmarks.SPECS[name]
+    assert bd.source == "surrogate"
+    assert bd.dataset.train.shape[0] == spec.n_entities
+    assert bd.dataset.train.shape[-1] == spec.feature_dim
+    rate = float(jnp.mean(bd.dataset.test_label))
+    assert 0.2 * spec.anomaly_rate < rate < 4.0 * spec.anomaly_rate
+
+
+def test_epoch_batches_cover_data_once():
+    data = jnp.arange(32.0).reshape(16, 2)
+    b = pipeline.epoch_batches(jax.random.key(0), data, 4)
+    assert b.shape == (4, 4, 2)
+    seen = np.sort(np.asarray(b[..., 0]).reshape(-1))
+    np.testing.assert_array_equal(seen, np.asarray(data[:, 0]))
+
+
+def test_multi_epoch_batches():
+    data = jnp.arange(32.0).reshape(16, 2)
+    b = pipeline.multi_epoch_batches(jax.random.key(0), data, 4, 3)
+    assert b.shape == (12, 4, 2)
+
+
+def test_lm_batches():
+    toks = jnp.arange(1000, dtype=jnp.int32)
+    b = pipeline.lm_batches(jax.random.key(0), toks, 4, 16)
+    assert b.shape == (4, 17)
+    # windows are contiguous
+    np.testing.assert_array_equal(
+        np.diff(np.asarray(b), axis=1), 1
+    )

@@ -1,0 +1,97 @@
+"""Unit + property tests for the SNR-driven energy model (Sec. III-D)."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import channel as ch
+from repro.core import energy as en
+
+
+def test_acoustic_power_formula():
+    # Eq. 7 at SL = 140 dB.
+    sl = 140.0
+    coef = 4 * np.pi * 1e-12 / (1025.0 * 1500.0)
+    np.testing.assert_allclose(
+        float(en.acoustic_power_w(jnp.float32(sl))),
+        coef * 10 ** (sl / 10),
+        rtol=1e-5,
+    )
+
+
+def test_electrical_power_scales_with_efficiency(eparams):
+    p1 = float(en.electrical_tx_power_w(jnp.float32(120.0), eparams))
+    p2 = float(
+        en.electrical_tx_power_w(
+            jnp.float32(120.0), eparams.replace(eta_ea=0.5)
+        )
+    )
+    np.testing.assert_allclose(p1, 2.0 * p2, rtol=1e-6)
+
+
+def test_tx_energy_monotone_in_distance(cparams, eparams):
+    d = jnp.array([10.0, 100.0, 500.0, 1000.0, 2000.0])
+    e = en.tx_energy_j(1000.0, d, cparams, eparams)
+    assert bool(jnp.all(jnp.diff(e) > 0))
+
+
+def test_tx_energy_linear_in_bits(cparams, eparams):
+    e1 = float(en.tx_energy_j(1000.0, 500.0, cparams, eparams))
+    e2 = float(en.tx_energy_j(2000.0, 500.0, cparams, eparams))
+    np.testing.assert_allclose(e2, 2.0 * e1, rtol=1e-6)
+
+
+def test_infeasible_link_energy_is_inf(cparams, eparams):
+    rmax = float(ch.max_feasible_range_m(cparams))
+    assert np.isinf(
+        float(en.tx_energy_j(1000.0, rmax * 1.01, cparams, eparams))
+    )
+    assert np.isfinite(
+        float(en.tx_energy_j(1000.0, rmax * 0.99, cparams, eparams))
+    )
+
+
+def test_rx_energy(cparams, eparams):
+    rate = float(ch.shannon_rate_bps(cparams))
+    np.testing.assert_allclose(
+        float(en.rx_energy_j(1000.0, cparams, eparams)),
+        0.03 * 1000.0 / rate,
+        rtol=1e-6,
+    )
+
+
+def test_compute_energy(eparams):
+    np.testing.assert_allclose(
+        float(en.compute_energy_j(jnp.float32(1e9), eparams)), 1.0, rtol=1e-6
+    )
+
+
+def test_battery_floors_at_reserve(eparams):
+    res = jnp.array([10.0, 0.5])
+    new, alive = en.battery_step(res, jnp.array([1.0, 1.0]), eparams)
+    np.testing.assert_allclose(np.asarray(new), [9.0, 0.0])
+    assert bool(alive[0]) and not bool(alive[1])
+
+
+def test_link_latency_decomposition(cparams):
+    rate = float(ch.shannon_rate_bps(cparams))
+    got = float(en.link_latency_s(1000.0, 1500.0, cparams))
+    np.testing.assert_allclose(got, 1.0 + 1000.0 / rate, rtol=1e-6)
+
+
+def test_autoencoder_flops_counts_matmuls():
+    # 32->16->8->16->32, 1 sample, 1 epoch: 3x forward matmul cost.
+    mm = 2 * (32 * 16 + 16 * 8 + 8 * 16 + 16 * 32)
+    assert en.autoencoder_flops(32, (16, 8, 16), 1, 1) == 3 * mm
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.floats(min_value=1.0, max_value=1e7),
+    d=st.floats(min_value=1.0, max_value=3000.0),
+)
+def test_property_energy_positive_and_finite_in_range(bits, d, cparams, eparams):
+    e = float(en.tx_energy_j(bits, d, cparams, eparams))
+    assert e > 0
+    if bool(ch.feasible(jnp.float32(d), cparams)):
+        assert np.isfinite(e)

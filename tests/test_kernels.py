@@ -1,0 +1,118 @@
+"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+SIZES = [64, 1024, 1352, 4096, 8192 + 17, 65536]
+KFRACS = [0.02, 0.05, 0.25]
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("k_frac", KFRACS)
+def test_topk_ef_pallas_matches_ref(n, k_frac):
+    key = jax.random.key(n)
+    delta = jax.random.normal(key, (n,))
+    err = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.1
+    s_p, e_p = ops.topk_ef(delta, err, k_frac, use_pallas=True, interpret=True)
+    s_r, e_r = ops.topk_ef(delta, err, k_frac, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(e_p), np.asarray(e_r), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_quant8_pallas_matches_ref(n):
+    x = jax.random.normal(jax.random.key(n + 1), (n,))
+    q_p, s_p, _ = ops.quant8(x, use_pallas=True, interpret=True)
+    q_r, s_r, _ = ops.quant8(x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(q_p), np.asarray(q_r), atol=1)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 8192 + 17])
+@pytest.mark.parametrize("k_frac", KFRACS)
+def test_fused_compress_pallas_matches_ref(n, k_frac):
+    key = jax.random.key(2 * n)
+    delta = jax.random.normal(key, (n,))
+    err = jax.random.normal(jax.random.fold_in(key, 3), (n,)) * 0.1
+    r_p, e_p, b_p = ops.compress(delta, err, k_frac, use_pallas=True)
+    r_r, e_r, b_r = ops.compress(delta, err, k_frac, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(r_p), np.asarray(r_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(e_p), np.asarray(e_r), atol=1e-5)
+    assert float(b_p) == pytest.approx(float(b_r))
+
+
+def test_compress_ef_identity():
+    """recon + err' == delta + err up to int8 rounding (absorbed in err')."""
+    n = 4096
+    delta = jax.random.normal(jax.random.key(0), (n,))
+    err = jnp.zeros((n,))
+    recon, new_err, _ = ops.compress(delta, err, 0.05, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(recon + new_err), np.asarray(delta), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_ef_dtypes(dtype):
+    n = 2048
+    delta = jax.random.normal(jax.random.key(5), (n,)).astype(dtype)
+    err = jnp.zeros((n,), dtype)
+    s_p, e_p = ops.topk_ef(delta, err, 0.05, use_pallas=True)
+    s_r, e_r = ops.topk_ef(delta, err, 0.05, use_pallas=False)
+    atol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(s_p, np.float32), np.asarray(s_r, np.float32), atol=atol
+    )
+
+
+def _swa_batched(q, k_cache, v_cache, cache_len, window, **kw):
+    """The kernel is per-sequence (hq, d) x (s, hkv, d); batch via vmap,
+    exactly how models/attention.py drives it."""
+    return jax.vmap(
+        lambda qq, kk, vv, ln: ops.swa_decode_attention(
+            qq, kk, vv, ln, window, **kw
+        )
+    )(q, k_cache, v_cache, cache_len)
+
+
+@pytest.mark.parametrize("heads,kv_heads,head_dim", [(8, 8, 64), (8, 2, 64), (4, 1, 128)])
+@pytest.mark.parametrize("window", [64, 256])
+def test_swa_decode_attention_matches_ref(heads, kv_heads, head_dim, window):
+    batch, max_seq = 2, 512
+    key = jax.random.key(heads * window)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (batch, heads, head_dim))
+    k_cache = jax.random.normal(ks[1], (batch, max_seq, kv_heads, head_dim))
+    v_cache = jax.random.normal(ks[2], (batch, max_seq, kv_heads, head_dim))
+    cache_len = jnp.array([300, 77], jnp.int32)
+    out_p = _swa_batched(
+        q, k_cache, v_cache, cache_len, window, use_pallas=True, interpret=True
+    )
+    out_r = _swa_batched(
+        q, k_cache, v_cache, cache_len, window, use_pallas=False
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_p), np.asarray(out_r), atol=2e-5, rtol=1e-4
+    )
+
+
+def test_swa_attention_respects_window():
+    """Tokens outside the sliding window must not affect the output."""
+    batch, heads, kv_heads, head_dim, max_seq, window = 1, 4, 4, 32, 512, 64
+    key = jax.random.key(9)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (batch, heads, head_dim))
+    k_cache = jax.random.normal(ks[1], (batch, max_seq, kv_heads, head_dim))
+    v_cache = jax.random.normal(ks[2], (batch, max_seq, kv_heads, head_dim))
+    cache_len = jnp.array([200], jnp.int32)
+    out1 = _swa_batched(q, k_cache, v_cache, cache_len, window)
+    # Corrupt everything outside [cache_len - window, cache_len)
+    k2 = k_cache.at[:, : 200 - window].set(99.0)
+    v2 = v_cache.at[:, : 200 - window].set(-99.0)
+    k2 = k2.at[:, 200:].set(99.0)
+    v2 = v2.at[:, 200:].set(-99.0)
+    out2 = _swa_batched(q, k2, v2, cache_len, window)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)

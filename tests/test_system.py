@@ -1,0 +1,140 @@
+"""End-to-end system behaviour tests validating the paper's structural
+claims at CPU scale (small N, few rounds — directions, not magnitudes)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compression as comp
+from repro.core import hfl, topology as topo
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+from repro.launch import experiment as exp
+
+N_SENSORS = 24
+N_FOG = 5
+ROUNDS = 4
+
+
+@pytest.fixture(scope="module")
+def ds():
+    cfg = SyntheticConfig(
+        n_sensors=N_SENSORS, train_len=64, val_len=32, test_len=64
+    )
+    return normalize(generate(jax.random.key(42), cfg))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return exp.make_config(
+        n_sensors=N_SENSORS, n_fog=N_FOG, rounds=ROUNDS, local_epochs=1,
+        batch_size=16,
+    )
+
+
+@pytest.fixture(scope="module")
+def results(ds, cfg):
+    out = {}
+    for method in ("fedavg", "fedprox", "hfl-nocoop", "hfl-selective",
+                   "hfl-nearest"):
+        out[method] = exp.run_method(method, ds, cfg, seed=0)
+    return out
+
+
+def test_all_methods_learn(results):
+    for method, r in results.items():
+        assert r.losses[-1] < r.losses[0], (
+            f"{method}: loss {r.losses[0]} -> {r.losses[-1]}"
+        )
+
+
+def test_all_methods_detect(results):
+    for method, r in results.items():
+        assert r.f1 > 0.3, f"{method}: F1 {r.f1}"
+
+
+def test_hierarchy_preserves_participation(results):
+    """Paper Fig. 5: fog-assisted participation >= direct-to-gateway."""
+    for h in ("hfl-nocoop", "hfl-selective", "hfl-nearest"):
+        assert results[h].participation >= results["fedavg"].participation
+
+
+def test_flat_is_cheapest(results):
+    """Paper design rule: flat FL defines the minimum-energy point."""
+    assert results["fedavg"].e_total <= min(
+        results[h].e_total
+        for h in ("hfl-nocoop", "hfl-selective", "hfl-nearest")
+    )
+
+
+def test_energy_ordering_nocoop_selective_nearest(results):
+    """Selective adds f2f energy over NoCoop but less than always-on."""
+    assert results["hfl-nocoop"].e_f2f == 0.0
+    assert results["hfl-selective"].e_f2f <= results["hfl-nearest"].e_f2f
+    # base terms (s2f, f2g) follow the same clustering path
+    assert results["hfl-selective"].e_s2f == pytest.approx(
+        results["hfl-nocoop"].e_s2f, rel=0.2
+    )
+
+
+def test_selective_activates_fewer_links(results):
+    assert results["hfl-selective"].coop_links <= results["hfl-nearest"].coop_links
+
+
+def test_compression_reduces_energy(ds, cfg):
+    """Paper Sec. VI-D: compressed uploads cut total energy dramatically."""
+    compressed = exp.run_method("hfl-nocoop", ds, cfg, seed=0)
+    dense_cfg = cfg.replace(
+        compressor=comp.CompressorConfig(rho_s=1.0, quant_bits=32)
+    )
+    dense = exp.run_method("hfl-nocoop", ds, dense_cfg, seed=0)
+    assert compressed.e_s2f < 0.3 * dense.e_s2f
+    # detection quality preserved within a loose band
+    assert compressed.f1 > dense.f1 - 0.25
+
+
+def test_centralised_oracle_runs(ds, cfg):
+    r = exp.run_method("centralised", ds, cfg, seed=0)
+    assert r.f1 > 0.3
+    assert r.participation == 1.0
+
+
+def test_scaffold_runs(ds, cfg):
+    r = exp.run_method("scaffold", ds, cfg, seed=0)
+    assert jnp.isfinite(jnp.float32(r.losses[-1]))
+
+
+def test_battery_depletes_monotonically(ds, cfg):
+    from repro.models import autoencoder as ae
+    key = jax.random.key(0)
+    params = ae.init(key, ds.train.shape[-1], (16, 8, 16))
+    state = hfl.init_state(key, params, cfg)
+    round_fn = hfl.make_round_fn(ae.loss, ds, cfg)
+    _, metrics = jax.lax.scan(round_fn, state, None, length=ROUNDS)
+    assert bool(jnp.all(jnp.diff(metrics.battery_min) <= 1e-6))
+    assert float(metrics.battery_min[-1]) < cfg.energy.e_init_j
+
+
+def test_latency_positive(ds, cfg):
+    from repro.models import autoencoder as ae
+    key = jax.random.key(0)
+    params = ae.init(key, ds.train.shape[-1], (16, 8, 16))
+    state = hfl.init_state(key, params, cfg)
+    round_fn = hfl.make_round_fn(ae.loss, ds, cfg)
+    _, metrics = jax.lax.scan(round_fn, state, None, length=2)
+    assert float(jnp.min(metrics.latency_s)) > 0.0
+
+
+def test_seed_sweep_and_stats(ds, cfg):
+    def ds_fn(seed):
+        return ds  # same data; the sweep varies init/topology seeds
+
+    rs = exp.seed_sweep("hfl-nocoop", ds_fn, cfg, seeds=(0, 1))
+    assert len(rs) == 2
+    mean, std = exp.mean_std([r.f1 for r in rs])
+    assert 0.0 <= mean <= 1.0 and std >= 0.0
+
+
+def test_fog_mobility_changes_topology(cfg):
+    key = jax.random.key(0)
+    dep = topo.sample_deployment(key, cfg.deployment)
+    dep2 = topo.gauss_markov_step(jax.random.key(1), dep, cfg.deployment)
+    assert float(jnp.max(jnp.abs(dep2.fog_pos - dep.fog_pos))) > 0.0

@@ -1,0 +1,63 @@
+"""Tests for the stratified 3D deployment + Gauss-Markov fog mobility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topo
+
+
+def _in_stratum(pos, params, depth):
+    ok_xy = (
+        bool(jnp.all(pos[:, 0] >= 0))
+        and bool(jnp.all(pos[:, 0] <= params.lx_m))
+        and bool(jnp.all(pos[:, 1] >= 0))
+        and bool(jnp.all(pos[:, 1] <= params.ly_m))
+    )
+    ok_z = bool(jnp.all(pos[:, 2] >= depth[0])) and bool(
+        jnp.all(pos[:, 2] <= depth[1])
+    )
+    return ok_xy and ok_z
+
+
+def test_deployment_respects_strata(small_deployment):
+    dep, params = small_deployment
+    assert dep.sensor_pos.shape == (params.n_sensors, 3)
+    assert dep.fog_pos.shape == (params.n_fog, 3)
+    assert _in_stratum(dep.sensor_pos, params, params.sensor_depth)
+    assert _in_stratum(dep.fog_pos, params, params.fog_depth)
+    np.testing.assert_allclose(
+        np.asarray(dep.gateway_pos), [1000.0, 1000.0, 0.0]
+    )
+
+
+def test_gauss_markov_keeps_fogs_in_bounds(small_deployment):
+    dep, params = small_deployment
+    key = jax.random.key(3)
+    for _ in range(50):
+        key, k = jax.random.split(key)
+        dep = topo.gauss_markov_step(k, dep, params)
+    assert _in_stratum(dep.fog_pos, params, params.fog_depth)
+
+
+def test_gauss_markov_moves_fogs_but_not_sensors(small_deployment):
+    dep, params = small_deployment
+    dep2 = topo.gauss_markov_step(jax.random.key(0), dep, params)
+    assert bool(jnp.all(dep2.sensor_pos == dep.sensor_pos))
+    assert not bool(jnp.all(dep2.fog_pos == dep.fog_pos))
+
+
+def test_gauss_markov_speed_scale(small_deployment):
+    """Expected per-round displacement ~ speed * interval; check the order."""
+    dep, params = small_deployment
+    dep2 = topo.gauss_markov_step(jax.random.key(1), dep, params)
+    disp = jnp.linalg.norm(dep2.fog_pos - dep.fog_pos, axis=-1)
+    # sigma=0.5 m/s, 60 s round => tens of metres, not km.
+    assert float(jnp.max(disp)) < 10.0 * params.fog_speed_m_s * params.round_interval_s
+
+
+def test_deployment_is_pytree(small_deployment):
+    dep, _ = small_deployment
+    leaves = jax.tree_util.tree_leaves(dep)
+    assert len(leaves) == 4
+    dep2 = jax.tree_util.tree_map(lambda x: x + 0.0, dep)
+    assert isinstance(dep2, topo.Deployment)
