@@ -27,6 +27,7 @@ THRESHOLDS = (0.25, 0.5, 0.75, 1.0, 1.5)
 
 
 def _rho_sweep(scale: common.Scale) -> list[dict]:
+    eng = common.get_engine()
     rows = []
     n_train = scale.train_n[100]
     for rho in RHOS:
@@ -34,20 +35,22 @@ def _rho_sweep(scale: common.Scale) -> list[dict]:
         audit_cfg = exp.make_config(
             n_sensors=200, n_fog=20, rounds=20, compressor=cc
         )
-        e = common.mean_std(
-            [exp.audit_method("hfl-nocoop", audit_cfg, seed=s)["e_total"]
-             for s in (0, 1, 2)]
-        )[0]
-        f1s = []
+        # One compiled program per cell: all audit seeds batched.
+        audit = eng.audit(
+            "hfl-nocoop", audit_cfg, (0, 1, 2), label=f"rho={rho}:audit"
+        )
+        e = float(jnp.mean(audit["e_total"]))
         train_cfg = exp.make_config(
             n_sensors=n_train, n_fog=max(4, n_train // 6),
             rounds=scale.rounds, local_epochs=scale.local_epochs,
             compressor=cc,
         )
-        for s in scale.seeds:
-            ds = common.make_dataset(400 + s, n_train, scale)
-            f1s.append(exp.run_method("hfl-nocoop", ds, train_cfg, seed=s).f1)
-        f1m, f1sd = common.mean_std(f1s)
+        r = eng.run(
+            "hfl-nocoop", train_cfg, scale.seeds,
+            lambda s: common.make_dataset(400 + s, n_train, scale),
+            label=f"rho={rho}:train",
+        )
+        f1m, f1sd = r.seed_mean_std("f1")
         rows.append(dict(
             rho_s=rho,
             payload_bits=comp.payload_bits(1352, cc),
@@ -100,8 +103,12 @@ def _threshold_sweep() -> list[dict]:
 
 
 def run(scale: common.Scale) -> dict:
-    return {"rho_sweep": _rho_sweep(scale),
-            "threshold_sweep": _threshold_sweep()}
+    eng = common.get_engine()
+    eng.take_log()  # drop entries from earlier modules
+    res = {"rho_sweep": _rho_sweep(scale),
+           "threshold_sweep": _threshold_sweep()}
+    res["engine"] = common.engine_snapshot(eng.take_log())
+    return res
 
 
 def report(res: dict) -> str:
@@ -122,4 +129,11 @@ def report(res: dict) -> str:
         )
     lines.append("  (paper fixes factor=0.75 — the knee where links stay"
                  " few but imbalanced clusters are still served)")
+    eng = res.get("engine")
+    if eng:
+        lines.append(
+            f"engine: {eng['compiled_programs_new']} compiled programs vs "
+            f"{eng['sequential_program_equivalent']} sequential traces, "
+            f"{eng['wall_s_total']:.1f}s batched wall"
+        )
     return "\n".join(lines)

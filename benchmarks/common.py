@@ -20,6 +20,37 @@ from repro.data.synthetic import SyntheticConfig, generate, normalize
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 
+_ENGINE = None
+
+
+def get_engine():
+    """The benchmark-wide shared :class:`repro.engine.Engine`.
+
+    Shared so the program cache spans modules: the same (method, config,
+    batch) cell compiled for one table is reused by the next.
+    """
+    global _ENGINE
+    if _ENGINE is None:
+        from repro.engine import Engine
+
+        _ENGINE = Engine()
+    return _ENGINE
+
+
+def engine_snapshot(log: list[dict]) -> dict:
+    """Summarise a drained ``Engine.take_log()`` for the bench JSON.
+
+    ``sequential_program_equivalent`` is what the pre-engine harness would
+    have traced: one program per (cell, trial), since each sequential
+    ``train`` call rebuilt its round closure.
+    """
+    return {
+        "cells": log,
+        "compiled_programs_new": sum(1 for e in log if e["fresh_compile"]),
+        "sequential_program_equivalent": sum(e["n_trials"] for e in log),
+        "wall_s_total": sum(e["wall_s"] for e in log),
+    }
+
 
 @dataclasses.dataclass(frozen=True)
 class Scale:

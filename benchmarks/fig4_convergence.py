@@ -12,21 +12,28 @@ METHODS = ("fedprox", "hfl-nocoop", "hfl-selective", "hfl-nearest")
 
 
 def run(scale: common.Scale) -> dict:
+    import numpy as np
+
+    eng = common.get_engine()
+    eng.take_log()
     n = scale.train_n[150]
     cfg = exp.make_config(
         n_sensors=n, n_fog=max(4, n // 6), rounds=max(8, scale.rounds),
         local_epochs=scale.local_epochs,
     )
+    ds_stack = eng.stack_datasets(
+        [common.make_dataset(200 + s, n, scale) for s in scale.seeds]
+    )
     curves = {}
     for meth in METHODS:
-        per_seed = []
-        for s in scale.seeds:
-            ds = common.make_dataset(200 + s, n, scale)
-            per_seed.append(exp.run_method(meth, ds, cfg, seed=s).losses)
+        r = eng.run(meth, cfg, scale.seeds, ds_stack)
+        losses = np.asarray(r.losses).reshape(len(scale.seeds), -1)  # (S, T)
         curves[meth] = [
-            common.mean_std(vals) for vals in zip(*per_seed)
+            (float(m), float(sd))
+            for m, sd in zip(losses.mean(axis=0), losses.std(axis=0))
         ]
-    return {"n": n, "curves": curves}
+    return {"n": n, "curves": curves,
+            "engine": common.engine_snapshot(eng.take_log())}
 
 
 def report(res: dict) -> str:

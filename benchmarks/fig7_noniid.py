@@ -15,6 +15,8 @@ ALPHAS = (0.1, 1e4)
 
 
 def run(scale: common.Scale) -> dict:
+    eng = common.get_engine()
+    eng.take_log()
     n = scale.train_n[100]
     cfg = exp.make_config(
         n_sensors=n, n_fog=max(4, n // 6), rounds=scale.rounds,
@@ -22,20 +24,23 @@ def run(scale: common.Scale) -> dict:
     )
     rows = []
     for alpha in ALPHAS:
+        ds_stack = eng.stack_datasets(
+            [common.make_dataset(300 + s, n, scale, alpha=alpha)
+             for s in scale.seeds]
+        )
         for meth in METHODS:
-            f1s, es = [], []
-            for s in scale.seeds:
-                ds = common.make_dataset(300 + s, n, scale, alpha=alpha)
-                r = exp.run_method(meth, ds, cfg, seed=s)
-                f1s.append(r.f1)
-                es.append(r.e_total)
-            f1m, f1s_ = common.mean_std(f1s)
-            em, _ = common.mean_std(es)
+            r = eng.run(
+                meth, cfg, scale.seeds, ds_stack,
+                label=f"alpha={alpha}:{meth}",
+            )
+            f1m, f1s_ = r.seed_mean_std("f1")
+            em, _ = r.seed_mean_std("e_total")
             rows.append(
                 dict(alpha=alpha, method=meth, f1_mean=f1m, f1_std=f1s_,
                      energy=em)
             )
-    return {"n": n, "rows": rows}
+    return {"n": n, "rows": rows,
+            "engine": common.engine_snapshot(eng.take_log())}
 
 
 def report(res: dict) -> str:

@@ -16,13 +16,18 @@ METHODS = ("fedprox", "hfl-nocoop", "hfl-selective", "hfl-nearest")
 
 
 def run(scale: common.Scale) -> dict:
+    import jax.numpy as jnp
+
+    eng = common.get_engine()
+    eng.take_log()
     rows = []
     for n in (50, 100, 150, 200):
         m_fog = max(5, n // 10)
         # --- full-scale energy / participation audit (paper T=20) ---------
+        # One compiled program per (N, method) cell, all seeds batched.
         audit_cfg = exp.make_config(n_sensors=n, n_fog=m_fog, rounds=20)
         audits = {
-            meth: [exp.audit_method(meth, audit_cfg, seed=s) for s in (0, 1, 2)]
+            meth: eng.audit(meth, audit_cfg, (0, 1, 2), label=f"n={n}:audit")
             for meth in METHODS
         }
         # --- F1 from training at budgeted scale ---------------------------
@@ -33,17 +38,24 @@ def run(scale: common.Scale) -> dict:
             rounds=scale.rounds,
             local_epochs=scale.local_epochs,
         )
-        f1s = {}
-        for meth in METHODS:
-            vals = []
-            for s in scale.seeds:
-                ds = common.make_dataset(100 + s, n_train, scale)
-                vals.append(exp.run_method(meth, ds, train_cfg, seed=s).f1)
-            f1s[meth] = common.mean_std(vals)
+        # One stacked dataset per cell, shared by all four methods.
+        ds_stack = eng.stack_datasets(
+            [common.make_dataset(100 + s, n_train, scale) for s in scale.seeds]
+        )
+        f1s = {
+            meth: eng.run(
+                meth, train_cfg, scale.seeds, ds_stack, label=f"n={n}:train"
+            ).seed_mean_std("f1")
+            for meth in METHODS
+        }
 
         for meth in METHODS:
-            e_m, e_s = common.mean_std([a["e_total"] for a in audits[meth]])
-            p_m, _ = common.mean_std([a["participation"] for a in audits[meth]])
+            e_m, e_s = common.mean_std(
+                jnp.ravel(audits[meth]["e_total"]).tolist()
+            )
+            p_m, _ = common.mean_std(
+                jnp.ravel(audits[meth]["participation"]).tolist()
+            )
             epp = e_m / max(p_m * n, 1.0)
             rows.append(
                 dict(
@@ -54,7 +66,7 @@ def run(scale: common.Scale) -> dict:
                     f1_train_n=n_train,
                 )
             )
-    return {"rows": rows}
+    return {"rows": rows, "engine": common.engine_snapshot(eng.take_log())}
 
 
 def report(res: dict) -> str:

@@ -24,6 +24,7 @@ from repro import configs
 from repro.core import aggregation as agg
 from repro.core import compression as comp
 from repro.data.pipeline import lm_batches
+from repro.launch.mesh import shard_map_compat
 from repro.models import api
 
 
@@ -67,12 +68,11 @@ def main() -> None:
         return new_params, new_err, jax.lax.pmean(loss, "data")
 
     sharded = jax.jit(
-        jax.shard_map(
+        shard_map_compat(
             fed_step,
             mesh=mesh,
             in_specs=(P(), P(), P()),
             out_specs=(P(), P(), P()),
-            check_vma=False,
         )
     )
 

@@ -115,9 +115,37 @@ def compress_update(
         return unravel(recon), new_err
 
     if cfg.mode == "blockwise":
-        recon, new_err, _ = kops.compress(
-            flat, err, cfg.rho_s, cfg.use_pallas, cfg.interpret
-        )
+        if cfg.quant_bits not in (8,) and cfg.quant_bits < 32:
+            # The fused kernel is hardwired to int8; quantising 4/16-bit
+            # configs at 8 bits would silently diverge from the payload
+            # accounting in payload_bits().
+            raise ValueError(
+                f"blockwise mode supports quant_bits 8 or >=32, got "
+                f"{cfg.quant_bits}; use mode='global' for other widths"
+            )
+        # rho_s is a fraction of the REAL coordinates.  The kernels pad the
+        # flat vector to whole (BLOCK_ELEMS) tiles and keep a uniform k per
+        # tile, so solve for the k that keeps ~rho_s * d coords total: the
+        # tail tile can contribute at most its real coordinates (padding
+        # zeros never pass the magnitude threshold), so when the uniform k
+        # exceeds the tail, the full tiles must absorb the difference.
+        d = flat.shape[0]
+        block = kops.BLOCK_ELEMS
+        nb = max(1, -(-d // block))
+        tail = d - (nb - 1) * block      # real coords in the last tile
+        target = max(1, round(cfg.rho_s * d))
+        k = target / nb
+        if nb > 1 and k > tail:
+            k = (target - tail) / (nb - 1)
+        k_frac = min(1.0, k / block)
+        if cfg.quant_bits < 32:
+            recon, new_err, _ = kops.compress(
+                flat, err, k_frac, cfg.use_pallas, cfg.interpret
+            )
+        else:
+            recon, new_err = kops.topk_ef(
+                flat, err, k_frac, cfg.use_pallas, cfg.interpret
+            )
         return unravel(recon), new_err
 
     raise ValueError(f"unknown compression mode: {cfg.mode}")

@@ -1,0 +1,385 @@
+"""Batched multi-deployment simulation engine.
+
+One :class:`Engine` call evaluates a whole ablation cell — every seed and
+deployment realisation of one configuration — as a single compiled XLA
+program, instead of re-tracing ``hfl.train`` / ``flat_fl.train_*`` once
+per seed the way the sequential path does.
+
+Batch axes
+----------
+``Engine.run`` / ``Engine.audit`` take ``seeds`` (length S) and
+``n_deployments`` (P) and build an (S, P) grid of trial keys:
+
+* trial ``(s, 0)`` uses ``jax.random.key(seeds[s])`` — bit-identical to a
+  sequential ``experiment.run_method(..., seed=seeds[s])`` call, which is
+  what the equivalence tests in ``tests/test_engine.py`` pin down;
+* trial ``(s, j>0)`` folds the deployment index into the seed key, giving
+  an independent deployment realisation (and model init) per column.
+
+The jittable per-trial functions from :mod:`repro.launch.experiment`
+(``trial_metrics`` / ``audit_trial``) are nested-``vmap``-ped over the
+grid — the inner deployment axis broadcasts each seed's dataset instead
+of duplicating it on device — and the whole thing, the ``lax.scan`` over
+rounds included, is jitted once per distinct (method, resolved config,
+S, P, data shapes) cell.  Results come back with leading (S, P) axes.
+
+Compressor default
+------------------
+Unless constructed with ``compressor="keep"``, the engine rewrites sparse
+(``rho_s < 1``) ``mode="global"`` compressor configs to the blockwise
+kernel path: the fused Pallas Top-K + error-feedback + int8 kernel
+(``kernels/quant8.compress_blocks``) on TPU, and the pure-jnp oracle
+(``kernels/ref``) everywhere else — compiled Pallas needs a real TPU and
+interpret mode is only a correctness tool, so CPU/GPU fall back
+automatically.  ``Engine.resolve_config`` exposes the rewrite so
+sequential comparisons can run the identical numerics.
+
+Sharding
+--------
+With more than one device, input leaves are placed with the
+``launch/sharding.py`` resolution rules on a 1-D ``("data",)`` mesh: the
+trial axis shards when divisible by the device count, otherwise the
+client axis of the dataset leaves does.  On one device this is a no-op.
+
+Benchmarks
+----------
+``benchmarks/{ablations,table3_scalability,fig4_convergence,fig7_noniid}``
+run every cell through a shared engine (``benchmarks.common.get_engine``)
+and record ``Engine.take_log()`` — per-cell wall clock + whether the cell
+hit the program cache — into their JSON under ``"engine"``, so compile
+counts and wall-clock are tracked from PR 1 onward.  CI smoke-runs the
+kernel microbenchmark; the tier-1 suite covers batched-vs-sequential
+equivalence and Pallas-vs-ref parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as comp
+from repro.core import hfl
+from repro.data.synthetic import SensorDataset
+from repro.launch import sharding as shard_rules
+from repro.launch import experiment as exp
+
+
+def default_use_pallas() -> bool:
+    """Compiled Pallas kernels need a real TPU; elsewhere the engine falls
+    back to the pure-jnp oracle in :mod:`repro.kernels.ref`."""
+    return jax.default_backend() == "tpu"
+
+
+def _describe_compressor(cc: comp.CompressorConfig) -> str:
+    """Short human tag recorded per cell so bench JSONs show which
+    numerics actually ran (the engine may rewrite ``global`` configs)."""
+    if not cc.enabled:
+        return "dense"
+    backend = (
+        ("pallas" if not cc.interpret else "pallas-interpret")
+        if cc.use_pallas else "ref"
+    ) if cc.mode == "blockwise" else "jnp"
+    return f"{cc.mode}[{backend}] rho={cc.rho_s:g} q{cc.quant_bits}"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRun:
+    """Result of one batched cell.  Metric leaves have leading (S, P)."""
+
+    method: str
+    cfg: hfl.HFLConfig
+    seeds: tuple[int, ...]
+    n_deployments: int
+    metrics: dict[str, jax.Array]
+    wall_s: float
+    fresh_compile: bool
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.metrics[name]
+
+    @property
+    def f1(self) -> jax.Array:
+        return self.metrics["f1"]
+
+    @property
+    def losses(self) -> jax.Array:
+        """(S, P, T) per-round mean training loss."""
+        return self.metrics["losses"]
+
+    def seed_mean_std(self, name: str) -> tuple[float, float]:
+        """Mean/std of a scalar metric over all (seed, deployment) trials."""
+        v = jnp.asarray(self.metrics[name], jnp.float32)
+        return float(jnp.mean(v)), float(jnp.std(v))
+
+
+class Engine:
+    """Unified batched front-end for the three round-loop families.
+
+    * ``run``   — the trainable families: flat FL (``core/flat_fl``:
+      fedavg/fedprox/fedadam/scaffold/centralised) and hierarchical FL
+      (``core/hfl``: the hfl-* cooperation rules);
+    * ``audit`` — the training-free energy/participation replay of either
+      family at paper scale;
+    * ``pod_train_step`` — the TPU-mesh family (``core/mesh_fl``), returned
+      as a cached jitted step for callers that own the mesh/batch loop.
+    """
+
+    def __init__(
+        self,
+        *,
+        compressor: str = "auto",
+        shard_trials: bool = True,
+        hidden: tuple[int, ...] = (16, 8, 16),
+        percentile: float = 99.0,
+        point_adjusted: bool = False,
+    ) -> None:
+        if compressor not in ("auto", "keep"):
+            raise ValueError(f"compressor must be auto|keep, got {compressor!r}")
+        self.compressor = compressor
+        self.shard_trials = shard_trials
+        self.hidden = hidden
+        self.percentile = percentile
+        self.point_adjusted = point_adjusted
+        self._programs: dict[Any, Callable] = {}
+        self.compile_count = 0
+        self.call_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    # config / data resolution
+    # ------------------------------------------------------------------
+
+    def resolve_compressor(self, cc: comp.CompressorConfig) -> comp.CompressorConfig:
+        """The engine's compressor default: blockwise kernels, Pallas on TPU."""
+        if self.compressor == "keep" or not cc.enabled or cc.rho_s >= 1.0:
+            return cc
+        if cc.quant_bits != 8 and cc.quant_bits < 32:
+            return cc  # kernels are int8-only; keep paper global numerics
+        use_pallas = default_use_pallas()
+        if (cc.mode == "blockwise" and cc.use_pallas == use_pallas
+                and cc.interpret == (not use_pallas)):
+            return cc
+        return cc.replace(
+            mode="blockwise",
+            use_pallas=use_pallas,
+            interpret=not use_pallas,
+        )
+
+    def resolve_config(self, cfg: hfl.HFLConfig) -> hfl.HFLConfig:
+        return cfg.replace(compressor=self.resolve_compressor(cfg.compressor))
+
+    @staticmethod
+    def stack_datasets(ds_list: Sequence[SensorDataset]) -> SensorDataset:
+        """Stack per-seed datasets along a new leading trial axis."""
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ds_list)
+
+    def _as_stacked(self, ds, seeds: Sequence[int]) -> SensorDataset:
+        if callable(ds):
+            return self.stack_datasets([ds(s) for s in seeds])
+        if ds.train.ndim == 3:  # one dataset shared by every seed
+            return self.stack_datasets([ds] * len(seeds))
+        if ds.train.shape[0] != len(seeds):
+            raise ValueError(
+                f"stacked dataset has {ds.train.shape[0]} entries for "
+                f"{len(seeds)} seeds"
+            )
+        return ds
+
+    @staticmethod
+    def _trial_keys(seeds: Sequence[int], n_deployments: int) -> jax.Array:
+        """(S, P) trial keys; column 0 is exactly ``jax.random.key(seed)``."""
+        if not seeds or n_deployments < 1:
+            raise ValueError(
+                f"need >=1 seed and n_deployments >= 1, got "
+                f"{len(seeds)} seed(s), n_deployments={n_deployments}"
+            )
+        rows = []
+        for s in seeds:
+            base = jax.random.key(s)
+            rows.append(jnp.stack([
+                base if j == 0 else jax.random.fold_in(base, j)
+                for j in range(n_deployments)
+            ]))
+        return jnp.stack(rows)
+
+    # ------------------------------------------------------------------
+    # program cache / sharding / instrumentation
+    # ------------------------------------------------------------------
+
+    def _get_program(self, cache_key: Any, build: Callable[[], Callable]):
+        fn = self._programs.get(cache_key)
+        fresh = fn is None
+        if fresh:
+            fn = jax.jit(build())
+            self._programs[cache_key] = fn
+            self.compile_count += 1
+        return fn, fresh
+
+    def _place(self, tree: Any, n_leading: int) -> Any:
+        """Shard inputs over devices with the launch/sharding rules.
+
+        Prefers the leading (seed) axis; falls back to the client axis of
+        dataset leaves when the seed count does not divide the device
+        count.  Single-device: identity.
+        """
+        devices = jax.devices()
+        if not self.shard_trials or len(devices) <= 1:
+            return tree
+        import numpy as np
+
+        # resolve_spec expects the production ("data", "model") axis pair;
+        # a trivial model axis keeps trials pure data-parallel.
+        mesh = jax.sharding.Mesh(
+            np.asarray(devices).reshape(-1, 1), ("data", "model")
+        )
+        trial_ok = n_leading % len(devices) == 0
+
+        def place(x):
+            if not hasattr(x, "ndim") or x.ndim == 0:
+                return x
+            if trial_ok:
+                logical = ("batch",) + (None,) * (x.ndim - 1)
+            elif x.ndim >= 2:
+                logical = (None, "batch") + (None,) * (x.ndim - 2)
+            else:
+                return x
+            spec = shard_rules.resolve_spec(logical, x.shape, mesh)
+            return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map(place, tree)
+
+    def _timed_call(self, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        out = jax.tree_util.tree_map(jax.block_until_ready, out)
+        return out, time.perf_counter() - t0
+
+    def _log(self, **entry) -> None:
+        self.call_log.append(entry)
+
+    def take_log(self) -> list[dict]:
+        """Drain the per-call log (benchmarks snapshot this into JSON)."""
+        entries, self.call_log = self.call_log, []
+        return entries
+
+    def stats(self) -> dict:
+        return {
+            "compiled_programs": self.compile_count,
+            "cached_programs": len(self._programs),
+        }
+
+    # ------------------------------------------------------------------
+    # the three families
+    # ------------------------------------------------------------------
+
+    def run(
+        self,
+        method: str,
+        cfg: hfl.HFLConfig,
+        seeds: Sequence[int],
+        ds: SensorDataset | Callable[[int], SensorDataset],
+        *,
+        n_deployments: int = 1,
+        label: str | None = None,
+    ) -> EngineRun:
+        """Train + evaluate ``method`` for every (seed, deployment) trial.
+
+        ``ds``: a per-seed callable, a single dataset (shared), or a
+        dataset stacked along a leading ``len(seeds)`` axis.
+        """
+        cfg = self.resolve_config(cfg)
+        seeds = tuple(int(s) for s in seeds)
+        stacked = self._as_stacked(ds, seeds)
+        s_n, p_n = len(seeds), n_deployments
+        keys = self._trial_keys(seeds, p_n)           # (S, P)
+        shapes = tuple(
+            (x.shape, str(x.dtype)) for x in jax.tree_util.tree_leaves(stacked)
+        )
+        cache_key = ("run", method, cfg, s_n, p_n, shapes,
+                     self.hidden, self.percentile, self.point_adjusted)
+
+        def build():
+            def trial(key, one_ds):
+                return exp.trial_metrics(
+                    method, key, one_ds, cfg,
+                    percentile=self.percentile,
+                    point_adjusted=self.point_adjusted,
+                    hidden=self.hidden,
+                )
+
+            # Inner vmap broadcasts the seed's dataset over the deployment
+            # columns (no device-side duplication); outer vmap pairs each
+            # seed with its dataset.  Output leaves lead with (S, P).
+            return jax.vmap(jax.vmap(trial, in_axes=(0, None)))
+
+        fn, fresh = self._get_program(cache_key, build)
+        keys, stacked = self._place(keys, s_n), self._place(stacked, s_n)
+        out, wall = self._timed_call(fn, keys, stacked)
+        self._log(kind="run", method=method, label=label or method,
+                  n_trials=s_n * p_n, wall_s=wall, fresh_compile=fresh,
+                  compressor=_describe_compressor(cfg.compressor))
+        return EngineRun(method, cfg, seeds, p_n, out, wall, fresh)
+
+    def audit(
+        self,
+        method: str,
+        cfg: hfl.HFLConfig,
+        seeds: Sequence[int],
+        *,
+        d: int = 1352,
+        n_deployments: int = 1,
+        label: str | None = None,
+    ) -> dict[str, jax.Array]:
+        """Batched training-free energy/participation audit.
+
+        Returns summed energies / mean participation with (S, P) leading
+        axes; trial (s, 0) matches ``experiment.audit_method(seed=s)``.
+        """
+        cfg = self.resolve_config(cfg)
+        seeds = tuple(int(s) for s in seeds)
+        s_n, p_n = len(seeds), n_deployments
+        keys = self._trial_keys(seeds, p_n)           # (S, P)
+        cache_key = ("audit", method, cfg, s_n, p_n, d)
+
+        def build():
+            trial = lambda key: exp.audit_trial(method, key, cfg, d)  # noqa: E731
+            return jax.vmap(jax.vmap(trial))
+
+        fn, fresh = self._get_program(cache_key, build)
+        out, wall = self._timed_call(fn, self._place(keys, s_n))
+        self._log(kind="audit", method=method, label=label or method,
+                  n_trials=s_n * p_n, wall_s=wall, fresh_compile=fresh,
+                  compressor=_describe_compressor(cfg.compressor))
+        return out
+
+    def pod_train_step(
+        self,
+        model_cfg: Any,
+        mesh: jax.sharding.Mesh | None = None,
+        *,
+        rho_s: float = 0.05,
+        self_weight: float = 0.5,
+        mode: str = "int8",
+    ) -> Callable:
+        """Cached jitted TPU-mesh pod step (``core/mesh_fl`` family).
+
+        Defaults to a single-pod host mesh so the same entry point works
+        on CPU; pass the production mesh on real hardware.
+        """
+        from repro.core import mesh_fl
+
+        if mesh is None:
+            mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+        cache_key = ("pod", repr(model_cfg), tuple(sorted(mesh.shape.items())),
+                     rho_s, self_weight, mode)
+
+        def build():
+            return mesh_fl.make_pod_hfl_train_step(
+                model_cfg, mesh, rho_s=rho_s, self_weight=self_weight,
+                mode=mode,
+            )
+
+        fn, _ = self._get_program(cache_key, build)
+        return fn

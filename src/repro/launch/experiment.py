@@ -75,33 +75,40 @@ def _detector_eval(
     )
 
 
-def run_method(
+def trial_metrics(
     method: str,
+    key: jax.Array,
     ds: SensorDataset,
     cfg: hfl.HFLConfig,
-    seed: int = 0,
+    *,
     percentile: float = 99.0,
     point_adjusted: bool = False,
     hidden: tuple[int, ...] = (16, 8, 16),
-) -> ExperimentResult:
-    """Train ``method`` on ``ds`` and evaluate the paper's metrics."""
+) -> dict[str, jax.Array]:
+    """One fully traced trial: train ``method`` from ``key``, evaluate.
+
+    This is the jittable core shared by the sequential :func:`run_method`
+    path and the batched :class:`repro.engine.Engine` (which vmaps it over
+    a leading trial axis).  Everything returned is a jnp value; only
+    ``method``/``cfg``/keyword knobs are static.
+    """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; one of {METHODS}")
-    key = jax.random.key(seed)
     k_init, k_train = jax.random.split(key)
     dim = ds.train.shape[-1]
     params0 = ae.init(k_init, dim, hidden)
 
-    zeros = dict.fromkeys(
-        ("e_s2f", "e_f2f", "e_f2g", "participation", "coop_links"), 0.0
-    )
+    zero = jnp.zeros(())
     if method == "centralised":
         params, losses, e_up = flat_fl.train_centralised(
             k_train, params0, ae.loss, ds, cfg
         )
         # Oracle sees everything by construction.
-        metrics = dict(zeros, e_total=float(e_up), participation=1.0)
-        loss_trace = tuple(float(x) for x in losses)
+        out = {
+            "e_s2f": zero, "e_f2f": zero, "e_f2g": zero,
+            "e_total": e_up, "participation": jnp.ones(()),
+            "coop_links": zero, "losses": losses,
+        }
     else:
         if method in ("fedavg", "fedprox", "fedadam"):
             run_cfg = cfg.replace(
@@ -118,45 +125,64 @@ def run_method(
                 server_opt="adam" if method == "hfl-adam" else cfg.server_opt,
             )
             params, m = hfl.train(k_train, params0, ae.loss, ds, run_cfg)
-        metrics = {
-            "e_total": float(jnp.sum(m.e_total)),
-            "e_s2f": float(jnp.sum(m.e_s2f)),
-            "e_f2f": float(jnp.sum(m.e_f2f)),
-            "e_f2g": float(jnp.sum(m.e_f2g)),
-            "participation": float(jnp.mean(m.participation)),
-            "coop_links": float(jnp.mean(m.coop_links)),
+        out = {
+            "e_total": jnp.sum(m.e_total),
+            "e_s2f": jnp.sum(m.e_s2f),
+            "e_f2f": jnp.sum(m.e_f2f),
+            "e_f2g": jnp.sum(m.e_f2g),
+            "participation": jnp.mean(m.participation),
+            "coop_links": jnp.mean(m.coop_links.astype(jnp.float32)),
+            "losses": m.loss,
         }
-        loss_trace = tuple(float(x) for x in m.loss)
 
     f1 = _detector_eval(params, ds, percentile, point_adjusted)
+    out.update(f1=f1.f1, precision=f1.precision, recall=f1.recall)
+    return out
+
+
+def run_method(
+    method: str,
+    ds: SensorDataset,
+    cfg: hfl.HFLConfig,
+    seed: int = 0,
+    percentile: float = 99.0,
+    point_adjusted: bool = False,
+    hidden: tuple[int, ...] = (16, 8, 16),
+) -> ExperimentResult:
+    """Train ``method`` on ``ds`` and evaluate the paper's metrics."""
+    m = trial_metrics(
+        method, jax.random.key(seed), ds, cfg,
+        percentile=percentile, point_adjusted=point_adjusted, hidden=hidden,
+    )
     return ExperimentResult(
         method=method,
-        f1=float(f1.f1),
-        precision=float(f1.precision),
-        recall=float(f1.recall),
-        losses=loss_trace,
-        **{k: metrics.get(k, 0.0) for k in (
-            "participation", "e_total", "e_s2f", "e_f2f", "e_f2g", "coop_links"
-        )},
+        f1=float(m["f1"]),
+        precision=float(m["precision"]),
+        recall=float(m["recall"]),
+        losses=tuple(float(x) for x in m["losses"]),
+        participation=float(m["participation"]),
+        e_total=float(m["e_total"]),
+        e_s2f=float(m["e_s2f"]),
+        e_f2f=float(m["e_f2f"]),
+        e_f2g=float(m["e_f2g"]),
+        coop_links=float(m["coop_links"]),
     )
 
 
-def audit_method(
+def audit_trial(
     method: str,
+    key: jax.Array,
     cfg: hfl.HFLConfig,
     d: int = 1352,
-    seed: int = 0,
-) -> dict:
-    """Replay Algorithm 1's decision + energy accounting WITHOUT training.
+) -> dict[str, jax.Array]:
+    """One fully traced training-free audit trial (see :func:`audit_method`).
 
-    Per-round communication energy in the simulator depends only on the
-    topology, association/cooperation decisions, and payload sizes — not on
-    model values — so the paper's *energy and participation* tables can be
-    reproduced at full scale (N=200, T=20) cheaply.  F1 columns still come
-    from :func:`run_method` at whatever scale the budget allows.
+    Jittable core shared by the sequential wrapper and the batched engine:
+    samples a deployment from ``key``, replays Algorithm 1's association /
+    cooperation / energy accounting over ``cfg.rounds`` rounds, and returns
+    summed energies + mean participation as jnp scalars.
     """
     from repro.core import association as assoc
-    from repro.core import channel as chm
     from repro.core import compression as comp
     from repro.core import cooperation as coop_m
     from repro.core import energy as en
@@ -169,7 +195,6 @@ def audit_method(
     else:
         raise ValueError(f"audit unsupported for {method!r}")
 
-    key = jax.random.key(seed)
     dep0 = topo_m.sample_deployment(key, cfg.deployment)
     l_u = comp.payload_bits(d, cfg.compressor)
     l_full = 32.0 * d
@@ -214,13 +239,32 @@ def audit_method(
         return dep, out
 
     keys = jax.random.split(jax.random.fold_in(key, 1), cfg.rounds)
-    _, m = jax.lax.scan(jax.jit(round_fn), dep0, keys)
-    total = {k: float(jnp.sum(v)) for k, v in m.items() if k.startswith("e_")}
+    _, m = jax.lax.scan(round_fn, dep0, keys)
+    total = {k: jnp.sum(v) for k, v in m.items() if k.startswith("e_")}
     total["e_total"] = total["e_s2f"] + total["e_f2f"] + total["e_f2g"]
-    total["participation"] = float(jnp.mean(m["participation"]))
-    total["coop_links"] = float(jnp.mean(m["coop_links"]))
-    total["method"] = method
+    total["participation"] = jnp.mean(m["participation"])
+    total["coop_links"] = jnp.mean(m["coop_links"])
     return total
+
+
+def audit_method(
+    method: str,
+    cfg: hfl.HFLConfig,
+    d: int = 1352,
+    seed: int = 0,
+) -> dict:
+    """Replay Algorithm 1's decision + energy accounting WITHOUT training.
+
+    Per-round communication energy in the simulator depends only on the
+    topology, association/cooperation decisions, and payload sizes — not on
+    model values — so the paper's *energy and participation* tables can be
+    reproduced at full scale (N=200, T=20) cheaply.  F1 columns still come
+    from :func:`run_method` at whatever scale the budget allows.
+    """
+    m = audit_trial(method, jax.random.key(seed), cfg, d)
+    out = {k: float(v) for k, v in m.items()}
+    out["method"] = method
+    return out
 
 
 def make_config(

@@ -9,6 +9,27 @@ from __future__ import annotations
 import jax
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map`` (replication check flag named
+    ``check_vma``); the 0.4.x line has it under ``jax.experimental`` with
+    the flag named ``check_rep``.  Both checks are disabled — callers here
+    mix collectives in ways the static replication checker rejects.
+    """
+    top_level = getattr(jax, "shard_map", None)
+    if top_level is not None:
+        return top_level(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

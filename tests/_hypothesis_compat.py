@@ -1,0 +1,40 @@
+"""Run plain unit tests even without hypothesis installed.
+
+The CPU container this repo targets does not ship hypothesis (CI installs
+it from requirements-dev.txt).  Importing ``given``/``settings``/``st``
+from here instead of hypothesis keeps the ordinary unit tests in the
+channel/compression/energy modules collecting and running everywhere;
+only the ``@given`` property tests skip when hypothesis is missing.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in hypothesis-less envs
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for hypothesis.strategies: every strategy-builder
+        call site evaluates to an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        del a, k
+        return lambda f: f
+
+    def given(*a, **k):
+        del a, k
+
+        def deco(f):
+            return pytest.mark.skip(reason="property test needs hypothesis")(
+                f
+            )
+
+        return deco

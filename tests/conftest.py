@@ -6,6 +6,36 @@ from repro.core import energy as en
 from repro.core import topology as topo
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked slow (the full local tier)",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavy test, skipped unless --runslow is given"
+    )
+    config.addinivalue_line(
+        "markers", "tpu: needs a real TPU backend (skipped elsewhere)"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    run_slow = config.getoption("--runslow")
+    skip_slow = pytest.mark.skip(reason="slow: needs --runslow")
+    skip_tpu = pytest.mark.skip(
+        reason=f"tpu: backend is {jax.default_backend()}"
+    )
+    on_tpu = jax.default_backend() == "tpu"
+    for item in items:
+        if "slow" in item.keywords and not run_slow:
+            item.add_marker(skip_slow)
+        if "tpu" in item.keywords and not on_tpu:
+            item.add_marker(skip_tpu)
+
+
 @pytest.fixture(scope="session")
 def cparams() -> ch.ChannelParams:
     return ch.ChannelParams()

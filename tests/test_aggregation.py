@@ -6,6 +6,7 @@ from jax.sharding import Mesh
 
 from repro.core import aggregation as agg
 from repro.core import cooperation as coop
+from repro.launch.mesh import shard_map_compat
 
 
 def test_fog_aggregate_matches_manual():
@@ -72,8 +73,8 @@ def test_hierarchical_mean_shard_map_matches_flat():
     def f(u, w):
         return agg.hierarchical_mean(u, w, intra_axis="data", inter_axis="pod")
 
-    out = jax.shard_map(
-        f, mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_vma=False
+    out = shard_map_compat(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=P()
     )(update, weight)
     np.testing.assert_allclose(np.asarray(out), np.asarray(update))
 
@@ -83,8 +84,8 @@ def test_ring_mix_single_device_identity():
 
     mesh = jax.make_mesh((1,), ("pod",))
     x = jnp.arange(3.0)
-    out = jax.shard_map(
+    out = shard_map_compat(
         lambda u: agg.ring_mix(u, 0.3, axis="pod"),
-        mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False,
+        mesh=mesh, in_specs=(P(),), out_specs=P(),
     )(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x))

@@ -1,9 +1,10 @@
 """Unit + property tests for the underwater acoustic channel (Sec. III-B/C)."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st  # noqa: F401
+
 
 from repro.core import channel as ch
 

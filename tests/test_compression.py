@@ -1,10 +1,11 @@
 """Tests for the Top-K + error-feedback + int8 compression pipeline (Sec. V-C)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st  # noqa: F401
+
 
 from repro.core import compression as comp
 

@@ -1,8 +1,10 @@
 """Unit + property tests for the SNR-driven energy model (Sec. III-D)."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st  # noqa: F401
+
 
 from repro.core import channel as ch
 from repro.core import energy as en
