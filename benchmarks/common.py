@@ -20,21 +20,24 @@ from repro.data.synthetic import SyntheticConfig, generate, normalize
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 
-_ENGINE = None
+_ENGINES: dict = {}
 
 
-def get_engine():
+def get_engine(**kw):
     """The benchmark-wide shared :class:`repro.engine.Engine`.
 
     Shared so the program cache spans modules: the same (method, config,
-    batch) cell compiled for one table is reused by the next.
+    batch) cell compiled for one table is reused by the next.  Keyword
+    overrides (e.g. ``point_adjusted=True`` for the real-benchmark table)
+    get their own cached instance, since evaluation knobs change the
+    compiled programs anyway.
     """
-    global _ENGINE
-    if _ENGINE is None:
+    key = tuple(sorted(kw.items()))
+    if key not in _ENGINES:
         from repro.engine import Engine
 
-        _ENGINE = Engine()
-    return _ENGINE
+        _ENGINES[key] = Engine(**kw)
+    return _ENGINES[key]
 
 
 def engine_snapshot(log: list[dict]) -> dict:

@@ -1,38 +1,39 @@
 """Fig. 5(a): direct-gateway vs fog-assisted reachability vs network scale.
 
 Pure geometry + channel feasibility — runs at the paper's exact scale
-(N in {50, 100, 150, 200}, M = N/10, 3 seeds) in milliseconds.
+(N in {50, 100, 150, 200}, M = N/10, 3 seeds) in milliseconds, through the
+shared engine's batched reachability family (one compiled program per N,
+all seeds vmapped; per-cell wall-clock + compile counts land under
+``"engine"`` like the other benchmarks).
 Paper targets: direct ~0.48-0.51 across N; fog-assisted 0.96 -> ~1.0.
 """
 from __future__ import annotations
 
-import jax
+import numpy as np
 
 from benchmarks import common
-from repro.core import channel as ch
-from repro.core import participation as part
-from repro.core import topology as topo
+from repro.launch import experiment as exp
+
+SEEDS = (0, 1, 2)
 
 
 def run(scale: common.Scale) -> dict:
-    cparams = ch.ChannelParams()
+    eng = common.get_engine()
+    eng.take_log()
     rows = []
     for n in (50, 100, 150, 200):
-        direct, fog = [], []
-        for seed in (0, 1, 2):
-            dep = topo.sample_deployment(
-                jax.random.key(seed),
-                topo.DeploymentParams(n_sensors=n, n_fog=max(5, n // 10)),
-            )
-            r = part.reachability(dep, cparams)
-            direct.append(float(r.direct_gateway))
-            fog.append(float(r.fog_assisted))
-        dm, ds = common.mean_std(direct)
-        fm, fs = common.mean_std(fog)
-        rows.append(
-            dict(n=n, direct_mean=dm, direct_std=ds, fog_mean=fm, fog_std=fs)
+        cfg = exp.make_config(
+            n_sensors=n, n_fog=max(5, n // 10), rounds=1
         )
-    return {"rows": rows}
+        r = eng.reachability(cfg, SEEDS, label=f"n={n}:reach")
+        direct = np.ravel(np.asarray(r["direct_gateway"], np.float64))
+        fog = np.ravel(np.asarray(r["fog_assisted"], np.float64))
+        rows.append(
+            dict(n=n,
+                 direct_mean=float(direct.mean()), direct_std=float(direct.std()),
+                 fog_mean=float(fog.mean()), fog_std=float(fog.std()))
+        )
+    return {"rows": rows, "engine": common.engine_snapshot(eng.take_log())}
 
 
 def report(res: dict) -> str:

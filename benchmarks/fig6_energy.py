@@ -1,32 +1,48 @@
 """Fig. 6: (a) selective-vs-nearest energy at N in {150, 200}; (b)
 compression savings in matched low-vs-full upload tests.
 
-Both panels are pure energy accounting -> run at the paper's exact scale.
+Both panels are pure energy accounting -> run at the paper's exact scale,
+through the shared engine's batched audit family: one compiled program per
+(method, config) cell with all seeds vmapped, per-cell wall-clock +
+compile counts recorded under ``"engine"``.
 Paper targets: selective cuts always-on cooperation energy by 31-33%; the
 tier breakdown shows the gap is almost entirely fog-to-fog; compression
 saves 94.8% (flat), 81.3% (HFL-NoCoop), 71.1% (HFL-Nearest) total energy.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from benchmarks import common
 from repro.core import compression as comp
 from repro.launch import experiment as exp
 
+SEEDS = (0, 1, 2)
+
+
+def _audit_stats(eng, meth, cfg, label):
+    audit = eng.audit(meth, cfg, SEEDS, label=label)
+    return {
+        k: common.mean_std(jnp.ravel(v).tolist())
+        for k, v in audit.items()
+    }
+
 
 def run(scale: common.Scale) -> dict:
+    eng = common.get_engine()
+    eng.take_log()
     panel_a = []
     for n in (150, 200):
         cfg = exp.make_config(n_sensors=n, n_fog=n // 10, rounds=20)
         row = {"n": n}
         for meth in ("hfl-nocoop", "hfl-selective", "hfl-nearest"):
-            audits = [exp.audit_method(meth, cfg, seed=s) for s in (0, 1, 2)]
-            e_m, e_s = common.mean_std([a["e_total"] for a in audits])
+            a = _audit_stats(eng, meth, cfg, label=f"n={n}:{meth}:audit")
             row[meth] = {
-                "e_total": e_m,
-                "e_std": e_s,
-                "e_s2f": common.mean_std([a["e_s2f"] for a in audits])[0],
-                "e_f2f": common.mean_std([a["e_f2f"] for a in audits])[0],
-                "e_f2g": common.mean_std([a["e_f2g"] for a in audits])[0],
+                "e_total": a["e_total"][0],
+                "e_std": a["e_total"][1],
+                "e_s2f": a["e_s2f"][0],
+                "e_f2f": a["e_f2f"][0],
+                "e_f2g": a["e_f2g"][0],
             }
         sel, near = row["hfl-selective"]["e_total"], row["hfl-nearest"]["e_total"]
         row["selective_saving_vs_nearest"] = 1.0 - sel / near
@@ -43,17 +59,14 @@ def run(scale: common.Scale) -> dict:
         cfg_d = exp.make_config(
             n_sensors=200, n_fog=20, rounds=20, compressor=dense
         )
-        e_c = common.mean_std(
-            [exp.audit_method(meth, cfg_c, seed=s)["e_total"] for s in (0, 1, 2)]
-        )[0]
-        e_d = common.mean_std(
-            [exp.audit_method(meth, cfg_d, seed=s)["e_total"] for s in (0, 1, 2)]
-        )[0]
+        e_c = _audit_stats(eng, meth, cfg_c, f"{meth}:compressed")["e_total"][0]
+        e_d = _audit_stats(eng, meth, cfg_d, f"{meth}:dense")["e_total"][0]
         panel_b.append(
             dict(method=meth, compressed_j=e_c, dense_j=e_d,
                  saving=1.0 - e_c / e_d)
         )
-    return {"panel_a": panel_a, "panel_b": panel_b}
+    return {"panel_a": panel_a, "panel_b": panel_b,
+            "engine": common.engine_snapshot(eng.take_log())}
 
 
 def report(res: dict) -> str:
@@ -79,4 +92,10 @@ def report(res: dict) -> str:
             f"{r['compressed_j']:7.1f} J   saving {r['saving']:.1%}"
         )
     lines.append("    [paper: 94.8% flat, 81.3% NoCoop, 71.1% Nearest]")
+    eng = res.get("engine")
+    if eng:
+        lines.append(
+            f"engine: {eng['compiled_programs_new']} compiled programs vs "
+            f"{eng['sequential_program_equivalent']} sequential traces"
+        )
     return "\n".join(lines)

@@ -1,7 +1,17 @@
 """Microbenchmark of the compression kernels (CPU interpret mode): wall
 time per call + payload accounting.  On CPU the numbers establish
 correctness-path cost only; the TPU roofline for these ops is in
-EXPERIMENTS.md (they are HBM-bandwidth-bound single-pass kernels)."""
+EXPERIMENTS.md (they are HBM-bandwidth-bound single-pass kernels).
+
+Two tables:
+
+* ``rows``      — the per-client compress op at flat-vector sizes;
+* ``agg_rows``  — the fused compress-and-aggregate op (one program:
+  EF Top-K + int8 + weighted fog accumulation) against the unfused
+  compress -> segment-sum baseline (two programs with the dense (N, d)
+  reconstruction materialised between them).  The committed JSON is the
+  perf-trend baseline CI compares against (benchmarks/check_kernel_micro).
+"""
 from __future__ import annotations
 
 import time
@@ -14,17 +24,57 @@ from repro.kernels import ops
 
 SIZES = (1352, 65536, 1048576)
 
+# (n_clients, d) cells for the fused aggregate op; n_fog = n_clients // 4.
+# The last cell is the 1M-element size (16 * 65536 = 1 048 576).
+AGG_SIZES = ((8, 1352), (16, 65536))
+K_FRAC = 0.05
 
-def _time(fn, *args, reps=3):
+
+def _time(fn, *args, reps=5):
+    """Min over ``reps`` individually blocked calls — the min estimator is
+    what the CI perf-trend gate compares, and unlike an async-smeared mean
+    it is stable on noisy shared runners."""
     fn(*args)  # compile
-    t0 = time.time()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.time()
         out = fn(*args)
-    jax.tree_util.tree_map(
-        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
-        out,
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x,
+            out,
+        )
+        best = min(best, time.time() - t0)
+    return best * 1e6
+
+
+def _agg_inputs(n_clients: int, d: int):
+    key = jax.random.key(n_clients * d)
+    deltas = jax.random.normal(key, (n_clients, d))
+    errs = jax.random.normal(jax.random.fold_in(key, 1), (n_clients, d)) * 0.1
+    n_fog = max(2, n_clients // 4)
+    fog_id = jnp.arange(n_clients, dtype=jnp.int32) % n_fog
+    weights = jnp.ones((n_clients,), jnp.float32)
+    return deltas, errs, fog_id, weights, n_fog
+
+
+def _unfused_baseline(n_fog: int):
+    """The legacy two-program pipeline: batched compress, then a separate
+    jitted weighted segment-sum over the dense reconstructions."""
+    compress = jax.jit(
+        jax.vmap(lambda dd, ee: ops.compress(dd, ee, K_FRAC, False)[:2])
     )
-    return (time.time() - t0) / reps * 1e6
+    aggregate = jax.jit(
+        lambda recon, fid, w: jax.ops.segment_sum(
+            recon * w[:, None], fid, num_segments=n_fog
+        )
+    )
+
+    def run(deltas, errs, fog_id, weights):
+        recon, new_err = compress(deltas, errs)
+        return aggregate(recon, fog_id, weights), new_err
+
+    return run
 
 
 def run(scale: common.Scale) -> dict:
@@ -32,14 +82,45 @@ def run(scale: common.Scale) -> dict:
     for n in SIZES:
         delta = jax.random.normal(jax.random.key(n), (n,))
         err = jnp.zeros((n,))
-        us_ref = _time(lambda d, e: ops.compress(d, e, 0.05, False), delta, err)
-        us_pl = _time(lambda d, e: ops.compress(d, e, 0.05, True, True), delta, err)
-        _, _, bits = ops.compress(delta, err, 0.05, False)
+        us_ref = _time(lambda d, e: ops.compress(d, e, K_FRAC, False), delta, err)
+        us_pl = _time(lambda d, e: ops.compress(d, e, K_FRAC, True, True), delta, err)
+        _, _, bits = ops.compress(delta, err, K_FRAC, False)
         rows.append(
             dict(n=n, us_ref=us_ref, us_pallas_interpret=us_pl,
                  payload_bits=float(bits), dense_bits=32.0 * n)
         )
-    return {"rows": rows}
+
+    agg_rows = []
+    for n_clients, d in AGG_SIZES:
+        deltas, errs, fog_id, weights, n_fog = _agg_inputs(n_clients, d)
+        args = (deltas, errs, fog_id, weights)
+        fused = lambda D, E, F, W: ops.compress_aggregate(  # noqa: E731
+            D, E, F, W, n_fog, K_FRAC, use_pallas=False
+        )
+        unfused = _unfused_baseline(n_fog)
+        # Warm (compile) both, then time INTERLEAVED single blocked calls
+        # with alternating within-pair order, and report the MIN of each —
+        # the same estimator as _time and the CI perf-trend gate.  On a
+        # shared runner the min is the uncontended cost; means/medians get
+        # corrupted by multi-call contention storms that hit whichever
+        # pipeline is unlucky.
+        fused(*args), unfused(*args)
+        times = {"fused": [], "unfused": []}
+        pair = (("fused", fused), ("unfused", unfused))
+        for rep in range(16):
+            for name, fn in pair if rep % 2 == 0 else pair[::-1]:
+                t0 = time.time()
+                out = fn(*args)
+                out[0].block_until_ready()
+                times[name].append((time.time() - t0) * 1e6)
+        us_fused = min(times["fused"])
+        us_unfused = min(times["unfused"])
+        agg_rows.append(
+            dict(n_clients=n_clients, d=d, elems=n_clients * d, n_fog=n_fog,
+                 us_fused_ref=us_fused, us_unfused_ref=us_unfused,
+                 speedup=us_unfused / us_fused)
+        )
+    return {"rows": rows, "agg_rows": agg_rows}
 
 
 def report(res: dict) -> str:
@@ -52,5 +133,16 @@ def report(res: dict) -> str:
             f"{r['n']:>9} {r['us_ref']:>12.0f} {r['us_pallas_interpret']:>18.0f} "
             f"{r['payload_bits'] / r['dense_bits']:>7.3f} "
             f"{r['payload_bits']:>10.0f}"
+        )
+    lines.append("fused compress-and-aggregate vs unfused compress->segment-sum"
+                 " (jnp ref path)")
+    lines.append(
+        f"{'NxD':>14} {'elems':>9} {'fused us':>10} {'unfused us':>11} {'speedup':>8}"
+    )
+    for r in res["agg_rows"]:
+        lines.append(
+            f"{r['n_clients']:>5}x{r['d']:<8} {r['elems']:>9} "
+            f"{r['us_fused_ref']:>10.0f} {r['us_unfused_ref']:>11.0f} "
+            f"{r['speedup']:>8.2f}"
         )
     return "\n".join(lines)

@@ -3,6 +3,10 @@
 Entity counts are the published ones (10 / 55 / 27) so these run at true
 scale; real files are used when present under ``data/``, otherwise the
 statistically matched surrogates (source recorded in the output).
+
+Each (dataset, method) cell runs through the shared engine (the
+point-adjusted evaluation variant): one compiled program with all seeds
+vmapped, per-cell wall-clock + compile counts under ``"engine"``.
 """
 from __future__ import annotations
 
@@ -17,6 +21,8 @@ METHODS = (
 
 
 def run(scale: common.Scale) -> dict:
+    eng = common.get_engine(point_adjusted=True)
+    eng.take_log()
     rows = []
     for name in ("smd", "smap", "msl"):
         spec = bench_data.SPECS[name]
@@ -25,24 +31,26 @@ def run(scale: common.Scale) -> dict:
             n_sensors=n, n_fog=max(3, n // 8), rounds=scale.rounds_real,
             local_epochs=scale.local_epochs,
         )
+        loaded = {
+            s: bench_data.load(name, seed=s, length=scale.train_len)
+            for s in scale.seeds
+        }
+        src = loaded[scale.seeds[0]].source
+        ds_stack = eng.stack_datasets(
+            [loaded[s].dataset for s in scale.seeds]
+        )
         for meth in METHODS:
-            f1s, es, src = [], [], None
-            for s in scale.seeds:
-                bd = bench_data.load(name, seed=s, length=scale.train_len)
-                src = bd.source
-                r = exp.run_method(
-                    meth, bd.dataset, cfg, seed=s, point_adjusted=True,
-                )
-                f1s.append(r.f1)
-                es.append(r.e_total)
-            f1m, f1sd = common.mean_std(f1s)
-            em, esd = common.mean_std(es)
+            r = eng.run(
+                meth, cfg, scale.seeds, ds_stack, label=f"{name}:{meth}"
+            )
+            f1m, f1sd = r.seed_mean_std("f1")
+            em, esd = r.seed_mean_std("e_total")
             rows.append(
                 dict(dataset=name, source=src, method=meth,
                      pa_f1_mean=f1m, pa_f1_std=f1sd,
                      energy_mean=em, energy_std=esd)
             )
-    return {"rows": rows}
+    return {"rows": rows, "engine": common.engine_snapshot(eng.take_log())}
 
 
 def report(res: dict) -> str:
@@ -53,5 +61,11 @@ def report(res: dict) -> str:
             f"{r['dataset']:8} {r['method']:14} "
             f"{r['pa_f1_mean']:.3f}±{r['pa_f1_std']:.3f} "
             f"{r['energy_mean']:8.2f}±{r['energy_std']:5.2f} {r['source']:>10}"
+        )
+    eng = res.get("engine")
+    if eng:
+        lines.append(
+            f"engine: {eng['compiled_programs_new']} compiled programs vs "
+            f"{eng['sequential_program_equivalent']} sequential traces"
         )
     return "\n".join(lines)

@@ -21,7 +21,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import compression as comp
 from repro.core.cooperation import CoopDecision
+from repro.kernels import ops as kops
 
 
 def _tree_map(f, *trees):
@@ -49,6 +51,88 @@ def fog_aggregate(
         return summed / denom.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
     return _tree_map(agg, updates), fog_weight
+
+
+def compress_and_accumulate(
+    deltas: jax.Array,      # (N, d) raw flat client updates
+    err: jax.Array,         # (N, d) error-feedback buffers
+    fog_id: jax.Array,      # (N,) int32 cluster assignment
+    weights: jax.Array,     # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    cfg: comp.CompressorConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-client compression + UNNORMALISED weighted fog sums (one pass).
+
+    The shard_map round loop psums these partials over the client axis
+    before normalising; :func:`compress_and_aggregate` is the single-shard
+    wrapper that divides through directly.
+
+    Returns (fog_sum (n_fog, d) = sum_{i in C_m} w_i recon_i,
+    fog_weight (n_fog,) = sum_{i in C_m} w_i, new_err (N, d)).
+    """
+    fog_weight = jax.ops.segment_sum(weights, fog_id, num_segments=n_fog)
+
+    if cfg.enabled and cfg.rho_s < 1.0 and cfg.fused and cfg.mode == "blockwise":
+        # The fused kernel path: EF Top-K + int8 + weighted accumulation
+        # directly into the (n_fog, d) buffers — the dense per-client
+        # reconstruction never materialises.
+        comp.validate_blockwise_bits(cfg.quant_bits)
+        fog_sum, new_err = kops.compress_aggregate(
+            deltas, err, fog_id, weights, n_fog,
+            comp.blockwise_k_frac(deltas.shape[1], cfg.rho_s),
+            quantize=cfg.quant_bits < 32,
+            use_pallas=cfg.use_pallas,
+            interpret=cfg.interpret,
+        )
+        return fog_sum, fog_weight, new_err
+
+    # Unfused fallback (compression off, dense rho_s == 1 quantise-only,
+    # mode="global", or cfg.fused=False): per-client reconstruction then a
+    # dense segment-sum — the legacy two-pass pipeline.
+    if cfg.enabled:
+        recon, new_err = jax.vmap(
+            lambda d_, e_: comp.compress_update(d_, e_, cfg)
+        )(deltas, err)
+    else:
+        recon, new_err = deltas, err
+    fog_sum = jax.ops.segment_sum(
+        recon * weights[:, None], fog_id, num_segments=n_fog
+    )
+    return fog_sum, fog_weight, new_err
+
+
+def compress_and_aggregate(
+    deltas: jax.Array,
+    err: jax.Array,
+    fog_id: jax.Array,
+    weights: jax.Array,
+    n_fog: int,
+    cfg: comp.CompressorConfig,
+    axis: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused sensor-uplink compression + intra-cluster aggregation.
+
+    Eq. 30 (EF compression) and Eq. 13 (weighted fog aggregation) as ONE
+    operator: per (client, block), the update is sparsified/quantised and
+    its reconstruction accumulated straight into the fog buffers.  This is
+    the round loop's hot path; see :mod:`repro.kernels.fused_agg` for the
+    single-HBM-pass kernel it dispatches to.
+
+    Under ``shard_map`` pass the client mesh ``axis``: each shard's partial
+    fog sums are psum-reduced before normalising (the sensor->fog hop, cf.
+    :func:`hierarchical_mean`).
+
+    Returns (fog_update (n_fog, d) — the Eq. 13 weighted cluster means —
+    fog_weight (n_fog,), new_err (N, d)).  Empty clusters get zero updates.
+    """
+    fog_sum, fog_weight, new_err = compress_and_accumulate(
+        deltas, err, fog_id, weights, n_fog, cfg
+    )
+    if axis is not None:
+        fog_sum = jax.lax.psum(fog_sum, axis)
+        fog_weight = jax.lax.psum(fog_weight, axis)
+    denom = jnp.maximum(fog_weight, 1e-12)
+    return fog_sum / denom[:, None], fog_weight, new_err
 
 
 def cooperative_mix(fog_models: Any, decision: CoopDecision) -> Any:

@@ -33,6 +33,9 @@ class CompressorConfig:
     mode: str = "global"         # "global" | "blockwise"
     use_pallas: bool = False     # blockwise only: route through the kernel
     interpret: bool = True       # pallas interpret mode (CPU)
+    fused: bool = True           # fuse compression into fog aggregation
+    # (core/aggregation.compress_and_aggregate); False = legacy per-client
+    # compress_update + dense segment-sum, kept as the equivalence baseline.
 
     def replace(self, **kw: Any) -> "CompressorConfig":
         return dataclasses.replace(self, **kw)
@@ -55,6 +58,36 @@ def payload_bits(d: int, cfg: CompressorConfig) -> float:
     b_idx = math.ceil(math.log2(max(d, 2)))
     k = max(1.0, round(cfg.rho_s * d))
     return k * (bits + b_idx)
+
+
+def blockwise_k_frac(d: int, rho_s: float) -> float:
+    """Per-tile keep fraction for blockwise mode on a length-``d`` vector.
+
+    rho_s is a fraction of the REAL coordinates.  The kernels pad the flat
+    vector to whole (BLOCK_ELEMS) tiles and keep a uniform k per tile, so
+    solve for the k that keeps ~rho_s * d coords total: the tail tile can
+    contribute at most its real coordinates (padding zeros never pass the
+    magnitude threshold), so when the uniform k exceeds the tail, the full
+    tiles must absorb the difference.
+    """
+    block = kops.BLOCK_ELEMS
+    nb = max(1, -(-d // block))
+    tail = d - (nb - 1) * block      # real coords in the last tile
+    target = max(1, round(rho_s * d))
+    k = target / nb
+    if nb > 1 and k > tail:
+        k = (target - tail) / (nb - 1)
+    return min(1.0, k / block)
+
+
+def validate_blockwise_bits(quant_bits: int) -> None:
+    """Blockwise kernels are int8-only; reject widths they would silently
+    mis-quantise (4/16-bit configs must use mode='global')."""
+    if quant_bits not in (8,) and quant_bits < 32:
+        raise ValueError(
+            f"blockwise mode supports quant_bits 8 or >=32, got "
+            f"{quant_bits}; use mode='global' for other widths"
+        )
 
 
 def init_error(params: Any) -> jax.Array:
@@ -115,29 +148,8 @@ def compress_update(
         return unravel(recon), new_err
 
     if cfg.mode == "blockwise":
-        if cfg.quant_bits not in (8,) and cfg.quant_bits < 32:
-            # The fused kernel is hardwired to int8; quantising 4/16-bit
-            # configs at 8 bits would silently diverge from the payload
-            # accounting in payload_bits().
-            raise ValueError(
-                f"blockwise mode supports quant_bits 8 or >=32, got "
-                f"{cfg.quant_bits}; use mode='global' for other widths"
-            )
-        # rho_s is a fraction of the REAL coordinates.  The kernels pad the
-        # flat vector to whole (BLOCK_ELEMS) tiles and keep a uniform k per
-        # tile, so solve for the k that keeps ~rho_s * d coords total: the
-        # tail tile can contribute at most its real coordinates (padding
-        # zeros never pass the magnitude threshold), so when the uniform k
-        # exceeds the tail, the full tiles must absorb the difference.
-        d = flat.shape[0]
-        block = kops.BLOCK_ELEMS
-        nb = max(1, -(-d // block))
-        tail = d - (nb - 1) * block      # real coords in the last tile
-        target = max(1, round(cfg.rho_s * d))
-        k = target / nb
-        if nb > 1 and k > tail:
-            k = (target - tail) / (nb - 1)
-        k_frac = min(1.0, k / block)
+        validate_blockwise_bits(cfg.quant_bits)
+        k_frac = blockwise_k_frac(flat.shape[0], cfg.rho_s)
         if cfg.quant_bits < 32:
             recon, new_err, _ = kops.compress(
                 flat, err, k_frac, cfg.use_pallas, cfg.interpret

@@ -18,15 +18,20 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from jax.sharding import Mesh, PartitionSpec as P
+
 from repro.core import aggregation as agg
 from repro.core import association as assoc
 from repro.core import channel as ch
 from repro.core import compression as comp
 from repro.core import energy as en
 from repro.core import topology as topo
-from repro.core.hfl import HFLConfig, HFLState, RoundMetrics, _local_train
+from repro.core.hfl import (
+    HFLConfig, HFLState, RoundMetrics, _client_train_fn, _clients_round,
+)
 from repro.data.pipeline import multi_epoch_batches
 from repro.data.synthetic import SensorDataset
+from repro.launch.mesh import shard_map_compat
 from repro.optim import scaffold as scf
 from repro.optim import server as srv
 from repro.optim.sgd import local_sgd
@@ -36,9 +41,25 @@ LossFn = Callable[[Params, jax.Array], jax.Array]
 
 
 def make_flat_round_fn(
-    loss_fn: LossFn, ds: SensorDataset, cfg: HFLConfig
+    loss_fn: LossFn,
+    ds: SensorDataset,
+    cfg: HFLConfig,
+    *,
+    client_mesh: Mesh | None = None,
 ) -> Callable[[HFLState, None], tuple[HFLState, RoundMetrics]]:
-    """FedAvg (prox_mu=0) / FedProx (prox_mu>0) direct-to-gateway round."""
+    """FedAvg (prox_mu=0) / FedProx (prox_mu>0) direct-to-gateway round.
+
+    The gateway is a single "cluster": compression + the weighted FedAvg
+    mean run through the same fused compress-and-aggregate operator as the
+    hierarchical loop, with ``n_fog=1``.  ``client_mesh`` shards the
+    client axis exactly as in :func:`repro.core.hfl.make_round_fn`.
+    """
+    client_step = _client_train_fn(loss_fn, cfg)
+    if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
+        raise ValueError(
+            f"client axis ({ds.train.shape[0]} sensors) must divide the "
+            f"({client_mesh.size})-device client mesh"
+        )
 
     def round_fn(state: HFLState, _) -> tuple[HFLState, RoundMetrics]:
         key, k_mob, k_train = jax.random.split(state.key, 3)
@@ -55,18 +76,31 @@ def make_flat_round_fn(
         n = ds.train.shape[0]
         keys = jax.random.split(k_train, n)
 
-        def client_step(data, k, err):
-            p1, loss = _local_train(loss_fn, state.params, data, k, cfg)
-            delta = jax.tree_util.tree_map(lambda a, b: a - b, p1, state.params)
-            recon, new_err = comp.compress_update(delta, err, cfg.compressor)
-            return ravel_pytree(recon)[0], new_err, loss
-
-        deltas, new_err, losses = jax.vmap(client_step)(ds.train, keys, state.err)
         active_f = active.astype(jnp.float32)
-        new_err = jnp.where(active[:, None], new_err, state.err)
         weights = ds.n_samples * active_f
+        gateway_id = jnp.zeros((ds.train.shape[0],), jnp.int32)
 
-        mean_delta = agg.weighted_mean(deltas, weights)
+        if client_mesh is None:
+            fog_delta, _, new_err, losses = _clients_round(
+                client_step, state.params, ds.train, keys, state.err,
+                weights, gateway_id, 1, cfg.compressor,
+            )
+        else:
+            sharded = shard_map_compat(
+                lambda p, dat, kk, e, w, fid: _clients_round(
+                    client_step, p, dat, kk, e, w, fid, 1,
+                    cfg.compressor, axis="data",
+                ),
+                mesh=client_mesh,
+                in_specs=(P(), P("data"), P("data"), P("data"),
+                          P("data"), P("data")),
+                out_specs=(P(), P(), P("data"), P("data")),
+            )
+            fog_delta, _, new_err, losses = sharded(
+                state.params, ds.train, keys, state.err, weights, gateway_id
+            )
+        new_err = jnp.where(active[:, None], new_err, state.err)
+        mean_delta = fog_delta[0]
         if cfg.server_opt == "adam":
             # FedAdam [34] at the gateway: delta is the pseudo-gradient.
             incr, server = srv.adam_update(
@@ -113,11 +147,13 @@ def train_flat(
     loss_fn: LossFn,
     ds: SensorDataset,
     cfg: HFLConfig,
+    *,
+    client_mesh: Mesh | None = None,
 ) -> tuple[Params, RoundMetrics]:
     from repro.core.hfl import init_state
 
     state = init_state(key, init_params, cfg)
-    round_fn = make_flat_round_fn(loss_fn, ds, cfg)
+    round_fn = make_flat_round_fn(loss_fn, ds, cfg, client_mesh=client_mesh)
     final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
     return final.params, metrics
 

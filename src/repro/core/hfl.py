@@ -5,6 +5,17 @@ rounds.  Clients are a vmapped leading axis (their local SGD runs in
 parallel), fog clusters are segment-sum groups, and the three cooperation
 rules from Sec. V-B drive the mixing step.  Per-round energy (Eqs. 17-20),
 latency (Eq. 21), participation, and battery dynamics are all recorded.
+
+Compression (Eq. 30) and fog aggregation (Eq. 13) run as ONE fused
+operator — :func:`repro.core.aggregation.compress_and_aggregate` — so the
+dense per-client reconstructions never materialise; set
+``CompressorConfig.fused=False`` for the legacy two-pass pipeline.
+
+Pass ``client_mesh`` (a 1-D ``("data",)`` mesh, see
+``launch/sharding.client_mesh``) to :func:`train` / :func:`make_round_fn`
+to shard the client axis over devices: local SGD + compression run
+per-shard under ``shard_map`` and the fog buffers are reduced with psum
+collectives, the multi-device analogue of the sensor->fog acoustic hop.
 """
 from __future__ import annotations
 
@@ -14,6 +25,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import association as assoc
@@ -24,6 +36,7 @@ from repro.core import energy as en
 from repro.core import topology as topo
 from repro.data.pipeline import multi_epoch_batches
 from repro.data.synthetic import SensorDataset
+from repro.launch.mesh import shard_map_compat
 from repro.optim import server as srv
 from repro.optim.sgd import local_sgd, proximal_local_sgd
 
@@ -104,13 +117,60 @@ def _local_train(
     return local_sgd(loss_fn, params, batches, cfg.lr)
 
 
+def _client_train_fn(loss_fn: LossFn, cfg: HFLConfig):
+    """Per-client step: local SGD from the broadcast params, flat delta."""
+
+    def client_step(params: Params, data: jax.Array, k: jax.Array):
+        p1, loss = _local_train(loss_fn, params, data, k, cfg)
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, p1, params)
+        return ravel_pytree(delta)[0], loss
+
+    return client_step
+
+
+def _clients_round(
+    client_step, params, data, keys, err, weights, fog_id, n_fog, cc,
+    axis: str | None = None,
+):
+    """Train every client and fuse compression into the fog reduction.
+
+    With ``axis`` set this is the shard_map body: each shard trains its
+    slice of the client axis and contributes partial fog sums; the psum
+    pair is the sensor->fog hop (cf. aggregation.hierarchical_mean).
+    Returns (fog_delta (n_fog, d) — Eq. 13 cluster means — fog_weight,
+    new_err (N_local, d), losses (N_local,)).
+    """
+    deltas, losses = jax.vmap(
+        lambda dd, kk: client_step(params, dd, kk)
+    )(data, keys)
+    fog_delta, fog_weight, new_err = agg.compress_and_aggregate(
+        deltas, err, fog_id, weights, n_fog, cc, axis=axis
+    )
+    return fog_delta, fog_weight, new_err, losses
+
+
 def make_round_fn(
-    loss_fn: LossFn, ds: SensorDataset, cfg: HFLConfig
+    loss_fn: LossFn,
+    ds: SensorDataset,
+    cfg: HFLConfig,
+    *,
+    client_mesh: Mesh | None = None,
 ) -> Callable[[HFLState, None], tuple[HFLState, RoundMetrics]]:
-    """Build the jittable single-round function (Algorithm 1)."""
+    """Build the jittable single-round function (Algorithm 1).
+
+    ``client_mesh``: optional 1-D ``("data",)`` mesh; when given, the
+    client axis (local SGD + fused compression) is sharded over its
+    devices with fog reduction via psum collectives.  Requires the sensor
+    count to divide the mesh size.
+    """
 
     n_fog = cfg.deployment.n_fog
-    d_model = None  # resolved at first trace via ravel
+    client_step = _client_train_fn(loss_fn, cfg)
+    if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
+        raise ValueError(
+            f"client axis ({ds.train.shape[0]} sensors) must divide the "
+            f"({client_mesh.size})-device client mesh"
+        )
 
     def round_fn(state: HFLState, _) -> tuple[HFLState, RoundMetrics]:
         key, k_mob, k_train = jax.random.split(state.key, 3)
@@ -125,32 +185,38 @@ def make_round_fn(
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
 
-        # --- 2. local training & compression (lines 8-13) ----------------
+        # --- 2+3. local training, fused compression + fog aggregation
+        # (lines 8-18, Eqs. 30 + 13 as one operator) -----------------------
         flat0, unravel = ravel_pytree(state.params)
         d = flat0.shape[0]
         n = ds.train.shape[0]
         keys = jax.random.split(k_train, n)
 
-        def client_step(data, k, err):
-            p1, loss = _local_train(loss_fn, state.params, data, k, cfg)
-            delta = jax.tree_util.tree_map(
-                lambda a, b: a - b, p1, state.params
-            )
-            recon, new_err = comp.compress_update(delta, err, cfg.compressor)
-            return ravel_pytree(recon)[0], new_err, loss
-
-        deltas, new_err, losses = jax.vmap(client_step)(
-            ds.train, keys, state.err
-        )
-        # Non-participants keep their error buffer and contribute nothing.
         active_f = active.astype(jnp.float32)
-        new_err = jnp.where(active[:, None], new_err, state.err)
         weights = ds.n_samples * active_f
 
-        # --- 3. fog aggregation (Eq. 13, lines 14-18) ---------------------
-        fog_delta, fog_weight = agg.fog_aggregate(
-            deltas, fa.fog_id, weights, n_fog
-        )
+        if client_mesh is None:
+            fog_delta, fog_weight, new_err, losses = _clients_round(
+                client_step, state.params, ds.train, keys, state.err,
+                weights, fa.fog_id, n_fog, cfg.compressor,
+            )
+        else:
+            sharded = shard_map_compat(
+                lambda p, dat, kk, e, w, fid: _clients_round(
+                    client_step, p, dat, kk, e, w, fid, n_fog,
+                    cfg.compressor, axis="data",
+                ),
+                mesh=client_mesh,
+                in_specs=(P(), P("data"), P("data"), P("data"),
+                          P("data"), P("data")),
+                out_specs=(P(), P(), P("data"), P("data")),
+            )
+            fog_delta, fog_weight, new_err, losses = sharded(
+                state.params, ds.train, keys, state.err, weights, fa.fog_id
+            )
+        # Non-participants keep their error buffer and contribute nothing.
+        new_err = jnp.where(active[:, None], new_err, state.err)
+
         fog_model = fog_delta + flat0[None, :]          # theta_m^{t+1/2}
         mixed = agg.cooperative_mix(fog_model, decision)  # Eq. 15
 
@@ -237,9 +303,11 @@ def train(
     loss_fn: LossFn,
     ds: SensorDataset,
     cfg: HFLConfig,
+    *,
+    client_mesh: Mesh | None = None,
 ) -> tuple[Params, RoundMetrics]:
     """Run T federated rounds; returns (final params, stacked metrics)."""
     state = init_state(key, init_params, cfg)
-    round_fn = make_round_fn(loss_fn, ds, cfg)
+    round_fn = make_round_fn(loss_fn, ds, cfg, client_mesh=client_mesh)
     final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
     return final.params, metrics

@@ -27,12 +27,21 @@ Compressor default
 ------------------
 Unless constructed with ``compressor="keep"``, the engine rewrites sparse
 (``rho_s < 1``) ``mode="global"`` compressor configs to the blockwise
-kernel path: the fused Pallas Top-K + error-feedback + int8 kernel
-(``kernels/quant8.compress_blocks``) on TPU, and the pure-jnp oracle
-(``kernels/ref``) everywhere else — compiled Pallas needs a real TPU and
-interpret mode is only a correctness tool, so CPU/GPU fall back
-automatically.  ``Engine.resolve_config`` exposes the rewrite so
-sequential comparisons can run the identical numerics.
+kernel path: compiled Pallas on TPU, the pure-jnp oracle (``kernels/ref``)
+everywhere else — compiled Pallas needs a real TPU and interpret mode is
+only a correctness tool, so CPU/GPU fall back automatically.
+``Engine.resolve_config`` exposes the rewrite so sequential comparisons
+can run the identical numerics.
+
+Inside the round loops, compression and fog aggregation run FUSED by
+default: ``core/aggregation.compress_and_aggregate`` dispatches to the
+one-HBM-pass compress-and-aggregate kernel (``kernels/fused_agg``, jnp
+oracle ``kernels/ref.compress_aggregate_ref``) which accumulates each
+client's reconstruction straight into the (n_fog, d) fog buffers instead
+of materialising dense (N, d) reconstructions and re-reading them in a
+segment-sum.  Opt out per config with
+``CompressorConfig(fused=False)`` — the legacy two-pass pipeline, kept as
+the equivalence baseline.
 
 Sharding
 --------
@@ -40,6 +49,15 @@ With more than one device, input leaves are placed with the
 ``launch/sharding.py`` resolution rules on a 1-D ``("data",)`` mesh: the
 trial axis shards when divisible by the device count, otherwise the
 client axis of the dataset leaves does.  On one device this is a no-op.
+
+``Engine(shard_clients=True)`` instead shards the CLIENT axis *inside*
+the round loop: local SGD + fused compression run per-shard under
+``shard_map`` on the ``launch/sharding.client_mesh()`` 1-D ``("data",)``
+mesh, and the fog buffers are reduced with psum collectives
+(``aggregation.hierarchical_mean``-style) — the multi-host lever for
+deployments too large for a single device's memory.  It applies to the
+hfl / flat-FL families when the sensor count divides the device count;
+other cells silently run the default placement.
 
 Benchmarks
 ----------
@@ -132,6 +150,7 @@ class Engine:
         *,
         compressor: str = "auto",
         shard_trials: bool = True,
+        shard_clients: bool = False,
         hidden: tuple[int, ...] = (16, 8, 16),
         percentile: float = 99.0,
         point_adjusted: bool = False,
@@ -140,6 +159,7 @@ class Engine:
             raise ValueError(f"compressor must be auto|keep, got {compressor!r}")
         self.compressor = compressor
         self.shard_trials = shard_trials
+        self.shard_clients = shard_clients
         self.hidden = hidden
         self.percentile = percentile
         self.point_adjusted = point_adjusted
@@ -216,6 +236,21 @@ class Engine:
             self._programs[cache_key] = fn
             self.compile_count += 1
         return fn, fresh
+
+    def _client_mesh(self, method: str, stacked: SensorDataset):
+        """The in-loop client-axis mesh for a ``run`` cell, or None.
+
+        Client sharding needs >1 device, a round-loop family that routes
+        through the fused pipeline (hfl / flat FL), and a sensor count the
+        device count divides; every other cell keeps default placement.
+        """
+        if not self.shard_clients or method in ("centralised", "scaffold"):
+            return None
+        devices = jax.devices()
+        n_clients = stacked.train.shape[1]
+        if len(devices) <= 1 or n_clients % len(devices) != 0:
+            return None
+        return shard_rules.client_mesh(devices)
 
     def _place(self, tree: Any, n_leading: int) -> Any:
         """Shard inputs over devices with the launch/sharding rules.
@@ -294,11 +329,13 @@ class Engine:
         stacked = self._as_stacked(ds, seeds)
         s_n, p_n = len(seeds), n_deployments
         keys = self._trial_keys(seeds, p_n)           # (S, P)
+        client_mesh = self._client_mesh(method, stacked)
         shapes = tuple(
             (x.shape, str(x.dtype)) for x in jax.tree_util.tree_leaves(stacked)
         )
         cache_key = ("run", method, cfg, s_n, p_n, shapes,
-                     self.hidden, self.percentile, self.point_adjusted)
+                     self.hidden, self.percentile, self.point_adjusted,
+                     client_mesh.size if client_mesh is not None else 0)
 
         def build():
             def trial(key, one_ds):
@@ -307,6 +344,7 @@ class Engine:
                     percentile=self.percentile,
                     point_adjusted=self.point_adjusted,
                     hidden=self.hidden,
+                    client_mesh=client_mesh,
                 )
 
             # Inner vmap broadcasts the seed's dataset over the deployment
@@ -315,11 +353,14 @@ class Engine:
             return jax.vmap(jax.vmap(trial, in_axes=(0, None)))
 
         fn, fresh = self._get_program(cache_key, build)
-        keys, stacked = self._place(keys, s_n), self._place(stacked, s_n)
+        if client_mesh is None:
+            # client-sharded cells leave placement to the in-loop shard_map
+            keys, stacked = self._place(keys, s_n), self._place(stacked, s_n)
         out, wall = self._timed_call(fn, keys, stacked)
         self._log(kind="run", method=method, label=label or method,
                   n_trials=s_n * p_n, wall_s=wall, fresh_compile=fresh,
-                  compressor=_describe_compressor(cfg.compressor))
+                  compressor=_describe_compressor(cfg.compressor),
+                  client_sharded=client_mesh is not None)
         return EngineRun(method, cfg, seeds, p_n, out, wall, fresh)
 
     def audit(
@@ -352,6 +393,49 @@ class Engine:
         self._log(kind="audit", method=method, label=label or method,
                   n_trials=s_n * p_n, wall_s=wall, fresh_compile=fresh,
                   compressor=_describe_compressor(cfg.compressor))
+        return out
+
+    def reachability(
+        self,
+        cfg: hfl.HFLConfig,
+        seeds: Sequence[int],
+        *,
+        n_deployments: int = 1,
+        label: str | None = None,
+    ) -> dict[str, jax.Array]:
+        """Batched geometry-only reachability study (the Fig. 5 family).
+
+        Training- and model-free: each trial samples a deployment and
+        computes the direct-gateway / fog-assisted / fog-to-gateway
+        feasibility fractions.  Returns (S, P)-leading arrays; trial
+        (s, 0) matches a sequential ``topo.sample_deployment`` +
+        ``participation.reachability`` call from ``jax.random.key(s)``.
+        """
+        from repro.core import participation as part
+        from repro.core import topology as topo
+
+        seeds = tuple(int(s) for s in seeds)
+        s_n, p_n = len(seeds), n_deployments
+        keys = self._trial_keys(seeds, p_n)           # (S, P)
+        cache_key = ("reach", cfg.deployment, cfg.channel, s_n, p_n)
+
+        def build():
+            def trial(key):
+                dep = topo.sample_deployment(key, cfg.deployment)
+                r = part.reachability(dep, cfg.channel)
+                return {
+                    "direct_gateway": r.direct_gateway,
+                    "fog_assisted": r.fog_assisted,
+                    "fog_to_gateway": r.fog_to_gateway,
+                }
+
+            return jax.vmap(jax.vmap(trial))
+
+        fn, fresh = self._get_program(cache_key, build)
+        out, wall = self._timed_call(fn, keys)
+        self._log(kind="reachability", method="reachability",
+                  label=label or "reachability", n_trials=s_n * p_n,
+                  wall_s=wall, fresh_compile=fresh, compressor="n/a")
         return out
 
     def pod_train_step(

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused compress-and-aggregate (EF Top-K + int8 +
+weighted fog accumulation) — the federated round's hot path in ONE pass.
+
+The unfused pipeline makes three HBM round-trips per round: the compress
+kernel writes a dense reconstruction per client, the error buffer, and the
+fog segment-sum then re-reads every reconstruction.  This kernel loads each
+(client, block) tile once, runs the identical sparsify-quantise-residual
+computation in VMEM (bit-for-bit the :func:`repro.kernels.ref.compress_ref`
+semantics), and accumulates ``w_i * recon_i`` straight into a per-fog VMEM
+accumulator — the dense (N, d) reconstruction never exists in HBM, only the
+(n_fog, d) weighted sums and the (N, d) error buffer (which is round state
+and has to be written regardless).
+
+Grid layout: ``(nb, N)`` with the client axis INNERMOST, so the fog
+accumulator block for column ``j`` stays resident in VMEM across all N
+sequential client steps (zeroed at ``i == 0``, flushed when ``j``
+advances).  ``fog_id`` / ``weights`` ride in as scalar-prefetch operands
+(SMEM), which is what lets the kernel scatter into a dynamic fog row with
+``pl.dslice`` — no sorting of clients by cluster required.  The per-fog
+block is (n_fog, BLOCK_ROWS, BLOCK_LANES) f32: at the paper's M = N/10
+(n_fog <= 20) that is ~640 KiB, comfortably inside VMEM next to the three
+32 KiB client tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import BISECT_ITERS
+from repro.kernels.topk_ef import BLOCK_LANES, BLOCK_ROWS
+
+
+def _fused_agg_kernel(
+    fog_id_ref,   # (N,) int32  scalar prefetch
+    w_ref,        # (N,) f32    scalar prefetch
+    delta_ref,    # (1, 1, R, L)
+    err_ref,      # (1, 1, R, L)
+    fog_ref,      # (n_fog, 1, R, L) accumulator, resident across clients
+    new_err_ref,  # (1, 1, R, L)
+    *,
+    k: int,
+    quantize: bool,
+):
+    i = pl.program_id(1)  # client index (innermost grid axis)
+
+    @pl.when(i == 0)
+    def _():
+        fog_ref[...] = jnp.zeros_like(fog_ref)
+
+    v = delta_ref[...] + err_ref[...]
+    absv = jnp.abs(v)
+
+    # Threshold bisection, identical to ref.bisect_threshold: invariant
+    # count(> hi) <= k <= count(> lo).
+    lo = jnp.float32(-1.0)
+    hi = jnp.max(absv)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        take = jnp.sum(absv > mid) > k
+        return jnp.where(take, mid, lo), jnp.where(take, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    sparse = jnp.where(absv > hi, v, 0.0)
+
+    if quantize:
+        amax = jnp.max(jnp.abs(sparse))
+        scale = amax / 127.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(sparse / safe), -127, 127).astype(jnp.int8)
+        q = jnp.where(scale > 0, q, jnp.zeros_like(q))
+        recon = q.astype(jnp.float32) * scale
+    else:
+        recon = sparse
+    new_err_ref[...] = v - recon
+
+    # Scatter-accumulate into this client's fog row (data-dependent index
+    # from the prefetched cluster assignment).
+    idx = (pl.dslice(fog_id_ref[i], 1), pl.dslice(0, 1),
+           slice(None), slice(None))
+    acc = pl.load(fog_ref, idx)
+    pl.store(fog_ref, idx, acc + w_ref[i] * recon)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_fog", "k_per_block", "quantize", "interpret")
+)
+def compress_aggregate_blocks(
+    delta: jax.Array,     # (N, nb, BLOCK_ROWS, BLOCK_LANES) f32
+    err: jax.Array,       # (N, nb, BLOCK_ROWS, BLOCK_LANES) f32
+    fog_id: jax.Array,    # (N,) int32
+    weights: jax.Array,   # (N,) f32
+    n_fog: int,
+    k_per_block: int,
+    quantize: bool = True,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Run the fused kernel over blocked input.
+
+    Returns (fog_sum (n_fog, nb, R, L) f32 — unnormalised weighted sums —
+    and new_err, same shape/dtype as ``delta``).
+    """
+    n, nb = delta.shape[:2]
+    assert delta.shape == (n, nb, BLOCK_ROWS, BLOCK_LANES), delta.shape
+    tile = pl.BlockSpec((1, 1, BLOCK_ROWS, BLOCK_LANES),
+                        lambda j, i, *_: (i, j, 0, 0))
+    fog_spec = pl.BlockSpec((n_fog, 1, BLOCK_ROWS, BLOCK_LANES),
+                            lambda j, i, *_: (0, j, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb, n),
+        in_specs=[tile, tile],
+        out_specs=[fog_spec, tile],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_agg_kernel, k=k_per_block, quantize=quantize),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_fog, nb, BLOCK_ROWS, BLOCK_LANES),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct(delta.shape, delta.dtype),
+        ],
+        interpret=interpret,
+    )(fog_id.astype(jnp.int32), weights.astype(jnp.float32), delta, err)

@@ -14,6 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_agg as _fa
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
 from repro.kernels import topk_ef as _tk
@@ -28,6 +29,14 @@ def _pad_blocks(x: jax.Array) -> tuple[jax.Array, int]:
     nb = max(1, -(-n // BLOCK_ELEMS))
     padded = jnp.zeros((nb * BLOCK_ELEMS,), x.dtype).at[:n].set(x)
     return padded.reshape(nb, _tk.BLOCK_ROWS, _tk.BLOCK_LANES), n
+
+
+def _pad_blocks_batch(x: jax.Array) -> tuple[jax.Array, int]:
+    """Zero-pad (N, d) rows to (N, nb, ROWS, LANES); return original d."""
+    n_rows, d = x.shape
+    nb = max(1, -(-d // BLOCK_ELEMS))
+    padded = jnp.zeros((n_rows, nb * BLOCK_ELEMS), x.dtype).at[:, :d].set(x)
+    return padded.reshape(n_rows, nb, _tk.BLOCK_ROWS, _tk.BLOCK_LANES), d
 
 
 def _unpad(x: jax.Array, n: int) -> jax.Array:
@@ -114,6 +123,53 @@ def compress(
     b_idx = jnp.ceil(jnp.log2(d.astype(jnp.float32)))
     payload_bits = nnz.astype(jnp.float32) * (8.0 + b_idx)
     return _unpad(recon, n), _unpad(new_err, n), payload_bits
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_fog", "k_frac", "quantize", "use_pallas", "interpret"),
+)
+def compress_aggregate(
+    deltas: jax.Array,    # (N, d) raw per-client flat updates
+    err: jax.Array,       # (N, d) error-feedback buffers
+    fog_id: jax.Array,    # (N,) int32 cluster assignment
+    weights: jax.Array,   # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    k_frac: float,
+    quantize: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused EF Top-K (+ int8) compression and weighted fog accumulation.
+
+    One pass over the (N, d) updates: each client's blockwise
+    reconstruction is accumulated directly into its fog cluster's buffer
+    instead of being materialised densely and re-read by a segment-sum.
+
+    Returns (fog_sum (n_fog, d) f32 — UNNORMALISED weighted sums
+    ``sum_{i in C_m} w_i recon_i``; divide by the per-fog weight totals for
+    Eq. 13 — and new_err (N, d)).
+    """
+    blocks, d = _pad_blocks_batch(deltas)
+    err_blocks, _ = _pad_blocks_batch(err)
+    k = max(1, int(round(k_frac * BLOCK_ELEMS)))
+    if use_pallas:
+        fog_blocks, new_err = _fa.compress_aggregate_blocks(
+            blocks, err_blocks, fog_id, weights, n_fog, k, quantize, interpret
+        )
+    else:
+        n_rows = blocks.shape[0]
+        fog_blocks, new_err = _ref.compress_aggregate_ref(
+            blocks.reshape(n_rows, blocks.shape[1], -1),
+            err_blocks.reshape(n_rows, blocks.shape[1], -1),
+            fog_id,
+            weights,
+            n_fog,
+            k,
+            quantize,
+        )
+    fog_sum = fog_blocks.reshape(n_fog, -1)[:, :d]
+    return fog_sum, new_err.reshape(deltas.shape[0], -1)[:, :d]
 
 
 def swa_decode_attention(

@@ -20,15 +20,21 @@ import jax.numpy as jnp
 BISECT_ITERS = 32
 
 
-def bisect_threshold(absx: jax.Array, k: int, iters: int = BISECT_ITERS) -> jax.Array:
+def bisect_threshold(
+    absx: jax.Array, k: int, iters: int = BISECT_ITERS,
+    hi: jax.Array | None = None,
+) -> jax.Array:
     """Magnitude threshold t with |{i : absx_i > t}| <= k, maximal keep.
 
     ``absx``: (..., block) non-negative.  Returns (..., 1) threshold.
     Invariant maintained: count(> hi) <= k <= count(> lo)  (lo starts at -1
-    so every entry passes; hi starts at max so none does).
+    so every entry passes; hi starts at max so none does).  Callers that
+    already hold the per-block max can pass it as ``hi`` to skip the
+    reduction.
     """
     lo = jnp.full(absx.shape[:-1] + (1,), -1.0, absx.dtype)
-    hi = jnp.max(absx, axis=-1, keepdims=True)
+    if hi is None:
+        hi = jnp.max(absx, axis=-1, keepdims=True)
 
     def body(_, lohi):
         lo, hi = lohi
@@ -96,6 +102,54 @@ def compress_ref(
     q, scale = quant8_ref(sparse)
     recon = dequant8_ref(q, scale)
     return q, scale, v - recon
+
+
+def compress_aggregate_ref(
+    delta: jax.Array,        # (N, nb, block) per-client blocked updates
+    err: jax.Array,          # (N, nb, block) EF buffers
+    fog_id: jax.Array,       # (N,) int32 cluster id per client
+    weights: jax.Array,      # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    k_per_block: int,
+    quantize: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused compress-and-aggregate kernel.
+
+    Per client: EF Top-K (+ optional int8 round-trip), exactly the
+    :func:`compress_ref` / :func:`blockwise_topk_ef_ref` semantics; the
+    reconstructions are then weight-scaled and segment-summed into per-fog
+    accumulators instead of being returned densely.
+
+    Returns (fog_sum (n_fog, nb, block) f32 — the UNNORMALISED weighted
+    sums sum_{i in C_m} w_i recon_i — and new_err (N, nb, block)).
+    """
+    v = delta + err
+    absv = jnp.abs(v)
+    amax = jnp.max(absv, axis=-1, keepdims=True)
+    t = bisect_threshold(absv, k_per_block, hi=amax)
+    sparse = jnp.where(absv > t, v, 0.0)
+    if quantize:
+        # int8 round-trip in f32: round() yields exact integers <= 127, so
+        # q * scale is bit-identical to quant8_ref + dequant8_ref without
+        # materialising the int8 codes (the fused op never transmits them).
+        # The quantisation scale reuses the block max of absv: whenever any
+        # coordinate survives the threshold the block max survives too
+        # (absv_max > t), so max|sparse| == max(absv); when nothing
+        # survives, sparse is all-zero and the scale multiplies only
+        # zeros — recon/new_err are identical either way.
+        scale = amax / 127.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(sparse / safe), -127.0, 127.0)
+        recon = jnp.where(scale > 0, q * scale, 0.0)
+    else:
+        recon = sparse
+    # Cluster reduction as a one-hot GEMM with the weights folded into the
+    # selector: no dense (N, nb, block) weighted intermediate, no scatter.
+    sel = jnp.where(
+        fog_id[None, :] == jnp.arange(n_fog)[:, None], weights[None, :], 0.0
+    ).astype(jnp.float32)
+    fog_sum = jnp.tensordot(sel, recon.astype(jnp.float32), axes=(1, 0))
+    return fog_sum, v - recon
 
 
 def sliding_window_decode_attention_ref(

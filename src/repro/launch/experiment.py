@@ -84,6 +84,7 @@ def trial_metrics(
     percentile: float = 99.0,
     point_adjusted: bool = False,
     hidden: tuple[int, ...] = (16, 8, 16),
+    client_mesh=None,
 ) -> dict[str, jax.Array]:
     """One fully traced trial: train ``method`` from ``key``, evaluate.
 
@@ -91,6 +92,10 @@ def trial_metrics(
     path and the batched :class:`repro.engine.Engine` (which vmaps it over
     a leading trial axis).  Everything returned is a jnp value; only
     ``method``/``cfg``/keyword knobs are static.
+
+    ``client_mesh``: optional 1-D ``("data",)`` mesh — shards the client
+    axis of the hfl / flat-FL round loops over devices (scaffold and the
+    centralised oracle run unsharded; they bypass the fused pipeline).
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; one of {METHODS}")
@@ -115,7 +120,10 @@ def trial_metrics(
                 prox_mu=PROX_MU if method == "fedprox" else 0.0,
                 server_opt="adam" if method == "fedadam" else cfg.server_opt,
             )
-            params, m = flat_fl.train_flat(k_train, params0, ae.loss, ds, run_cfg)
+            params, m = flat_fl.train_flat(
+                k_train, params0, ae.loss, ds, run_cfg,
+                client_mesh=client_mesh,
+            )
         elif method == "scaffold":
             params, m = flat_fl.train_scaffold(k_train, params0, ae.loss, ds, cfg)
         else:
@@ -124,7 +132,10 @@ def trial_metrics(
                 prox_mu=0.0,
                 server_opt="adam" if method == "hfl-adam" else cfg.server_opt,
             )
-            params, m = hfl.train(k_train, params0, ae.loss, ds, run_cfg)
+            params, m = hfl.train(
+                k_train, params0, ae.loss, ds, run_cfg,
+                client_mesh=client_mesh,
+            )
         out = {
             "e_total": jnp.sum(m.e_total),
             "e_s2f": jnp.sum(m.e_s2f),

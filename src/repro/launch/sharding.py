@@ -44,6 +44,18 @@ MODEL_PRIORITY = (
 DATA_PRIORITY = ("batch", "embed", "cache_seq", "tokens")
 
 
+def client_mesh(devices=None) -> Mesh:
+    """1-D ``("data",)`` mesh over the local devices — the client-axis
+    shard_map mesh for the federated round loop (``core/hfl.train`` /
+    ``core/flat_fl.train_flat`` ``client_mesh=`` and the engine's
+    ``shard_clients`` mode): sensors shard over ``data``, fog reduction is
+    a psum over it."""
+    import numpy as np
+
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("data",))
+
+
 def _axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name]
 
