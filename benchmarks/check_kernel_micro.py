@@ -9,6 +9,9 @@ purpose: shared CI runners are noisy, and the gate exists to catch
 *structural* regressions such as an accidentally de-jitted hot path, not
 scheduling jitter).  Checked per matching row: ``us_ref`` in the compress
 table and ``us_fused_ref`` in the fused-aggregate table.
+
+``compare``/``gate_main`` are table-agnostic so sibling gates (e.g.
+``benchmarks/check_serve_bench``) reuse them with their own row specs.
 """
 from __future__ import annotations
 
@@ -18,17 +21,21 @@ import sys
 
 THRESHOLD = 3.0
 
+# (table name, row-key fields, timed field) triples this gate checks.
+CHECKS = (
+    ("rows", ("n",), "us_ref"),
+    ("agg_rows", ("n_clients", "d"), "us_fused_ref"),
+)
+
 
 def _index(rows: list[dict], keys: tuple[str, ...]) -> dict:
     return {tuple(r[k] for k in keys): r for r in rows}
 
 
-def compare(fresh: dict, baseline: dict, threshold: float) -> list[str]:
+def compare(
+    fresh: dict, baseline: dict, threshold: float, checks=CHECKS
+) -> list[str]:
     failures = []
-    checks = (
-        ("rows", ("n",), "us_ref"),
-        ("agg_rows", ("n_clients", "d"), "us_fused_ref"),
-    )
     for table, keys, field in checks:
         fresh_rows = _index(fresh.get(table, []), keys)
         for row_key, base_row in _index(baseline.get(table, []), keys).items():
@@ -54,17 +61,17 @@ def compare(fresh: dict, baseline: dict, threshold: float) -> list[str]:
     return failures
 
 
-def main() -> int:
+def gate_main(checks=CHECKS, name: str = "kernel_micro") -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("fresh", help="freshly generated kernel_micro.json")
-    ap.add_argument("baseline", help="committed baseline kernel_micro.json")
+    ap.add_argument("fresh", help=f"freshly generated {name}.json")
+    ap.add_argument("baseline", help=f"committed baseline {name}.json")
     ap.add_argument("--threshold", type=float, default=THRESHOLD)
     args = ap.parse_args()
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    failures = compare(fresh, baseline, args.threshold)
+    failures = compare(fresh, baseline, args.threshold, checks)
     if failures:
         print(f"PERF REGRESSION (> {args.threshold}x):")
         for line in failures:
@@ -72,11 +79,15 @@ def main() -> int:
         print(
             "If this PR intentionally changed the benchmark or the runner "
             "hardware class changed, regenerate the baseline: "
-            "PYTHONPATH=src python -m benchmarks.run --only kernel_micro"
+            f"PYTHONPATH=src python -m benchmarks.run --only {name}"
         )
         return 1
-    print(f"kernel_micro within {args.threshold}x of the committed baseline")
+    print(f"{name} within {args.threshold}x of the committed baseline")
     return 0
+
+
+def main() -> int:
+    return gate_main()
 
 
 if __name__ == "__main__":

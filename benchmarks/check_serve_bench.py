@@ -1,0 +1,26 @@
+"""Perf-trend gate for the serving benchmark (sibling of
+``check_kernel_micro``, same estimator and threshold semantics).
+
+  python -m benchmarks.check_serve_bench FRESH.json BASELINE.json
+
+Fails on a >3x regression of any fused score-kernel row
+(``score_rows[*].us_fused_ref``) against the committed
+``experiments/bench/serve_bench.json`` — the structural-regression
+tripwire for the serving hot path (an accidentally de-jitted score
+program, a dense reconstruction sneaking back into the pipeline, ...).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.check_kernel_micro import gate_main
+
+CHECKS = (("score_rows", ("fleet", "window"), "us_fused_ref"),)
+
+
+def main() -> int:
+    return gate_main(CHECKS, name="serve_bench")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,7 @@ MODULES = (
     "table4_real",
     "ablations",
     "kernel_micro",
+    "serve_bench",
     "roofline",
 )
 

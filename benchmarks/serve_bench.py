@@ -1,0 +1,131 @@
+"""Serving microbenchmark: the fused score kernel against the unfused
+scoring pipeline, plus a micro-batching service smoke with hot-swap.
+
+Two sections:
+
+* ``score_rows`` — per (fleet, window) telemetry size: one fused program
+  (``serving/score``: AE forward + error + threshold compare, no dense
+  reconstruction in HBM) vs the unfused three-program baseline
+  (``models/autoencoder.apply`` materialising the (R, d) reconstruction,
+  then ``core/anomaly``-style error + flag programs).  Min-estimator,
+  interleaved, same protocol as kernel_micro's ``agg_rows``; the committed
+  JSON is the perf-trend baseline for ``benchmarks/check_serve_bench``.
+* ``service`` — a :class:`repro.serving.ScoringService` driven over a
+  request stream with a mid-stream checkpoint publish: samples/sec,
+  p50/p99 micro-batch latency, swap and compile counts (the latter pinned
+  to 1 — fixed micro-batch shapes never retrace).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.models import autoencoder as ae
+from repro.serving import ScoringService
+from repro.serving.score import score as fused_score
+
+from benchmarks import common
+
+D = 32                                   # paper Table II feature dim
+HIDDEN = (16, 8, 16)
+SIZES = ((16, 32), (64, 64), (256, 256))  # (fleet, window): 512..65536 rows
+REPS = 16
+
+
+def _unfused_pipeline():
+    """The legacy three-program serving path: dense reconstruction in HBM
+    between separately dispatched forward / error / flag programs."""
+    fwd = jax.jit(lambda p, x: ae.apply(p, x))
+    errf = jax.jit(lambda x, r: jnp.sum(jnp.square(x - r), axis=-1))
+    flagf = jax.jit(lambda e, t: e > t)
+
+    def run(params, x, tau):
+        recon = fwd(params, x)
+        err = errf(x, recon)
+        return err, flagf(err, tau)
+
+    return run
+
+
+def run(scale: common.Scale) -> dict:
+    params = ae.init(jax.random.key(0), D, HIDDEN)
+    tau = jnp.float32(1.0)
+
+    score_rows = []
+    for fleet, window in SIZES:
+        rows = fleet * window
+        x = jax.random.normal(jax.random.key(rows), (rows, D))
+        fused = jax.jit(
+            lambda p, xx, t: fused_score(p, xx, t, use_pallas=False)
+        )
+        unfused = _unfused_pipeline()
+        # Warm both, then interleave single blocked calls with alternating
+        # within-pair order and keep the MIN — the kernel_micro estimator.
+        fused(params, x, tau)[0].block_until_ready()
+        unfused(params, x, tau)[0].block_until_ready()
+        times = {"fused": [], "unfused": []}
+        pair = (("fused", fused), ("unfused", unfused))
+        for rep in range(REPS):
+            for name, fn in pair if rep % 2 == 0 else pair[::-1]:
+                t0 = time.time()
+                err, _ = fn(params, x, tau)
+                err.block_until_ready()
+                times[name].append((time.time() - t0) * 1e6)
+        us_fused = min(times["fused"])
+        us_unfused = min(times["unfused"])
+        score_rows.append(
+            dict(fleet=fleet, window=window, rows=rows, d=D,
+                 us_fused_ref=us_fused, us_unfused_ref=us_unfused,
+                 speedup=us_unfused / us_fused,
+                 samples_per_s=rows / (us_fused * 1e-6))
+        )
+
+    # --- service smoke: stream + mid-stream hot-swap ----------------------
+    with tempfile.TemporaryDirectory(prefix="serve_bench_") as ckpt_dir:
+        store = CheckpointStore(ckpt_dir, keep=2)
+        store.publish(1, params)
+        svc = ScoringService(store, params, batch_rows=4096, tau=1.0)
+        fleet, window = SIZES[-1]
+        telemetry = np.asarray(
+            jax.random.normal(jax.random.key(7), (fleet, window, D))
+        )
+        n_requests = 4 if scale.quick else 16
+        for _ in range(n_requests // 2):
+            svc.submit(telemetry)
+        svc.drain()
+        store.publish(2, jax.tree_util.tree_map(lambda a: a * 0.9, params))
+        svc.poll()
+        for _ in range(n_requests // 2):
+            svc.submit(telemetry)
+        svc.drain()
+        service = svc.stats.summary()
+        service["hot_swapped"] = svc.loaded_step == 2
+
+    return {"score_rows": score_rows, "service": service}
+
+
+def report(res: dict) -> str:
+    lines = ["serve_bench (fused score = AE fwd + err + threshold, one pass)"]
+    lines.append(
+        f"{'fleetxwin':>12} {'rows':>7} {'fused us':>10} {'unfused us':>11} "
+        f"{'speedup':>8} {'samples/s':>12}"
+    )
+    for r in res["score_rows"]:
+        lines.append(
+            f"{r['fleet']:>5}x{r['window']:<6} {r['rows']:>7} "
+            f"{r['us_fused_ref']:>10.0f} {r['us_unfused_ref']:>11.0f} "
+            f"{r['speedup']:>8.2f} {r['samples_per_s']:>12.0f}"
+        )
+    s = res["service"]
+    lines.append(
+        f"service: {s['samples']} samples / {s['steps']} micro-batches, "
+        f"p50 {s['p50_ms']:.2f} ms p99 {s['p99_ms']:.2f} ms, "
+        f"{s['samples_per_s']:.0f} samples/s, swaps={s['swaps']} "
+        f"compiles={s['compiles']}"
+    )
+    return "\n".join(lines)

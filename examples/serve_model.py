@@ -4,7 +4,6 @@ per-family cache (KV / SSM state / RG-LRU state) via the serving launcher.
   PYTHONPATH=src python examples/serve_model.py [--arch mamba2-2.7b]
 """
 import argparse
-import sys
 
 from repro.launch import serve
 
@@ -14,11 +13,10 @@ def main() -> None:
     ap.add_argument("--arch", default="mamba2-2.7b")
     args = ap.parse_args()
 
-    sys.argv = [
-        "serve", "--arch", args.arch,
+    serve.main([
+        "--arch", args.arch,
         "--batch", "4", "--prompt-len", "16", "--new-tokens", "8",
-    ]
-    serve.main()
+    ])
 
 
 if __name__ == "__main__":

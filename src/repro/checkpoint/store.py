@@ -2,13 +2,18 @@
 
 Keys are the jax.tree_util key-paths, so any pytree of arrays round-trips
 without a registry.  ``CheckpointStore`` adds step management (latest,
-retention) for the training launcher; save is atomic (tmp + rename) so a
-killed run never leaves a truncated checkpoint behind.
+retention) for the training launcher and the serving hot-swap
+(``serving/service.ScoringService`` polls ``latest_step``): ``save`` is
+atomic — the payload is staged to a unique temp file in the same directory,
+fsynced, and ``os.replace``d into place — so a concurrent reader can never
+observe a half-written round and a killed run never leaves a truncated
+checkpoint behind.
 """
 from __future__ import annotations
 
 import os
 import re
+import tempfile
 from typing import Any
 
 import jax
@@ -24,12 +29,27 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
 
 
 def save_pytree(path: str, tree: Any) -> None:
-    tmp = path + ".tmp"
-    np.savez(tmp, **_flatten(tree))
-    # np.savez appends .npz to names without it.
-    if not tmp.endswith(".npz"):
-        tmp += ".npz"
-    os.replace(tmp, path)
+    """Atomically write ``tree`` to ``path`` (tmp file + ``os.replace``).
+
+    The temp name is unique per call (no collision between concurrent
+    writers of the same step) and lives in the target directory, so the
+    final rename stays within one filesystem and is atomic.
+    """
+    directory = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=".inflight-", suffix=".npz")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            # A file object keeps np.savez from appending ".npz" to the name.
+            np.savez(f, **_flatten(tree))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def load_pytree(path: str, like: Any) -> Any:
@@ -80,7 +100,10 @@ class CheckpointStore:
         path = self._path(step)
         save_pytree(path, tree)
         for old in self.steps()[: -self.keep]:
-            os.remove(self._path(old))
+            try:
+                os.remove(self._path(old))
+            except FileNotFoundError:
+                pass  # a concurrent writer's retention pass got there first
         return path
 
     def restore(self, like: Any, step: int | None = None) -> tuple[Any, int]:
@@ -88,3 +111,11 @@ class CheckpointStore:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         return load_pytree(self._path(step), like), step
+
+    # Serving-facing aliases: the train loop *publishes* rounds, the
+    # service reads back the *latest* — see serving/service.ScoringService.
+    def publish(self, step: int, tree: Any) -> str:
+        return self.save(step, tree)
+
+    def latest(self, like: Any) -> tuple[Any, int]:
+        return self.restore(like)

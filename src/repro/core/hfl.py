@@ -305,9 +305,35 @@ def train(
     cfg: HFLConfig,
     *,
     client_mesh: Mesh | None = None,
+    store: Any | None = None,
+    publish_every: int = 1,
+    publish_offset: int = 0,
 ) -> tuple[Params, RoundMetrics]:
-    """Run T federated rounds; returns (final params, stacked metrics)."""
+    """Run T federated rounds; returns (final params, stacked metrics).
+
+    With ``store`` (a ``checkpoint.CheckpointStore``) the loop publishes
+    the global params every ``publish_every`` rounds (step = round index +
+    ``publish_offset``; the final round always publishes), which is what
+    the serving hot-swap (``serving/service.ScoringService``) watches.
+    Publishing runs the rounds as a Python loop over ONE jitted round
+    function instead of a ``lax.scan`` — identical numerics, same single
+    compilation, but with host-visible params between rounds.
+    """
     state = init_state(key, init_params, cfg)
     round_fn = make_round_fn(loss_fn, ds, cfg, client_mesh=client_mesh)
-    final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
-    return final.params, metrics
+    if store is None or cfg.rounds == 0:
+        # scan handles length 0 cleanly (and 0 rounds publish nothing).
+        final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
+        return final.params, metrics
+
+    step_fn = jax.jit(lambda s: round_fn(s, None))
+    rounds_metrics = []
+    for t in range(cfg.rounds):
+        state, m = step_fn(state)
+        rounds_metrics.append(m)
+        if (t + 1) % publish_every == 0 or t + 1 == cfg.rounds:
+            store.publish(publish_offset + t + 1, state.params)
+    metrics = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *rounds_metrics
+    )
+    return state.params, metrics

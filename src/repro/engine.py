@@ -72,6 +72,7 @@ equivalence and Pallas-vs-ref parity.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Sequence
 
@@ -318,11 +319,18 @@ class Engine:
         *,
         n_deployments: int = 1,
         label: str | None = None,
+        store: Any | None = None,
+        publish_step: int | None = None,
     ) -> EngineRun:
         """Train + evaluate ``method`` for every (seed, deployment) trial.
 
         ``ds``: a per-seed callable, a single dataset (shared), or a
         dataset stacked along a leading ``len(seeds)`` axis.
+
+        ``store``: optional ``checkpoint.CheckpointStore`` — publishes the
+        trained params of trial (seeds[0], deployment 0) as round
+        ``publish_step`` (default ``cfg.rounds``), the hand-off point to
+        the serving path (``serving/service.ScoringService``).
         """
         cfg = self.resolve_config(cfg)
         seeds = tuple(int(s) for s in seeds)
@@ -330,12 +338,14 @@ class Engine:
         s_n, p_n = len(seeds), n_deployments
         keys = self._trial_keys(seeds, p_n)           # (S, P)
         client_mesh = self._client_mesh(method, stacked)
+        return_params = store is not None
         shapes = tuple(
             (x.shape, str(x.dtype)) for x in jax.tree_util.tree_leaves(stacked)
         )
         cache_key = ("run", method, cfg, s_n, p_n, shapes,
                      self.hidden, self.percentile, self.point_adjusted,
-                     client_mesh.size if client_mesh is not None else 0)
+                     client_mesh.size if client_mesh is not None else 0,
+                     return_params)
 
         def build():
             def trial(key, one_ds):
@@ -345,6 +355,7 @@ class Engine:
                     point_adjusted=self.point_adjusted,
                     hidden=self.hidden,
                     client_mesh=client_mesh,
+                    return_params=return_params,
                 )
 
             # Inner vmap broadcasts the seed's dataset over the deployment
@@ -357,6 +368,11 @@ class Engine:
             # client-sharded cells leave placement to the in-loop shard_map
             keys, stacked = self._place(keys, s_n), self._place(stacked, s_n)
         out, wall = self._timed_call(fn, keys, stacked)
+        if store is not None:
+            params0 = jax.tree_util.tree_map(lambda a: a[0, 0], out.pop("params"))
+            store.publish(
+                cfg.rounds if publish_step is None else publish_step, params0
+            )
         self._log(kind="run", method=method, label=label or method,
                   n_trials=s_n * p_n, wall_s=wall, fresh_compile=fresh,
                   compressor=_describe_compressor(cfg.compressor),
@@ -436,6 +452,65 @@ class Engine:
         self._log(kind="reachability", method="reachability",
                   label=label or "reachability", n_trials=s_n * p_n,
                   wall_s=wall, fresh_compile=fresh, compressor="n/a")
+        return out
+
+    def score(
+        self,
+        params: Any,
+        x: jax.Array,
+        tau: jax.Array | float,
+        *,
+        n_trial_axes: int = 0,
+        fused: bool = True,
+        label: str | None = None,
+    ):
+        """Batched fused anomaly scoring — the serving family (ISSUE 3).
+
+        ``x``: telemetry ``(..., d)``; the fused score kernel
+        (``serving/score``: Pallas on TPU, jnp oracle elsewhere) flattens
+        everything below the trial axes into one row sweep.  ``params``
+        may carry ``n_trial_axes`` leading axes (e.g. the (S, P) grid of
+        a training cell) which are vmapped exactly like ``run``; ``x`` and
+        ``tau`` broadcast rows per trial.  With no trial axes the leading
+        (fleet) axis of ``x`` shards over devices via the launch/sharding
+        rules — the fleet-scale lever.  Returns a ``ScoreResult`` with
+        leaves shaped ``x.shape[:-1]``.
+        """
+        # The serving package re-exports the function under the submodule's
+        # name, so import the function itself.
+        from repro.serving.score import score as serving_score_fn
+
+        x = jnp.asarray(x)
+        tau_b = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), x.shape[:-1])
+        use_pallas = default_use_pallas()
+        treedef = jax.tree_util.tree_structure(params)
+        p_shapes = tuple(
+            (tuple(leaf.shape), str(leaf.dtype))
+            for leaf in jax.tree_util.tree_leaves(params)
+        )
+        cache_key = ("score", treedef, p_shapes, x.shape, str(x.dtype),
+                     n_trial_axes, fused)
+
+        def build():
+            def one(p, xx, tt):
+                return serving_score_fn(
+                    p, xx, tt, use_pallas=use_pallas,
+                    interpret=not use_pallas, fused=fused,
+                )
+
+            fn = one
+            for _ in range(n_trial_axes):
+                fn = jax.vmap(fn)
+            return fn
+
+        fn, fresh = self._get_program(cache_key, build)
+        n_leading = x.shape[0]
+        placed = self._place((x, tau_b), n_leading)
+        out, wall = self._timed_call(fn, params, *placed)
+        n_rows = math.prod(x.shape[:-1])
+        self._log(kind="score", method="score", label=label or "score",
+                  n_trials=n_rows, wall_s=wall, fresh_compile=fresh,
+                  compressor="fused" if fused else "unfused")
         return out
 
     def pod_train_step(

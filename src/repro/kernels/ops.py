@@ -10,11 +10,13 @@ body on CPU, and on a real TPU ``interpret=False`` compiles it.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_agg as _fa
+from repro.kernels import fused_score as _fs
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
 from repro.kernels import topk_ef as _tk
@@ -170,6 +172,54 @@ def compress_aggregate(
         )
     fog_sum = fog_blocks.reshape(n_fog, -1)[:, :d]
     return fog_sum, new_err.reshape(deltas.shape[0], -1)[:, :d]
+
+
+def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    return jnp.zeros((rows, cols), a.dtype).at[: a.shape[0], : a.shape[1]].set(a)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def fused_score(
+    x: jax.Array,        # (R, d) telemetry rows
+    params: Any,         # autoencoder params: list of {"w", "b"} layers
+    tau: jax.Array,      # scalar or (R,) per-row thresholds
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused anomaly scoring: AE forward + squared-L2 reconstruction error
+    + threshold compare in one pass over the rows (serving hot path).
+
+    Layout owner for :mod:`repro.kernels.fused_score`: rows are zero-padded
+    to whole SCORE_ROWS tiles and every layer dimension to a LANES
+    multiple (padded-row thresholds are +inf so their flags stay False).
+    Returns (err (R,) f32, flags (R,) bool); the dense reconstruction is
+    never materialised in HBM on the kernel path.
+    """
+    r, d = x.shape
+    ws = tuple(layer["w"] for layer in params)
+    bs = tuple(layer["b"] for layer in params)
+    tau_rows = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (r,))
+    if not use_pallas:
+        return _ref.fused_score_ref(x, ws, bs, tau_rows)
+
+    rows_pad = max(1, -(-r // _fs.SCORE_ROWS)) * _fs.SCORE_ROWS
+    dims = (d,) + tuple(w.shape[1] for w in ws)     # layer output dims
+    dims_pad = tuple(max(1, -(-dd // _fs.LANES)) * _fs.LANES for dd in dims)
+    x_pad = _pad2(x.astype(jnp.float32), rows_pad, dims_pad[0])
+    ws_pad = tuple(
+        _pad2(w.astype(jnp.float32), dims_pad[i], dims_pad[i + 1])
+        for i, w in enumerate(ws)
+    )
+    bs_pad = tuple(
+        _pad2(b.astype(jnp.float32)[None, :], 1, dims_pad[i + 1])
+        for i, b in enumerate(bs)
+    )
+    tau_pad = jnp.full((rows_pad,), jnp.inf, jnp.float32).at[:r].set(tau_rows)
+    err, flag = _fs.score_blocks(
+        x_pad, tau_pad.reshape(-1, _fs.SCORE_ROWS), ws_pad, bs_pad, interpret
+    )
+    return err.reshape(-1)[:r], flag.reshape(-1)[:r] > 0.0
 
 
 def swa_decode_attention(

@@ -152,6 +152,31 @@ def compress_aggregate_ref(
     return fog_sum, v - recon
 
 
+def fused_score_ref(
+    x: jax.Array,                 # (R, d) telemetry rows
+    ws: tuple[jax.Array, ...],    # per-layer weights, (d_in, d_out)
+    bs: tuple[jax.Array, ...],    # per-layer biases, (d_out,)
+    tau: jax.Array,               # (R,) per-row thresholds
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused anomaly-score kernel (serving hot path).
+
+    AE forward (tanh hidden layers, linear output — exactly
+    ``models/autoencoder.apply``), squared-L2 reconstruction error
+    (Sec. V-D), and the Eq. 32 threshold compare in one computation.
+
+    Returns (err (R,) f32, flag (R,) bool).  The dense reconstruction is
+    an internal intermediate only — the fused kernel never writes it to
+    HBM, and neither path returns it.
+    """
+    h = x.astype(jnp.float32)
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        h = h @ w.astype(jnp.float32) + b.astype(jnp.float32)
+        if i < len(ws) - 1:
+            h = jnp.tanh(h)
+    err = jnp.sum(jnp.square(x.astype(jnp.float32) - h), axis=-1)
+    return err, err > tau
+
+
 def sliding_window_decode_attention_ref(
     q: jax.Array,          # (Hq, d)
     k_cache: jax.Array,    # (S, Hkv, d)

@@ -85,6 +85,7 @@ def trial_metrics(
     point_adjusted: bool = False,
     hidden: tuple[int, ...] = (16, 8, 16),
     client_mesh=None,
+    return_params: bool = False,
 ) -> dict[str, jax.Array]:
     """One fully traced trial: train ``method`` from ``key``, evaluate.
 
@@ -96,6 +97,9 @@ def trial_metrics(
     ``client_mesh``: optional 1-D ``("data",)`` mesh — shards the client
     axis of the hfl / flat-FL round loops over devices (scaffold and the
     centralised oracle run unsharded; they bypass the fused pipeline).
+
+    ``return_params``: include the trained model under ``"params"`` (used
+    by ``Engine.run(store=...)`` to publish rounds for the serving path).
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; one of {METHODS}")
@@ -148,6 +152,8 @@ def trial_metrics(
 
     f1 = _detector_eval(params, ds, percentile, point_adjusted)
     out.update(f1=f1.f1, precision=f1.precision, recall=f1.recall)
+    if return_params:
+        out["params"] = params
     return out
 
 

@@ -59,14 +59,17 @@ def decode_tokens(cfg, params, cache, last_logits, n_new: int, key):
     return toks.T  # (batch, n_new)
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    """Run the serving driver; ``argv`` defaults to ``sys.argv[1:]`` so
+    callers (e.g. examples/serve_model.py) can pass args directly instead
+    of mutating ``sys.argv``."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, reduced=True)
     key = jax.random.key(args.seed)

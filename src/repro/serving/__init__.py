@@ -1,0 +1,20 @@
+"""Fleet-scale online anomaly-scoring service (the paper's end product).
+
+``score``     — fused AE-forward + error + threshold compare hot path
+                (Pallas kernel on TPU, jnp oracle elsewhere);
+``calibrate`` — streaming per-fog / global threshold reservoirs;
+``service``   — micro-batching request loop with double-buffered param
+                hot-swap off a ``checkpoint.CheckpointStore`` that
+                ``hfl.train`` / ``Engine.run`` publish rounds into.
+"""
+from repro.serving.calibrate import (  # noqa: F401
+    ReservoirState,
+    StreamingCalibrator,
+)
+from repro.serving.score import (  # noqa: F401
+    ScoreResult,
+    fleet_tau,
+    score,
+    score_fleet,
+)
+from repro.serving.service import ScoringService, ServiceStats  # noqa: F401

@@ -1,0 +1,158 @@
+"""Streaming threshold calibration for the online serving path.
+
+The offline protocol (``core/anomaly.calibrate_threshold``) takes the 99th
+percentile of ONE normal-only validation window (Eq. 32).  A long-running
+service instead sees an unbounded validation stream, so thresholds here are
+maintained over fixed-capacity uniform reservoirs (Vitter's Algorithm R) —
+one per fog cluster plus one global — and read out as linearly-interpolated
+percentiles of the reservoir contents.
+
+Exactness contract: while a group has seen at most ``capacity`` errors the
+reservoir holds *all* of them, and :func:`threshold` reproduces
+``jnp.percentile`` (numpy's default linear interpolation) bit-for-bit —
+the one-shot calibration is the ``count <= capacity`` special case.
+Beyond that the reservoir is a uniform sample and the threshold converges
+to the stream percentile at the usual O(1/sqrt(capacity)) rate.
+
+Everything is functional and jittable (`init` / `update` / `threshold`);
+:class:`StreamingCalibrator` is the small stateful wrapper the service
+loop uses.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReservoirState(NamedTuple):
+    """Per-group reservoirs; the LAST row is the global (all-errors) group,
+    rows [0, n_fog) are the per-fog groups."""
+
+    buffer: jax.Array   # (n_fog + 1, capacity) f32
+    count: jax.Array    # (n_fog + 1,) int32 — total errors observed
+    key: jax.Array      # PRNG state for the replacement draws
+
+
+def init(key: jax.Array, capacity: int, n_fog: int = 0) -> ReservoirState:
+    groups = n_fog + 1
+    return ReservoirState(
+        buffer=jnp.zeros((groups, capacity), jnp.float32),
+        count=jnp.zeros((groups,), jnp.int32),
+        key=key,
+    )
+
+
+def _row_update(buffer, count, g, v, k):
+    """Algorithm R step for group ``g``: slot ``count[g]`` while filling,
+    then replace a uniform slot with probability capacity/(count+1)."""
+    cap = buffer.shape[1]
+    c = count[g]
+    j = jax.random.randint(k, (), 0, jnp.maximum(c + 1, 1))
+    pos = jnp.where(c < cap, c, j)
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+    buffer = buffer.at[g, pos_c].set(jnp.where(keep, v, buffer[g, pos_c]))
+    return buffer, count.at[g].add(1)
+
+
+@jax.jit
+def update(
+    state: ReservoirState,
+    errors: jax.Array,              # (B,) validation reconstruction errors
+    fog_id: jax.Array | None = None,  # (B,) int32, optional fog routing
+) -> ReservoirState:
+    """Fold a batch of validation errors into the reservoirs.
+
+    Every error feeds the global group; with ``fog_id`` it also feeds that
+    fog's group.  Scan-sequential by construction — reservoir sampling is
+    order-dependent — which is fine off the hot path (calibration batches
+    are small next to the scoring stream).
+    """
+    errors = errors.reshape(-1).astype(jnp.float32)
+    g_global = state.buffer.shape[0] - 1
+    fid = (
+        jnp.full(errors.shape, g_global, jnp.int32)
+        if fog_id is None
+        else fog_id.reshape(-1).astype(jnp.int32)
+    )
+
+    def one(carry, ev):
+        buffer, count, key = carry
+        e, f = ev
+        key, k1, k2 = jax.random.split(key, 3)
+        buffer, count = _row_update(buffer, count, g_global, e, k1)
+        if fog_id is not None:
+            buffer, count = _row_update(buffer, count, f, e, k2)
+        return (buffer, count, key), None
+
+    (buffer, count, key), _ = jax.lax.scan(
+        one, (state.buffer, state.count, state.key), (errors, fid)
+    )
+    return ReservoirState(buffer, count, key)
+
+
+@jax.jit
+def threshold(state: ReservoirState, percentile: float = 99.0) -> jax.Array:
+    """Per-group thresholds: (n_fog + 1,) with the global tau last.
+
+    Linearly-interpolated percentile of each group's valid reservoir
+    entries (== ``jnp.percentile`` while ``count <= capacity``).  Groups
+    that have seen nothing return +inf, so an uncalibrated fog flags no
+    anomalies rather than all of them.
+    """
+    cap = state.buffer.shape[1]
+    n_valid = jnp.minimum(state.count, cap)                    # (G,)
+    masked = jnp.where(
+        jnp.arange(cap)[None, :] < n_valid[:, None], state.buffer, jnp.inf
+    )
+    srt = jnp.sort(masked, axis=-1)
+    q = (n_valid - 1).astype(jnp.float32) * (percentile / 100.0)
+    q = jnp.maximum(q, 0.0)
+    lo = jnp.floor(q).astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, jnp.maximum(n_valid - 1, 0))
+    frac = (q - lo.astype(jnp.float32))[:, None]
+    v_lo = jnp.take_along_axis(srt, lo[:, None], axis=-1)
+    v_hi = jnp.take_along_axis(srt, hi[:, None], axis=-1)
+    out = (v_lo + frac * (v_hi - v_lo))[:, 0]
+    return jnp.where(n_valid > 0, out, jnp.inf)
+
+
+class StreamingCalibrator:
+    """Stateful wrapper the service loop drives.
+
+    ``observe`` feeds validation errors (optionally fog-routed); ``taus``
+    returns the (n_fog + 1,) thresholds with the global one last, and the
+    ``global_tau`` / ``fog_taus`` accessors split that for callers.
+    """
+
+    def __init__(
+        self,
+        capacity: int = 4096,
+        n_fog: int = 0,
+        percentile: float = 99.0,
+        seed: int = 0,
+    ):
+        self.percentile = float(percentile)
+        self.n_fog = int(n_fog)
+        self.state = init(jax.random.key(seed), capacity, n_fog)
+
+    def observe(self, errors: jax.Array, fog_id: jax.Array | None = None) -> None:
+        self.state = update(self.state, errors, fog_id)
+
+    def taus(self) -> jax.Array:
+        return threshold(self.state, self.percentile)
+
+    @property
+    def global_tau(self) -> jax.Array:
+        return self.taus()[-1]
+
+    @property
+    def fog_taus(self) -> jax.Array:
+        return self.taus()[:-1]
+
+    @property
+    def seen(self) -> int:
+        """Total errors observed by the global group."""
+        return int(self.state.count[-1])

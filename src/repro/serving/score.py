@@ -1,0 +1,110 @@
+"""Fleet-scale fused anomaly scoring — the serving front-end.
+
+The paper's end product is a detection *service*: fog nodes score sensor
+telemetry against the autoencoder threshold (Sec. V-D, Eq. 32) that
+federated training keeps fresh.  :func:`score` is that hot path: AE
+forward, squared-L2 reconstruction error, and threshold compare run as ONE
+fused operator (``kernels/fused_score``, jnp oracle
+``kernels/ref.fused_score_ref``) over a ``(fleet, window, d)`` telemetry
+batch — compiled Pallas on TPU, the oracle on CPU/GPU, mirroring the
+compressor dispatch.  The dense reconstruction never materialises in HBM
+on the kernel path.
+
+``fused=False`` keeps the legacy three-program pipeline
+(``core/anomaly.reconstruction_errors`` + ``flag_anomalies``) as the
+equivalence baseline, exactly like ``CompressorConfig(fused=False)`` does
+for the training hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import anomaly
+from repro.kernels import ops as kops
+from repro.models import autoencoder as ae
+
+
+def default_use_pallas() -> bool:
+    """Compiled Pallas kernels need a real TPU; elsewhere the serving path
+    falls back to the pure-jnp oracle (same rule as ``repro.engine``)."""
+    return jax.default_backend() == "tpu"
+
+
+class ScoreResult(NamedTuple):
+    """Per-sample scoring output; both leaves share ``x.shape[:-1]``."""
+
+    error: jax.Array   # squared-L2 reconstruction error (f32)
+    flag: jax.Array    # anomaly decision err > tau (bool)
+
+
+def score(
+    params: Any,
+    x: jax.Array,
+    tau: jax.Array | float,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    fused: bool = True,
+) -> ScoreResult:
+    """Score telemetry ``x`` of shape (..., d) against threshold(s) ``tau``.
+
+    ``tau`` is a scalar or broadcastable to ``x.shape[:-1]`` (per-row
+    thresholds — see :func:`fleet_tau` for the per-fog mapping).  Leading
+    axes are flattened into one row axis for the kernel and restored on the
+    way out, so (fleet, window, d) batches score as a single sweep.
+    """
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if interpret is None:
+        interpret = not default_use_pallas()
+    lead = x.shape[:-1]
+    rows = x.reshape(-1, x.shape[-1])
+    tau_rows = jnp.broadcast_to(
+        jnp.asarray(tau, jnp.float32), lead
+    ).reshape(-1)
+    if fused:
+        err, flag = kops.fused_score(
+            rows, params, tau_rows, use_pallas=use_pallas, interpret=interpret
+        )
+    else:
+        err = anomaly.reconstruction_errors(ae.apply, params, rows)
+        flag = anomaly.flag_anomalies(err, tau_rows)
+    return ScoreResult(err.reshape(lead), flag.reshape(lead))
+
+
+def fleet_tau(
+    fog_tau: jax.Array,       # (n_fog,) per-fog thresholds
+    fog_id: jax.Array,        # (fleet,) int32 fog assignment per sensor
+    window: int,
+) -> jax.Array:
+    """Map per-fog thresholds onto a (fleet, window) row-threshold grid."""
+    return jnp.broadcast_to(
+        fog_tau[fog_id][:, None], (fog_id.shape[0], window)
+    )
+
+
+def score_fleet(
+    params: Any,
+    telemetry: jax.Array,          # (fleet, window, d)
+    *,
+    tau: jax.Array | float | None = None,
+    fog_tau: jax.Array | None = None,
+    fog_id: jax.Array | None = None,
+    **kw: Any,
+) -> ScoreResult:
+    """Score a fleet batch with either a global or a per-fog threshold.
+
+    Exactly one of ``tau`` (global, Eq. 32) or (``fog_tau``, ``fog_id``)
+    must be given; the latter resolves each sensor's rows against its fog
+    cluster's streaming threshold (``serving/calibrate``).
+    """
+    if (tau is None) == (fog_tau is None):
+        raise ValueError("pass exactly one of tau or (fog_tau, fog_id)")
+    if fog_tau is not None:
+        if fog_id is None:
+            raise ValueError("fog_tau needs the fog_id sensor assignment")
+        tau = fleet_tau(fog_tau, fog_id, telemetry.shape[1])
+    return score(params, telemetry, tau, **kw)

@@ -1,0 +1,287 @@
+"""Micro-batching anomaly-scoring service with train-and-serve hot-swap.
+
+One :class:`ScoringService` turns the trained detector into an online
+scorer: telemetry requests queue up, get packed into FIXED-SHAPE
+micro-batches (padded to ``batch_rows``, so the jitted score program
+traces exactly once and never recompiles), and are scored with the fused
+kernel path (``serving/score``).
+
+Hot-swap: the service watches a ``checkpoint.CheckpointStore`` that
+``hfl.train`` / ``Engine.run`` publish rounds into.  Parameters are
+double-buffered — ``poll()`` restores a newer round into the standby
+buffer (same treedef/shapes as the active one, so the compiled program is
+reused as-is) and flips the active pointer between micro-batches.  Saves
+are atomic (tmp + ``os.replace``), so a poll can never observe a
+half-written round; federated training and serving run as one pipeline.
+
+Thresholds come from a fixed global tau (Eq. 32), or live from a
+``serving/calibrate.StreamingCalibrator`` fed by ``ingest_validation`` —
+per-fog when requests carry a fog id, global otherwise.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.serving import calibrate as cal
+# Import the functions, not the submodule: the package __init__ re-exports
+# a function named `score`, which shadows the module attribute.
+from repro.serving.score import ScoreResult, score as _score
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    samples: int = 0          # real (unpadded) telemetry rows scored
+    steps: int = 0            # micro-batches executed
+    swaps: int = 0            # hot-swaps applied after the initial load
+    compiles: int = 0         # traces of the score program (1 after warmup)
+    busy_s: float = 0.0       # cumulative scoring wall time (all steps)
+    # Bounded window so an indefinitely-running service does not grow
+    # per-step history without bound; percentiles are over this window.
+    step_latency_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+
+    def latency_s(self, pct: float) -> float:
+        """Percentile of the per-micro-batch wall latency (recent window)."""
+        if not self.step_latency_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.step_latency_s), pct))
+
+    def samples_per_s(self) -> float:
+        return self.samples / self.busy_s if self.busy_s > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "requests": self.requests,
+            "samples": self.samples,
+            "steps": self.steps,
+            "swaps": self.swaps,
+            "compiles": self.compiles,
+            "p50_ms": self.latency_s(50.0) * 1e3,
+            "p99_ms": self.latency_s(99.0) * 1e3,
+            "samples_per_s": self.samples_per_s(),
+        }
+
+
+class _Request:
+    __slots__ = ("rid", "rows", "fog", "lead", "parts_err", "parts_flag", "taken")
+
+    def __init__(self, rid, rows, fog, lead):
+        self.rid = rid
+        self.rows = rows          # (n, d) f32 numpy
+        self.fog = fog            # int fog id or None
+        self.lead = lead          # original leading shape to restore
+        self.parts_err: list[np.ndarray] = []
+        self.parts_flag: list[np.ndarray] = []
+        self.taken = 0            # rows already scheduled
+
+
+class ScoringService:
+    """Online scorer over a checkpoint store (see module docstring).
+
+    ``params_like``: a template param tree (e.g. ``autoencoder.init``
+    output) fixing the treedef/shapes every published round must match —
+    the double-buffer swap relies on it, and it is what keeps the compiled
+    program valid across swaps.
+    """
+
+    def __init__(
+        self,
+        store: CheckpointStore,
+        params_like: Any,
+        *,
+        batch_rows: int = 1024,
+        tau: float | None = None,
+        calibrator: cal.StreamingCalibrator | None = None,
+        poll_every: int = 1,
+        use_pallas: bool | None = None,
+        interpret: bool | None = None,
+        fused: bool = True,
+    ):
+        if (tau is None) and (calibrator is None):
+            raise ValueError("need a fixed tau or a StreamingCalibrator")
+        self.store = store
+        self.batch_rows = int(batch_rows)
+        self.tau = None if tau is None else float(tau)
+        self.calibrator = calibrator
+        self.poll_every = max(1, int(poll_every))
+        self.stats = ServiceStats()
+        self._queue: list[_Request] = []
+        self._done: dict[int, ScoreResult] = {}
+        self._next_rid = 0
+
+        params, step = store.restore(params_like)
+        # Double buffer: standby starts as a copy of the active tree; every
+        # hot-swap restores into the standby slot and flips the pointer.
+        self._buffers = [params, jax.tree_util.tree_map(jnp.array, params)]
+        self._active = 0
+        self._loaded_step = step
+        self.d = int(params_like[0]["w"].shape[0])
+
+        stats = self.stats
+        kw = dict(use_pallas=use_pallas, interpret=interpret, fused=fused)
+
+        def traced(p, x, t):
+            # Runs once per trace: with the fixed micro-batch shape this
+            # counts compilations (pinned to 1 after warmup by the tests).
+            stats.compiles += 1
+            return _score(p, x, t, **kw)
+
+        self._fn = jax.jit(traced)
+
+    # ------------------------------------------------------------------
+    # checkpoint watching / hot-swap
+    # ------------------------------------------------------------------
+
+    @property
+    def params(self) -> Any:
+        return self._buffers[self._active]
+
+    @property
+    def loaded_step(self) -> int:
+        return self._loaded_step
+
+    def poll(self) -> bool:
+        """Hot-swap to the newest published round, if any.  Returns True
+        when a swap happened.  Same-treedef restore into the standby
+        buffer + pointer flip: no recompilation, no torn reads (saves are
+        atomic).  A concurrent trainer's retention pass may delete the
+        step between ``latest_step`` and the read — treat that as "nothing
+        new" and pick the fresher round up on the next poll."""
+        step = self.store.latest_step()
+        if step is None or step == self._loaded_step:
+            return False
+        standby = 1 - self._active
+        try:
+            self._buffers[standby], self._loaded_step = self.store.restore(
+                self._buffers[standby], step=step
+            )
+        except FileNotFoundError:
+            return False
+        self._active = standby
+        self.stats.swaps += 1
+        return True
+
+    # ------------------------------------------------------------------
+    # request queue / micro-batching
+    # ------------------------------------------------------------------
+
+    def submit(self, x: Any, fog: int | None = None) -> int:
+        """Queue telemetry of shape (..., d); returns a request id whose
+        result :func:`drain` delivers with the leading shape restored."""
+        arr = np.asarray(x, np.float32)
+        if arr.shape[-1] != self.d:
+            raise ValueError(f"expected feature dim {self.d}, got {arr.shape}")
+        lead = arr.shape[:-1]
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Request(rid, arr.reshape(-1, self.d), fog, lead))
+        self.stats.requests += 1
+        return rid
+
+    def _taus(self) -> np.ndarray | None:
+        """Current (n_fog + 1) thresholds, resolved ONCE per micro-batch —
+        the reservoir percentile (sort + host sync) must not run per
+        request on the scoring hot path."""
+        if self.calibrator is None:
+            return None
+        return np.asarray(self.calibrator.taus())
+
+    def _row_tau(self, req: _Request, taus: np.ndarray | None) -> float:
+        if taus is not None:
+            return float(taus[req.fog]) if req.fog is not None else float(taus[-1])
+        return self.tau
+
+    def step(self) -> int:
+        """Score ONE padded micro-batch off the queue; returns the number
+        of real rows scored (0 when idle)."""
+        if not self._queue:
+            return 0
+        taus = self._taus()
+        batch = np.zeros((self.batch_rows, self.d), np.float32)
+        tau = np.full((self.batch_rows,), np.inf, np.float32)
+        taken: list[tuple[_Request, int, int, int]] = []  # req, start, n, off
+        fill = 0
+        while self._queue and fill < self.batch_rows:
+            req = self._queue[0]
+            n = min(req.rows.shape[0] - req.taken, self.batch_rows - fill)
+            batch[fill : fill + n] = req.rows[req.taken : req.taken + n]
+            tau[fill : fill + n] = self._row_tau(req, taus)
+            taken.append((req, fill, n, req.taken))
+            req.taken += n
+            fill += n
+            if req.taken == req.rows.shape[0]:
+                self._queue.pop(0)
+
+        t0 = time.perf_counter()
+        err, flag = self._fn(self.params, jnp.asarray(batch), jnp.asarray(tau))
+        err, flag = np.asarray(err), np.asarray(flag)
+        lat = time.perf_counter() - t0
+
+        for req, start, n, _ in taken:
+            req.parts_err.append(err[start : start + n])
+            req.parts_flag.append(flag[start : start + n])
+            if req.taken == req.rows.shape[0] and sum(
+                p.shape[0] for p in req.parts_err
+            ) == req.rows.shape[0]:
+                self._done[req.rid] = ScoreResult(
+                    np.concatenate(req.parts_err).reshape(req.lead),
+                    np.concatenate(req.parts_flag).reshape(req.lead),
+                )
+        self.stats.steps += 1
+        self.stats.samples += fill
+        self.stats.step_latency_s.append(lat)
+        self.stats.busy_s += lat
+        if self.stats.steps % self.poll_every == 0:
+            self.poll()
+        return fill
+
+    def drain(self) -> dict[int, ScoreResult]:
+        """Run micro-batches until the queue is empty; hand back (and
+        clear) every completed request's :class:`ScoreResult`."""
+        while self._queue:
+            self.step()
+        done, self._done = self._done, {}
+        return done
+
+    # ------------------------------------------------------------------
+    # streaming calibration feed
+    # ------------------------------------------------------------------
+
+    def ingest_validation(
+        self, x: Any, fog_id: Any | None = None
+    ) -> jax.Array:
+        """Score a normal-only validation batch through the SAME fixed-
+        shape program (tau=+inf, flags discarded) and feed the errors to
+        the calibrator.  ``fog_id`` must broadcast to ``x.shape[:-1]``
+        (e.g. a (fleet, 1) column for (fleet, window, d) telemetry).
+        Returns the errors, flattened."""
+        if self.calibrator is None:
+            raise ValueError("service was built without a calibrator")
+        x = np.asarray(x, np.float32)
+        fid = None
+        if fog_id is not None:
+            fid = jnp.asarray(
+                np.broadcast_to(np.asarray(fog_id, np.int32), x.shape[:-1])
+            ).reshape(-1)
+        arr = x.reshape(-1, self.d)
+        errs = []
+        for start in range(0, arr.shape[0], self.batch_rows):
+            chunk = arr[start : start + self.batch_rows]
+            batch = np.zeros((self.batch_rows, self.d), np.float32)
+            batch[: chunk.shape[0]] = chunk
+            tau = np.full((self.batch_rows,), np.inf, np.float32)
+            err, _ = self._fn(self.params, jnp.asarray(batch), jnp.asarray(tau))
+            errs.append(np.asarray(err)[: chunk.shape[0]])
+        err = jnp.asarray(np.concatenate(errs))
+        self.calibrator.observe(err, fid)
+        return err

@@ -49,3 +49,71 @@ def test_store_empty_raises(tmp_path, tree):
     store = CheckpointStore(str(tmp_path))
     with pytest.raises(FileNotFoundError):
         store.restore(tree)
+
+
+def test_save_is_atomic_no_stray_tmp_files(tmp_path, tree):
+    """Saves stage through unique temp files and os.replace: after any
+    number of saves (overwrites included) the directory holds only final
+    step files, and every one of them is fully loadable."""
+    store = CheckpointStore(str(tmp_path), keep=10)
+    for step in (1, 2, 2, 3):                  # step 2 saved twice
+        store.save(step, tree)
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["step_00000001.npz", "step_00000002.npz",
+                     "step_00000003.npz"]
+    for step in (1, 2, 3):
+        restored, _ = store.restore(tree, step=step)
+        for a, b in zip(jax.tree_util.tree_leaves(restored),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_publish_latest_roundtrip_from_real_train(tmp_path):
+    """The serving hand-off: a real ``hfl.train`` run publishes every
+    round; ``latest`` must hand back EXACTLY the final trained params (and
+    the publishing Python loop must match the lax.scan path)."""
+    from repro.core import hfl
+    from repro.data.synthetic import SyntheticConfig, generate, normalize
+    from repro.launch import experiment as exp
+    from repro.models import autoencoder as ae
+
+    dcfg = SyntheticConfig(n_sensors=8, train_len=48, val_len=24, test_len=48)
+    ds = normalize(generate(jax.random.key(0), dcfg))
+    p0 = ae.init(jax.random.key(1), ds.train.shape[-1], (16, 8, 16))
+    cfg = exp.make_config(n_sensors=8, n_fog=3, rounds=3, local_epochs=1)
+
+    store = CheckpointStore(str(tmp_path), keep=5)
+    trained, _ = hfl.train(jax.random.key(2), p0, ae.loss, ds, cfg,
+                           store=store)
+    assert store.steps() == [1, 2, 3]
+    latest, step = store.latest(p0)
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(latest),
+                    jax.tree_util.tree_leaves(trained)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # Publishing loop == scan path (identical numerics, same round fn).
+    scan_params, _ = hfl.train(jax.random.key(2), p0, ae.loss, ds, cfg)
+    for a, b in zip(jax.tree_util.tree_leaves(trained),
+                    jax.tree_util.tree_leaves(scan_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    # publish_every thins the stream; the final round always publishes.
+    store2 = CheckpointStore(str(tmp_path / "thin"), keep=5)
+    hfl.train(jax.random.key(2), p0, ae.loss, ds, cfg, store=store2,
+              publish_every=2)
+    assert store2.steps() == [2, 3]
+    # publish_offset continues a stream without colliding steps.
+    hfl.train(jax.random.key(3), p0, ae.loss, ds, cfg, store=store2,
+              publish_every=2, publish_offset=3)
+    assert store2.steps() == [2, 3, 5, 6]
+
+    # rounds=0 with a store degenerates to the scan path: no publish, no
+    # crash on the empty metrics stack.
+    zp, zm = hfl.train(jax.random.key(4), p0, ae.loss, ds,
+                       cfg.replace(rounds=0), store=store2)
+    assert store2.steps() == [2, 3, 5, 6]
+    assert zm.loss.shape == (0,)
+    for a, b in zip(jax.tree_util.tree_leaves(zp),
+                    jax.tree_util.tree_leaves(p0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
