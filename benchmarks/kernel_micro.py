@@ -3,14 +3,19 @@ time per call + payload accounting.  On CPU the numbers establish
 correctness-path cost only; the TPU roofline for these ops is in
 EXPERIMENTS.md (they are HBM-bandwidth-bound single-pass kernels).
 
-Two tables:
+Three tables:
 
 * ``rows``      — the per-client compress op at flat-vector sizes;
 * ``agg_rows``  — the fused compress-and-aggregate op (one program:
   EF Top-K + int8 + weighted fog accumulation) against the unfused
   compress -> segment-sum baseline (two programs with the dense (N, d)
-  reconstruction materialised between them).  The committed JSON is the
-  perf-trend baseline CI compares against (benchmarks/check_kernel_micro).
+  reconstruction materialised between them);
+* ``local_train_rows`` — the fused local-train solver (the whole E-epoch
+  client phase indexing each client's resident window;
+  ``optim/sgd.make_client_solver`` default) against the legacy per-client
+  ``local_sgd`` scan over a gathered (E * nb, bs, D) batch stream, across
+  client counts.  The committed JSON is the perf-trend baseline CI
+  compares against (benchmarks/check_kernel_micro).
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.kernels import ops
+from repro.models import autoencoder as ae
+from repro.optim.sgd import LocalTrainConfig, make_client_solver
 
 SIZES = (1352, 65536, 1048576)
 
@@ -28,6 +35,11 @@ SIZES = (1352, 65536, 1048576)
 # The last cell is the 1M-element size (16 * 65536 = 1 048 576).
 AGG_SIZES = ((8, 1352), (16, 65536))
 K_FRAC = 0.05
+
+# (n_clients, window) cells for the fused local-train solver; feature dim,
+# batch size and epochs stay at the paper's Table II values.
+LT_SIZES = ((16, 256), (64, 256), (256, 256))
+LT_D, LT_BS, LT_EPOCHS, LT_LR = 32, 32, 5, 0.01
 
 
 def _time(fn, *args, reps=5):
@@ -46,6 +58,28 @@ def _time(fn, *args, reps=5):
         )
         best = min(best, time.time() - t0)
     return best * 1e6
+
+
+def _paired_time(pair, args, reps: int = 16) -> dict[str, float]:
+    """Paired-ratio timing for two pipelines over the same inputs: warm
+    (compile) both, then time INTERLEAVED single blocked calls with
+    alternating within-pair order, and report the MIN of each — the same
+    estimator as :func:`_time` and the CI perf-trend gate.  On a shared
+    runner the min is the uncontended cost; means/medians get corrupted
+    by multi-call contention storms that hit whichever pipeline is
+    unlucky.  ``pair`` is ((name, fn), (name, fn)); fns return a tuple
+    whose first leaf supports ``block_until_ready``.
+    """
+    for _, fn in pair:
+        fn(*args)
+    times: dict[str, list[float]] = {name: [] for name, _ in pair}
+    for rep in range(reps):
+        for name, fn in pair if rep % 2 == 0 else pair[::-1]:
+            t0 = time.time()
+            out = fn(*args)
+            out[0].block_until_ready()
+            times[name].append((time.time() - t0) * 1e6)
+    return {name: min(ts) for name, ts in times.items()}
 
 
 def _agg_inputs(n_clients: int, d: int):
@@ -98,29 +132,41 @@ def run(scale: common.Scale) -> dict:
             D, E, F, W, n_fog, K_FRAC, use_pallas=False
         )
         unfused = _unfused_baseline(n_fog)
-        # Warm (compile) both, then time INTERLEAVED single blocked calls
-        # with alternating within-pair order, and report the MIN of each —
-        # the same estimator as _time and the CI perf-trend gate.  On a
-        # shared runner the min is the uncontended cost; means/medians get
-        # corrupted by multi-call contention storms that hit whichever
-        # pipeline is unlucky.
-        fused(*args), unfused(*args)
-        times = {"fused": [], "unfused": []}
-        pair = (("fused", fused), ("unfused", unfused))
-        for rep in range(16):
-            for name, fn in pair if rep % 2 == 0 else pair[::-1]:
-                t0 = time.time()
-                out = fn(*args)
-                out[0].block_until_ready()
-                times[name].append((time.time() - t0) * 1e6)
-        us_fused = min(times["fused"])
-        us_unfused = min(times["unfused"])
+        best = _paired_time((("fused", fused), ("unfused", unfused)), args)
+        us_fused, us_unfused = best["fused"], best["unfused"]
         agg_rows.append(
             dict(n_clients=n_clients, d=d, elems=n_clients * d, n_fog=n_fog,
                  us_fused_ref=us_fused, us_unfused_ref=us_unfused,
                  speedup=us_unfused / us_fused)
         )
-    return {"rows": rows, "agg_rows": agg_rows}
+
+    lt_rows = []
+    params = ae.init(jax.random.key(1), LT_D, (16, 8, 16))
+    for n_clients, window in LT_SIZES:
+        data = jax.random.normal(
+            jax.random.key(n_clients), (n_clients, window, LT_D)
+        )
+        keys = jax.random.split(jax.random.key(2), n_clients)
+        fused = jax.jit(make_client_solver(
+            ae.loss, batch_size=LT_BS, epochs=LT_EPOCHS, lr=LT_LR
+        ))
+        scan = jax.jit(make_client_solver(
+            ae.loss, batch_size=LT_BS, epochs=LT_EPOCHS, lr=LT_LR,
+            solver=LocalTrainConfig(fused=False),
+        ))
+        best = _paired_time(
+            (("fused", fused), ("scan", scan)), (params, data, keys)
+        )
+        us_fused, us_scan = best["fused"], best["scan"]
+        nb = window // LT_BS
+        lt_rows.append(
+            dict(n_clients=n_clients, window=window, d_feat=LT_D,
+                 epochs=LT_EPOCHS, batch_size=LT_BS,
+                 stream_elems=n_clients * LT_EPOCHS * nb * LT_BS * LT_D,
+                 us_fused_ref=us_fused, us_scan_ref=us_scan,
+                 speedup=us_scan / us_fused)
+        )
+    return {"rows": rows, "agg_rows": agg_rows, "local_train_rows": lt_rows}
 
 
 def report(res: dict) -> str:
@@ -143,6 +189,17 @@ def report(res: dict) -> str:
         lines.append(
             f"{r['n_clients']:>5}x{r['d']:<8} {r['elems']:>9} "
             f"{r['us_fused_ref']:>10.0f} {r['us_unfused_ref']:>11.0f} "
+            f"{r['speedup']:>8.2f}"
+        )
+    lines.append("fused local-train (resident window) vs per-client scan over"
+                 " a gathered batch stream (jnp ref path)")
+    lines.append(
+        f"{'NxWindow':>14} {'stream':>9} {'fused us':>10} {'scan us':>11} {'speedup':>8}"
+    )
+    for r in res["local_train_rows"]:
+        lines.append(
+            f"{r['n_clients']:>5}x{r['window']:<8} {r['stream_elems']:>9} "
+            f"{r['us_fused_ref']:>10.0f} {r['us_scan_ref']:>11.0f} "
             f"{r['speedup']:>8.2f}"
         )
     return "\n".join(lines)

@@ -49,12 +49,15 @@ def make_flat_round_fn(
 ) -> Callable[[HFLState, None], tuple[HFLState, RoundMetrics]]:
     """FedAvg (prox_mu=0) / FedProx (prox_mu>0) direct-to-gateway round.
 
-    The gateway is a single "cluster": compression + the weighted FedAvg
-    mean run through the same fused compress-and-aggregate operator as the
-    hierarchical loop, with ``n_fog=1``.  ``client_mesh`` shards the
-    client axis exactly as in :func:`repro.core.hfl.make_round_fn`.
+    The gateway is a single "cluster": local training runs through the
+    same fused batched client solver as the hierarchical loop (see
+    :func:`repro.optim.sgd.make_client_solver`; ``prox_mu > 0`` = FedProx
+    in-kernel), and compression + the weighted FedAvg mean through the
+    fused compress-and-aggregate operator, with ``n_fog=1``.
+    ``client_mesh`` shards the client axis exactly as in
+    :func:`repro.core.hfl.make_round_fn`.
     """
-    client_step = _client_train_fn(loss_fn, cfg)
+    clients_fn = _client_train_fn(loss_fn, cfg)
     if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
         raise ValueError(
             f"client axis ({ds.train.shape[0]} sensors) must divide the "
@@ -82,13 +85,13 @@ def make_flat_round_fn(
 
         if client_mesh is None:
             fog_delta, _, new_err, losses = _clients_round(
-                client_step, state.params, ds.train, keys, state.err,
+                clients_fn, state.params, ds.train, keys, state.err,
                 weights, gateway_id, 1, cfg.compressor,
             )
         else:
             sharded = shard_map_compat(
                 lambda p, dat, kk, e, w, fid: _clients_round(
-                    client_step, p, dat, kk, e, w, fid, 1,
+                    clients_fn, p, dat, kk, e, w, fid, 1,
                     cfg.compressor, axis="data",
                 ),
                 mesh=client_mesh,

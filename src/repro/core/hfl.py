@@ -6,9 +6,18 @@ parallel), fog clusters are segment-sum groups, and the three cooperation
 rules from Sec. V-B drive the mixing step.  Per-round energy (Eqs. 17-20),
 latency (Eq. 21), participation, and battery dynamics are all recorded.
 
-Compression (Eq. 30) and fog aggregation (Eq. 13) run as ONE fused
-operator — :func:`repro.core.aggregation.compress_and_aggregate` — so the
-dense per-client reconstructions never materialise; set
+The sensor side of a round is TWO fused operators by default.  Local
+training (Eq. 12) runs through :func:`repro.optim.sgd.make_client_solver`:
+for the paper autoencoder the whole E-epoch SGD phase of every client is
+one VMEM-resident kernel launch (``kernels/fused_local_train``, jnp oracle
+``kernels/ref.local_train_ref``) that indexes each client's resident
+window per minibatch instead of gathering a dense ``(E * nb, bs, D)``
+batch stream — set ``HFLConfig.local_solver = LocalTrainConfig(
+fused=False)`` for the legacy per-client scan (non-AE models fall back
+automatically).  Compression (Eq. 30) and fog aggregation (Eq. 13) then
+run as the second fused operator —
+:func:`repro.core.aggregation.compress_and_aggregate` — so the dense
+per-client reconstructions never materialise either; set
 ``CompressorConfig.fused=False`` for the legacy two-pass pipeline.
 
 Pass ``client_mesh`` (a 1-D ``("data",)`` mesh, see
@@ -34,11 +43,10 @@ from repro.core import compression as comp
 from repro.core import cooperation as coop
 from repro.core import energy as en
 from repro.core import topology as topo
-from repro.data.pipeline import multi_epoch_batches
 from repro.data.synthetic import SensorDataset
 from repro.launch.mesh import shard_map_compat
 from repro.optim import server as srv
-from repro.optim.sgd import local_sgd, proximal_local_sgd
+from repro.optim.sgd import LocalTrainConfig, make_client_solver
 
 Params = Any
 LossFn = Callable[[Params, jax.Array], jax.Array]
@@ -54,6 +62,7 @@ class HFLConfig:
     prox_mu: float = 0.0             # >0 => FedProx local solver
     server_opt: str = "sgd"          # "sgd" (FedAvg identity) | "adam" (FedAdam [34])
     server_lr: float = 1e-2
+    local_solver: LocalTrainConfig = LocalTrainConfig()
     compressor: comp.CompressorConfig = comp.CompressorConfig()
     fog_mobility: bool = True
     compute_rate_flops: float = 1e8  # embedded-DSP local compute rate
@@ -104,49 +113,81 @@ def init_state(
     )
 
 
-def _local_train(
-    loss_fn: LossFn,
-    params: Params,
-    data: jax.Array,
-    key: jax.Array,
-    cfg: HFLConfig,
-) -> tuple[Params, jax.Array]:
-    batches = multi_epoch_batches(key, data, cfg.batch_size, cfg.local_epochs)
-    if cfg.prox_mu > 0.0:
-        return proximal_local_sgd(loss_fn, params, batches, cfg.lr, cfg.prox_mu)
-    return local_sgd(loss_fn, params, batches, cfg.lr)
-
-
 def _client_train_fn(loss_fn: LossFn, cfg: HFLConfig):
-    """Per-client step: local SGD from the broadcast params, flat delta."""
-
-    def client_step(params: Params, data: jax.Array, k: jax.Array):
-        p1, loss = _local_train(loss_fn, params, data, k, cfg)
-        delta = jax.tree_util.tree_map(lambda a, b: a - b, p1, params)
-        return ravel_pytree(delta)[0], loss
-
-    return client_step
+    """Batched client phase: E-epoch local SGD from the broadcast params
+    for EVERY client at once, returning flat deltas (fused kernel path by
+    default; see :func:`repro.optim.sgd.make_client_solver`)."""
+    return make_client_solver(
+        loss_fn,
+        batch_size=cfg.batch_size,
+        epochs=cfg.local_epochs,
+        lr=cfg.lr,
+        prox_mu=cfg.prox_mu,
+        solver=cfg.local_solver,
+    )
 
 
 def _clients_round(
-    client_step, params, data, keys, err, weights, fog_id, n_fog, cc,
+    clients_fn, params, data, keys, err, weights, fog_id, n_fog, cc,
     axis: str | None = None,
 ):
     """Train every client and fuse compression into the fog reduction.
 
+    The sensor side in two fused operators: ``clients_fn`` (the batched
+    local-train solver from :func:`_client_train_fn`) emits the flat
+    deltas, which chain straight into the fused compress-and-aggregate.
     With ``axis`` set this is the shard_map body: each shard trains its
     slice of the client axis and contributes partial fog sums; the psum
     pair is the sensor->fog hop (cf. aggregation.hierarchical_mean).
     Returns (fog_delta (n_fog, d) — Eq. 13 cluster means — fog_weight,
     new_err (N_local, d), losses (N_local,)).
     """
-    deltas, losses = jax.vmap(
-        lambda dd, kk: client_step(params, dd, kk)
-    )(data, keys)
+    deltas, losses = clients_fn(params, data, keys)
     fog_delta, fog_weight, new_err = agg.compress_and_aggregate(
         deltas, err, fog_id, weights, n_fog, cc, axis=axis
     )
     return fog_delta, fog_weight, new_err, losses
+
+
+def comm_latency_s(
+    l_u: jax.Array,
+    l_full: jax.Array,
+    active: jax.Array,
+    sensor_dist_m: jax.Array,
+    decision: coop.CoopDecision,
+    fog_active: jax.Array,
+    fog_gateway_dist_m: jax.Array,
+    channel: ch.ChannelParams,
+) -> jax.Array:
+    """Eq. 21 communication term: the slowest active parallel link per
+    tier (sensor->fog uplink, fog<->fog exchange, fog->gateway).
+
+    Every tier masks on the links that actually carry a payload.  In
+    particular the fog-to-fog tier masks on ``cooperates & fog_active``,
+    matching the Eq. 18 energy term: an EMPTY fog cluster has no model to
+    exchange, so a phantom pairing with a distant partner must not set the
+    round's latency.
+    """
+    lat_up = jnp.max(
+        jnp.where(
+            active, en.link_latency_s(l_u, sensor_dist_m, channel), 0.0
+        )
+    )
+    lat_ff = jnp.max(
+        jnp.where(
+            decision.cooperates & fog_active,
+            en.link_latency_s(l_full, decision.dist_m, channel),
+            0.0,
+        )
+    )
+    lat_fg = jnp.max(
+        jnp.where(
+            fog_active,
+            en.link_latency_s(l_full, fog_gateway_dist_m, channel),
+            0.0,
+        )
+    )
+    return jnp.maximum(jnp.maximum(lat_up, lat_ff), lat_fg)
 
 
 def make_round_fn(
@@ -165,7 +206,7 @@ def make_round_fn(
     """
 
     n_fog = cfg.deployment.n_fog
-    client_step = _client_train_fn(loss_fn, cfg)
+    clients_fn = _client_train_fn(loss_fn, cfg)
     if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
         raise ValueError(
             f"client axis ({ds.train.shape[0]} sensors) must divide the "
@@ -197,13 +238,13 @@ def make_round_fn(
 
         if client_mesh is None:
             fog_delta, fog_weight, new_err, losses = _clients_round(
-                client_step, state.params, ds.train, keys, state.err,
+                clients_fn, state.params, ds.train, keys, state.err,
                 weights, fa.fog_id, n_fog, cfg.compressor,
             )
         else:
             sharded = shard_map_compat(
                 lambda p, dat, kk, e, w, fid: _clients_round(
-                    client_step, p, dat, kk, e, w, fid, n_fog,
+                    clients_fn, p, dat, kk, e, w, fid, n_fog,
                     cfg.compressor, axis="data",
                 ),
                 mesh=client_mesh,
@@ -251,28 +292,15 @@ def make_round_fn(
         e_f2g = jnp.sum(e_fg)
 
         # Latency (Eq. 21): slowest parallel link per tier + compute time.
-        lat_up = jnp.max(
-            jnp.where(active, en.link_latency_s(l_u, fa.dist_m, cfg.channel), 0.0)
-        )
-        lat_ff = jnp.max(
-            jnp.where(
-                decision.cooperates,
-                en.link_latency_s(l_full, decision.dist_m, cfg.channel),
-                0.0,
-            )
-        )
-        lat_fg = jnp.max(
-            jnp.where(
-                fog_active,
-                en.link_latency_s(l_full, fa.fog_gateway_dist_m, cfg.channel),
-                0.0,
-            )
+        lat_comm = comm_latency_s(
+            l_u, l_full, active, fa.dist_m, decision, fog_active,
+            fa.fog_gateway_dist_m, cfg.channel,
         )
         flops = en.autoencoder_flops(
             ds.train.shape[-1], (16, 8, 16), ds.train.shape[1], cfg.local_epochs
         )
         lat_comp = flops / cfg.compute_rate_flops
-        latency = jnp.maximum(jnp.maximum(lat_up, lat_ff), lat_fg) + lat_comp
+        latency = lat_comm + lat_comp
 
         e_comp = en.compute_energy_j(jnp.float32(flops), cfg.energy)
         spent = e_up + jnp.where(active, e_comp, 0.0)
@@ -326,7 +354,14 @@ def train(
         final, metrics = jax.lax.scan(round_fn, state, None, length=cfg.rounds)
         return final.params, metrics
 
-    step_fn = jax.jit(lambda s: round_fn(s, None))
+    # Donating the carry lets each round update the HFLState — the (N, d)
+    # error buffer included — in place instead of copying it per round.
+    # state.params aliases the caller's ``init_params`` buffers, which the
+    # first donated call would invalidate, so copy that one leaf up front.
+    state = state._replace(
+        params=jax.tree_util.tree_map(jnp.copy, state.params)
+    )
+    step_fn = jax.jit(lambda s: round_fn(s, None), donate_argnums=0)
     rounds_metrics = []
     for t in range(cfg.rounds):
         state, m = step_fn(state)

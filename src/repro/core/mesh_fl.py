@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import api
+from repro.optim.sgd import local_sgd
 
 BLOCK = 4096
 
@@ -88,6 +89,7 @@ def make_pod_hfl_train_step(
     rho_s: float = 0.05,
     self_weight: float = 0.5,
     mode: str = "int8",
+    local_epochs: int = 1,
 ):
     """Compressed hierarchical train step (pure pjit; see module doc).
 
@@ -99,6 +101,15 @@ def make_pod_hfl_train_step(
     refuted-hypothesis measurement in EXPERIMENTS.md §Perf pair C.
     Elementwise int8 commutes with any sharding, cutting the wire format
     4x with zero resharding.
+
+    ``local_epochs`` is the pod analogue of the paper's E (Eq. 12): with
+    ``local_epochs > 1`` each pod runs E SGD passes over its batch shard
+    through :func:`repro.optim.sgd.local_sgd` (the same local-training
+    driver as the sensor round loops — these LLM-scale params auto-fall
+    back to its scan path, the AE kernel being the fused fast path) and
+    the pods exchange compressed parameter DELTAS instead of gradients.
+    Mixing is linear and the compressor is scale-equivariant, so E = 1
+    keeps the historical gradient-exchange numerics exactly.
 
     self_weight=0.5 with 2 pods reproduces the exact mean of the
     compressed pod updates; the paper's selective weights use 0.8.
@@ -183,11 +194,38 @@ def make_pod_hfl_train_step(
             ),
             batch,
         )
-        losses, grads = jax.vmap(
-            jax.value_and_grad(lfn), in_axes=(None, 0)
-        )(params, pb)
+        if local_epochs == 1:
+            # Historical path: one gradient per pod, exchanged as-is.
+            losses, exchanged = jax.vmap(
+                jax.value_and_grad(lfn), in_axes=(None, 0)
+            )(params, pb)
+        else:
+            # E local passes per pod via the shared local-training driver;
+            # the exchange payload becomes the parameter delta.  The steps
+            # run on an f32 copy of the params: in raw bf16, |lr * g| <
+            # |p| * 2^-9 rounds the update to zero at production learning
+            # rates (the E=1 path upcasts before its update for the same
+            # reason), which would silently stall local training.
+            def pod_local(pb_p):
+                p32 = jax.tree_util.tree_map(
+                    lambda p: p.astype(jnp.float32)
+                    if jnp.issubdtype(p.dtype, jnp.floating) else p,
+                    params,
+                )
+                batches = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (local_epochs,) + x.shape
+                    ),
+                    pb_p,
+                )
+                p1, loss = local_sgd(lfn, p32, batches, lr)
+                return loss, jax.tree_util.tree_map(
+                    lambda a, b: a - b, p1, p32
+                )
 
-        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+            losses, exchanged = jax.vmap(pod_local)(pb)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(exchanged)
         flat_e = jax.tree_util.tree_leaves(err)
         upds, new_es = [], []
         for g, e in zip(flat_g, flat_e):
@@ -197,8 +235,10 @@ def make_pod_hfl_train_step(
         upd = jax.tree_util.tree_unflatten(tdef, upds)
         new_err = jax.tree_util.tree_unflatten(tdef, new_es)
 
+        # Gradients need the -lr step; deltas already carry it.
+        step_scale = -lr if local_epochs == 1 else 1.0
         new_params = jax.tree_util.tree_map(
-            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+            lambda p, g: (p.astype(jnp.float32) + step_scale * g).astype(p.dtype)
             if jnp.issubdtype(p.dtype, jnp.floating) else p,
             params, upd,
         )

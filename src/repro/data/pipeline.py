@@ -20,13 +20,31 @@ def epoch_batches(
     return data[perm].reshape(nb, batch_size, *data.shape[1:])
 
 
+def multi_epoch_indices(
+    key: jax.Array, n: int, batch_size: int, epochs: int
+) -> jax.Array:
+    """(epochs * n//bs, bs) int32 row indices for E local epochs.
+
+    Epoch e is a fresh permutation of [0, n) truncated to whole minibatches
+    — exactly the batch order of :func:`multi_epoch_batches`, without
+    gathering the data.  The fused local-train kernel consumes these and
+    indexes its VMEM-resident window per step, so the dense
+    (E * n//bs, bs, D) batch stream never materialises.
+    """
+    nb = n // batch_size
+    keys = jax.random.split(key, epochs)
+    perms = jax.vmap(
+        lambda k: jax.random.permutation(k, n)[: nb * batch_size]
+    )(keys)
+    return perms.reshape(epochs * nb, batch_size).astype(jnp.int32)
+
+
 def multi_epoch_batches(
     key: jax.Array, data: jax.Array, batch_size: int, epochs: int
 ) -> jax.Array:
     """(epochs * n//bs, bs, D) batch stream for E local epochs."""
-    keys = jax.random.split(key, epochs)
-    batches = jax.vmap(lambda k: epoch_batches(k, data, batch_size))(keys)
-    return batches.reshape(-1, batch_size, *data.shape[1:])
+    idx = multi_epoch_indices(key, data.shape[0], batch_size, epochs)
+    return data[idx]
 
 
 def lm_batches(

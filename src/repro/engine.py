@@ -84,6 +84,7 @@ from repro.core import hfl
 from repro.data.synthetic import SensorDataset
 from repro.launch import sharding as shard_rules
 from repro.launch import experiment as exp
+from repro.optim.sgd import LocalTrainConfig
 
 
 def default_use_pallas() -> bool:
@@ -188,8 +189,24 @@ class Engine:
             interpret=not use_pallas,
         )
 
+    def resolve_local_solver(
+        self, ls: LocalTrainConfig
+    ) -> LocalTrainConfig:
+        """The engine's local-train default: the fused kernel, Pallas on
+        TPU, the ``kernels/ref`` oracle elsewhere.  ``fused=False`` (the
+        legacy per-client scan) is respected as an explicit opt-out."""
+        if not ls.fused:
+            return ls
+        use_pallas = default_use_pallas()
+        if ls.use_pallas == use_pallas and ls.interpret == (not use_pallas):
+            return ls
+        return ls.replace(use_pallas=use_pallas, interpret=not use_pallas)
+
     def resolve_config(self, cfg: hfl.HFLConfig) -> hfl.HFLConfig:
-        return cfg.replace(compressor=self.resolve_compressor(cfg.compressor))
+        return cfg.replace(
+            compressor=self.resolve_compressor(cfg.compressor),
+            local_solver=self.resolve_local_solver(cfg.local_solver),
+        )
 
     @staticmethod
     def stack_datasets(ds_list: Sequence[SensorDataset]) -> SensorDataset:
@@ -521,23 +538,26 @@ class Engine:
         rho_s: float = 0.05,
         self_weight: float = 0.5,
         mode: str = "int8",
+        local_epochs: int = 1,
     ) -> Callable:
         """Cached jitted TPU-mesh pod step (``core/mesh_fl`` family).
 
         Defaults to a single-pod host mesh so the same entry point works
         on CPU; pass the production mesh on real hardware.
+        ``local_epochs > 1`` runs E local passes per pod through the
+        shared ``optim/sgd`` local-training driver (delta exchange).
         """
         from repro.core import mesh_fl
 
         if mesh is None:
             mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
         cache_key = ("pod", repr(model_cfg), tuple(sorted(mesh.shape.items())),
-                     rho_s, self_weight, mode)
+                     rho_s, self_weight, mode, local_epochs)
 
         def build():
             return mesh_fl.make_pod_hfl_train_step(
                 model_cfg, mesh, rho_s=rho_s, self_weight=self_weight,
-                mode=mode,
+                mode=mode, local_epochs=local_epochs,
             )
 
         fn, _ = self._get_program(cache_key, build)

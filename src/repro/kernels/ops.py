@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_agg as _fa
+from repro.kernels import fused_local_train as _flt
 from repro.kernels import fused_score as _fs
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
@@ -220,6 +221,88 @@ def fused_score(
         x_pad, tau_pad.reshape(-1, _fs.SCORE_ROWS), ws_pad, bs_pad, interpret
     )
     return err.reshape(-1)[:r], flag.reshape(-1)[:r] > 0.0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "prox_mu", "use_pallas", "interpret")
+)
+def local_train(
+    params: Any,          # autoencoder params: list of {"w", "b"} layers
+    data: jax.Array,      # (N, window, D) per-client resident windows
+    idx: jax.Array,       # (N, steps, bsz) int32 minibatch row indices
+    lr: float,
+    prox_mu: float = 0.0,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused E-epoch local training for a batch of clients (the client
+    phase of a federated round in ONE operator).
+
+    Layout owner for :mod:`repro.kernels.fused_local_train`: windows and
+    every layer dimension are zero-padded to LANES multiples, batch rows
+    to SUBLANES, and the index table is transposed to (bsz, steps) and
+    -1-filled so padded rows select nothing.  ``idx`` comes from
+    :func:`repro.data.pipeline.multi_epoch_indices`, which makes this
+    batch-for-batch identical to ``local_sgd`` over
+    ``multi_epoch_batches`` — without the dense (steps, bsz, D) stream.
+
+    Returns (flat_deltas (N, d) f32 in ``ravel_pytree`` leaf order, i.e.
+    exactly ``ravel_pytree(theta_i^E - theta^t)``, and mean_losses (N,)).
+    The deltas chain straight into :func:`compress_aggregate`.
+    """
+    ws = tuple(layer["w"] for layer in params)
+    bs = tuple(layer["b"] for layer in params)
+    n, _, d = data.shape
+    steps, bsz = idx.shape[1], idx.shape[2]
+
+    if not use_pallas:
+        new_ws, new_bs, losses = jax.vmap(
+            lambda xx, ii: _ref.local_train_ref(
+                xx, ii, ws, bs, lr, prox_mu
+            )
+        )(data, idx)
+        dws = [nw - w[None] for nw, w in zip(new_ws, ws)]
+        dbs = [nb.reshape(n, 1, -1) - b[None, None] for nb, b in
+               zip(new_bs, bs)]
+    else:
+        lanes, sub = _flt.LANES, _flt.SUBLANES
+        dims = (d,) + tuple(w.shape[1] for w in ws)
+        dims_pad = tuple(max(1, -(-dd // lanes)) * lanes for dd in dims)
+        w_pad = max(1, -(-data.shape[1] // lanes)) * lanes
+        b_pad = max(1, -(-bsz // sub)) * sub
+        s_pad = max(1, -(-steps // lanes)) * lanes
+        x_pad = (
+            jnp.zeros((n, w_pad, dims_pad[0]), jnp.float32)
+            .at[:, : data.shape[1], :d].set(data.astype(jnp.float32))
+        )
+        idx_t = jnp.swapaxes(idx, 1, 2)                  # (N, bsz, steps)
+        idx_pad = (
+            jnp.full((n, b_pad, s_pad), -1, jnp.int32)
+            .at[:, :bsz, :steps].set(idx_t.astype(jnp.int32))
+        )
+        ws_pad = tuple(
+            _pad2(w.astype(jnp.float32), dims_pad[i], dims_pad[i + 1])
+            for i, w in enumerate(ws)
+        )
+        bs_pad = tuple(
+            _pad2(b.astype(jnp.float32)[None, :], 1, dims_pad[i + 1])
+            for i, b in enumerate(bs)
+        )
+        dws_p, dbs_p, loss = _flt.local_train_blocks(
+            x_pad, idx_pad, ws_pad, bs_pad, steps, bsz, lr, prox_mu,
+            interpret,
+        )
+        dws = [dw[:, : w.shape[0], : w.shape[1]] for dw, w in zip(dws_p, ws)]
+        dbs = [db[:, :, : b.shape[0]] for db, b in zip(dbs_p, bs)]
+        losses = loss[:, 0]
+    # ravel_pytree order for a list of {"b", "w"} dicts: per layer, bias
+    # first (dict keys sort alphabetically), then the row-major weight.
+    flat = jnp.concatenate(
+        [part for dw, db in zip(dws, dbs)
+         for part in (db.reshape(n, -1), dw.reshape(n, -1))],
+        axis=1,
+    )
+    return flat, losses
 
 
 def swa_decode_attention(

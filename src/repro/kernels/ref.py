@@ -177,6 +177,54 @@ def fused_score_ref(
     return err, err > tau
 
 
+def local_train_ref(
+    x: jax.Array,                 # (window, D) one client's resident window
+    idx: jax.Array,               # (steps, bsz) int32 minibatch row indices
+    ws: tuple[jax.Array, ...],    # per-layer weights, (d_in, d_out)
+    bs: tuple[jax.Array, ...],    # per-layer biases, (d_out,)
+    lr: float,
+    mu: float = 0.0,
+) -> tuple[tuple[jax.Array, ...], tuple[jax.Array, ...], jax.Array]:
+    """Oracle for the fused local-training kernel (the client phase).
+
+    Runs the whole E-epoch local solver of one client — exactly
+    ``optim/sgd.local_sgd`` (``mu == 0``) / ``proximal_local_sgd``
+    (``mu > 0``, FedProx with the broadcast params as anchor) over the
+    ``models/autoencoder.loss`` objective — but assembles each minibatch by
+    *indexing* the resident ``(window, D)`` data with ``idx`` instead of
+    consuming a pre-gathered ``(steps, bsz, D)`` batch stream.  With
+    ``idx = data/pipeline.multi_epoch_indices(key, ...)`` the two
+    formulations see identical batches, so they agree to float tolerance.
+
+    Returns (new_ws, new_bs, mean_loss).
+    """
+    n_layers = len(ws)
+
+    def loss_fn(params, batch):
+        pw, pb = params
+        h = batch
+        for li in range(n_layers):
+            h = h @ pw[li] + pb[li]
+            if li < n_layers - 1:
+                h = jnp.tanh(h)
+        return jnp.mean(jnp.sum(jnp.square(batch - h), axis=-1))
+
+    anchor = (ws, bs)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(params, ib):
+        loss, g = grad_fn(params, x[ib])
+        if mu:
+            g = jax.tree_util.tree_map(
+                lambda gg, p, a: gg + mu * (p - a), g, params, anchor
+            )
+        new = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+        return new, loss
+
+    (new_ws, new_bs), losses = jax.lax.scan(step, (ws, bs), idx)
+    return new_ws, new_bs, jnp.mean(losses)
+
+
 def sliding_window_decode_attention_ref(
     q: jax.Array,          # (Hq, d)
     k_cache: jax.Array,    # (S, Hkv, d)

@@ -1,6 +1,9 @@
 from repro.optim.sgd import (  # noqa: F401
+    LocalTrainConfig,
     adam,
+    fusable_params,
     local_sgd,
+    make_client_solver,
     proximal_local_sgd,
     sgd,
 )

@@ -3,13 +3,27 @@
 Implemented from scratch (no optax dependency): plain SGD, FedProx's
 proximal SGD (Li et al., MLSys'20), Adam for the LLM-scale examples, and
 the E-epoch local-training drivers used by the federated round (Eq. 12).
+
+The round loops obtain their client phase from :func:`make_client_solver`,
+which returns a BATCHED solver (all clients at once).  For the paper
+autoencoder it dispatches to the fused local-train operator
+(``kernels/ops.local_train``: the whole E-epoch SGD phase in one
+VMEM-resident kernel launch, Pallas on TPU / the ``kernels/ref`` oracle
+elsewhere) — the dense per-client ``(E * nb, bs, D)`` batch stream of the
+legacy path never materialises.  Non-AE models (anything that is not the
+``models/autoencoder`` MLP trained with its MSE loss) automatically fall
+back to the legacy per-client ``local_sgd`` scan, which
+``LocalTrainConfig(fused=False)`` also forces — kept as the equivalence
+baseline.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 
 Params = Any
 LossFn = Callable[[Params, jax.Array], jax.Array]
@@ -61,6 +75,102 @@ def proximal_local_sgd(
 
     params, losses = jax.lax.scan(step, params, batches)
     return params, jnp.mean(losses)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalTrainConfig:
+    """How the round loops run the client phase (Eq. 12).
+
+    ``fused=True`` routes AE clients through the fused local-train kernel
+    (``kernels/fused_local_train``; ``use_pallas``/``interpret`` pick the
+    backend exactly like ``CompressorConfig``).  ``fused=False`` is the
+    legacy per-client ``local_sgd`` scan over a gathered batch stream —
+    the equivalence baseline.  Models the kernel cannot express (anything
+    but the paper's MLP autoencoder + MSE loss) fall back automatically.
+    """
+
+    fused: bool = True
+    use_pallas: bool = False
+    interpret: bool = True
+
+    def replace(self, **kw: Any) -> "LocalTrainConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def fusable_params(params: Any) -> bool:
+    """True when ``params`` is the AE-style MLP the fused kernel handles:
+    a list/tuple of ``{"w", "b"}`` layers with chained 2-D weights and an
+    output dimension equal to the input dimension (reconstruction)."""
+    if not isinstance(params, (list, tuple)) or not params:
+        return False
+    prev = None
+    for layer in params:
+        if not isinstance(layer, dict) or set(layer) != {"w", "b"}:
+            return False
+        w, b = layer["w"], layer["b"]
+        if getattr(w, "ndim", 0) != 2 or getattr(b, "ndim", 0) != 1:
+            return False
+        if b.shape[0] != w.shape[1]:
+            return False
+        if prev is not None and w.shape[0] != prev:
+            return False
+        prev = w.shape[1]
+    return params[0]["w"].shape[0] == params[-1]["w"].shape[1]
+
+
+def make_client_solver(
+    loss_fn: LossFn,
+    *,
+    batch_size: int,
+    epochs: int,
+    lr: float,
+    prox_mu: float = 0.0,
+    solver: LocalTrainConfig = LocalTrainConfig(),
+) -> Callable[[Params, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]:
+    """Build the batched client phase used by the round loops.
+
+    Returns ``clients_fn(params, data (N, window, D), keys (N,)) ->
+    (flat_deltas (N, d), mean_losses (N,))`` where the deltas are
+    ``ravel_pytree(theta_i^E - theta^t)`` — ready to chain into the fused
+    compress-and-aggregate operator.
+
+    Dispatch happens per call: when ``solver.fused`` and the params are
+    the paper autoencoder trained with its own loss
+    (``models/autoencoder.loss``), the whole phase runs as ONE fused
+    operator over all clients; otherwise it falls back to the legacy
+    vmapped ``local_sgd`` / ``proximal_local_sgd`` scan.
+    """
+    from repro.data.pipeline import multi_epoch_batches, multi_epoch_indices
+    from repro.kernels import ops as kops
+    from repro.models import autoencoder as ae
+
+    def scan_path(params, data, keys):
+        def one(dd, kk):
+            batches = multi_epoch_batches(kk, dd, batch_size, epochs)
+            if prox_mu > 0.0:
+                p1, loss = proximal_local_sgd(
+                    loss_fn, params, batches, lr, prox_mu
+                )
+            else:
+                p1, loss = local_sgd(loss_fn, params, batches, lr)
+            delta = jax.tree_util.tree_map(lambda a, b: a - b, p1, params)
+            return ravel_pytree(delta)[0], loss
+
+        return jax.vmap(one)(data, keys)
+
+    def clients_fn(params, data, keys):
+        if solver.fused and loss_fn is ae.loss and fusable_params(params):
+            window = data.shape[1]
+            idx = jax.vmap(
+                lambda k: multi_epoch_indices(k, window, batch_size, epochs)
+            )(keys)
+            return kops.local_train(
+                params, data, idx, lr, prox_mu,
+                use_pallas=solver.use_pallas, interpret=solver.interpret,
+            )
+        return scan_path(params, data, keys)
+
+    return clients_fn
 
 
 class AdamState(NamedTuple):
