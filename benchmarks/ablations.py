@@ -7,6 +7,14 @@
     controls how many fog clusters cooperate; we sweep it and report
     active links + f2f energy at paper scale — quantifying the rule's
     sensitivity, which the paper fixes without ablation.
+
+Both training and audit rho cells run through ``Engine.sweep`` (PR 5):
+the whole rho grid is grouped into shape-classes and each class compiles
+ONCE with the swept knobs stacked along a leading config axis — 3
+compiled programs for the 8-cell quick grid (audits: 1, sparse trains: 1,
+the dense train: 1) vs 8 per-cell programs before.  The threshold sweep
+reuses the production ``selective_cooperation`` rule with a swept
+``eligibility_factor`` instead of a hand-rolled copy.
 """
 from __future__ import annotations
 
@@ -28,40 +36,54 @@ THRESHOLDS = (0.25, 0.5, 0.75, 1.0, 1.5)
 
 def _rho_sweep(scale: common.Scale) -> list[dict]:
     eng = common.get_engine()
-    rows = []
     n_train = scale.train_n[100]
-    for rho in RHOS:
-        cc = comp.CompressorConfig(rho_s=rho, quant_bits=8 if rho < 1.0 else 32)
-        audit_cfg = exp.make_config(
-            n_sensors=200, n_fog=20, rounds=20, compressor=cc
-        )
-        # One compiled program per cell: all audit seeds batched.
-        audit = eng.audit(
-            "hfl-nocoop", audit_cfg, (0, 1, 2), label=f"rho={rho}:audit"
-        )
-        e = float(jnp.mean(audit["e_total"]))
-        train_cfg = exp.make_config(
+    ccs = [
+        comp.CompressorConfig(rho_s=rho, quant_bits=8 if rho < 1.0 else 32)
+        for rho in RHOS
+    ]
+    # One program for the WHOLE audit grid: the audit touches the
+    # compressor only through the payload size, which sweeps as an operand.
+    audit_cfgs = [
+        exp.make_config(n_sensors=200, n_fog=20, rounds=20, compressor=cc)
+        for cc in ccs
+    ]
+    audit = eng.sweep(
+        "hfl-nocoop", audit_cfgs, (0, 1, 2), family="audit",
+        label="rho:audit-sweep",
+    )
+    # Training grid: the sparse q8 cells share one program (traced keep
+    # count), the dense fp32 cell is its own shape-class.
+    train_cfgs = [
+        exp.make_config(
             n_sensors=n_train, n_fog=max(4, n_train // 6),
             rounds=scale.rounds, local_epochs=scale.local_epochs,
             compressor=cc,
         )
-        r = eng.run(
-            "hfl-nocoop", train_cfg, scale.seeds,
-            lambda s: common.make_dataset(400 + s, n_train, scale),
-            label=f"rho={rho}:train",
-        )
-        f1m, f1sd = r.seed_mean_std("f1")
+        for cc in ccs
+    ]
+    train = eng.sweep(
+        "hfl-nocoop", train_cfgs, scale.seeds,
+        lambda s: common.make_dataset(400 + s, n_train, scale),
+        label="rho:train-sweep",
+    )
+    rows = []
+    for i, rho in enumerate(RHOS):
+        f1m, f1sd = train.seed_mean_std("f1", i)
         rows.append(dict(
             rho_s=rho,
-            payload_bits=comp.payload_bits(1352, cc),
-            energy_j_n200=e,
+            payload_bits=comp.payload_bits(1352, ccs[i]),
+            energy_j_n200=float(jnp.mean(audit["e_total"][i])),
             f1_mean=f1m, f1_std=f1sd, f1_train_n=n_train,
         ))
     return rows
 
 
 def _threshold_sweep() -> list[dict]:
-    """Eq. 28 factor sweep at N=200: how many links fire, at what cost."""
+    """Eq. 28 factor sweep at N=200: how many links fire, at what cost.
+
+    Runs the production selective rule with a swept eligibility factor —
+    empty-partner gating and the feasibility-quantile guard included.
+    """
     cparams = ch.ChannelParams()
     eparams = en.EnergyParams()
     rows = []
@@ -74,26 +96,16 @@ def _threshold_sweep() -> list[dict]:
                 topo.DeploymentParams(n_sensors=200, n_fog=20),
             )
             fa = assoc.nearest_feasible_fog(dep, cparams)
-            c = fa.cluster_size.astype(jnp.float32)
-            nonempty = c > 0
-            mean_c = jnp.sum(c * nonempty) / jnp.maximum(jnp.sum(nonempty), 1.0)
-            # re-run the selective rule with a swept eligibility factor
-            d = ch.pairwise_distances(dep.fog_pos, dep.fog_pos) + jnp.diag(
-                jnp.full((20,), jnp.inf)
+            dec = coop.selective_cooperation(
+                dep.fog_pos, fa.cluster_size, cparams,
+                eligibility_factor=factor,
             )
-            feas = ch.feasible(d, cparams)
-            eligible = c <= jnp.maximum(2.0, factor * mean_c)
-            feas_d = jnp.where(feas, d, jnp.nan)
-            q1 = jnp.nanquantile(feas_d, 0.25)
-            larger = c[None, :] > c[:, None]
-            candidate = feas & larger & (d < q1)
-            has = jnp.any(candidate, axis=-1)
-            cooperates = eligible & has & nonempty
-            partner_d = jnp.min(jnp.where(candidate, d, jnp.inf), axis=-1)
-            e = en.tx_energy_j(d_bits, jnp.where(
-                cooperates, partner_d, 1.0), cparams, eparams)
-            e_f2f.append(float(jnp.sum(jnp.where(cooperates, e, 0.0))) * 20)
-            links.append(float(jnp.sum(cooperates)))
+            e = en.tx_energy_j(
+                d_bits, jnp.where(dec.cooperates, dec.dist_m, 1.0),
+                cparams, eparams,
+            )
+            e_f2f.append(float(jnp.sum(jnp.where(dec.cooperates, e, 0.0))) * 20)
+            links.append(float(jnp.sum(dec.cooperates)))
         rows.append(dict(
             factor=factor,
             links_mean=common.mean_std(links)[0],
@@ -132,8 +144,9 @@ def report(res: dict) -> str:
     eng = res.get("engine")
     if eng:
         lines.append(
-            f"engine: {eng['compiled_programs_new']} compiled programs vs "
-            f"{eng['sequential_program_equivalent']} sequential traces, "
+            f"engine: {eng['sweep_compiled_programs']} compiled programs for "
+            f"{eng['sweep_cells']} sweep cells "
+            f"(vs {eng['sequential_program_equivalent']} sequential traces), "
             f"{eng['wall_s_total']:.1f}s batched wall"
         )
     return "\n".join(lines)

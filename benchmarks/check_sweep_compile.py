@@ -1,0 +1,76 @@
+"""Compile-count gate for config-axis sweeps (Engine.sweep, PR 5).
+
+  python -m benchmarks.check_sweep_compile FRESH.json BASELINE.json
+
+Sibling of ``benchmarks/check_kernel_micro`` for the sweep batching
+contract instead of kernel timings: a sweep that silently falls back to
+per-cell compilation (a knob accidentally promoted to a static field, a
+shape-class signature that fragments, a benchmark rewired off
+``Engine.sweep``) shows up as a ``sweep_compiled_programs`` regression in
+the bench JSON's ``"engine"`` block — which, unlike wall-clock, is exact
+and runner-independent, so the threshold is equality, not a noise
+multiplier.  Checked per JSON:
+
+* ``engine.sweep_compiled_programs`` must not exceed the committed
+  baseline (program-count regression);
+* ``engine.sweep_cells`` must not shrink (a benchmark refactor that stops
+  routing cells through the sweep would otherwise disable the gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(fresh: dict, baseline: dict, name: str = "") -> list[str]:
+    failures = []
+    fe = fresh.get("engine") or {}
+    be = baseline.get("engine") or {}
+    if "sweep_compiled_programs" not in be:
+        print(f"ok   {name}: baseline predates sweep accounting; no trend yet")
+        return failures
+    tag = f"{name}engine.sweep_compiled_programs"
+    fresh_programs = fe.get("sweep_compiled_programs")
+    if fresh_programs is None:
+        failures.append(f"{tag}: missing from the fresh JSON")
+        return failures
+    line = (
+        f"{tag}: {be['sweep_compiled_programs']} -> {fresh_programs} "
+        f"(cells {be.get('sweep_cells')} -> {fe.get('sweep_cells')})"
+    )
+    if fresh_programs > be["sweep_compiled_programs"]:
+        failures.append(f"{line}: per-cell compilation fallback")
+    elif fe.get("sweep_cells", 0) < be.get("sweep_cells", 0):
+        failures.append(f"{line}: sweep coverage shrank")
+    else:
+        print(f"ok   {line}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated bench JSON")
+    ap.add_argument("baseline", help="committed baseline bench JSON")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(fresh, baseline)
+    if failures:
+        print("SWEEP COMPILE-COUNT REGRESSION:")
+        for line in failures:
+            print(f"FAIL {line}")
+        print(
+            "If this PR intentionally changed the sweep structure, "
+            "regenerate the baseline: PYTHONPATH=src python -m "
+            "benchmarks.run --only <module>"
+        )
+        return 1
+    print("sweep compile counts match the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,12 +46,25 @@ def engine_snapshot(log: list[dict]) -> dict:
     ``sequential_program_equivalent`` is what the pre-engine harness would
     have traced: one program per (cell, trial), since each sequential
     ``train`` call rebuilt its round closure.
+
+    Sweep entries (``Engine.sweep``) additionally report how many config
+    cells each compiled program covered: ``sweep_cells`` vs
+    ``sweep_compiled_programs`` is the config-axis batching ratio the CI
+    gate (``benchmarks/check_sweep_compile.py``) protects — a silent
+    fall-back to per-cell compilation shows up as a program-count
+    regression here.
     """
+    sweep = [e for e in log if e.get("kind", "").startswith("sweep")]
     return {
         "cells": log,
         "compiled_programs_new": sum(1 for e in log if e["fresh_compile"]),
         "sequential_program_equivalent": sum(e["n_trials"] for e in log),
         "wall_s_total": sum(e["wall_s"] for e in log),
+        "sweep_cells": sum(e.get("n_cells", 0) for e in sweep),
+        "sweep_compiled_programs": sum(
+            1 for e in sweep if e["fresh_compile"]
+        ),
+        "sweep_wall_s": sum(e["wall_s"] for e in sweep),
     }
 
 

@@ -1,10 +1,13 @@
 """Fig. 6: (a) selective-vs-nearest energy at N in {150, 200}; (b)
 compression savings in matched low-vs-full upload tests.
 
-Both panels are pure energy accounting -> run at the paper's exact scale,
-through the shared engine's batched audit family: one compiled program per
-(method, config) cell with all seeds vmapped, per-cell wall-clock +
-compile counts recorded under ``"engine"``.
+Both panels are pure energy accounting -> run at the paper's exact scale
+through ``Engine.sweep(family="audit")`` (PR 5): per method the N=200
+default-compressor cell and panel (b)'s matched dense cell share ONE
+compiled program (the audit reads the compressor only through the swept
+payload-bits operand), so the 12 table entries run as 10 sweep cells in
+7 compiled programs — recorded under ``"engine"`` with per-class
+wall-clock.
 Paper targets: selective cuts always-on cooperation energy by 31-33%; the
 tier breakdown shows the gap is almost entirely fog-to-fog; compression
 saves 94.8% (flat), 81.3% (HFL-NoCoop), 71.1% (HFL-Nearest) total energy.
@@ -18,49 +21,77 @@ from repro.core import compression as comp
 from repro.launch import experiment as exp
 
 SEEDS = (0, 1, 2)
+HFL_METHODS = ("hfl-nocoop", "hfl-selective", "hfl-nearest")
+
+COMPRESSED = comp.CompressorConfig(rho_s=0.05, quant_bits=8)  # Table II
+DENSE = comp.CompressorConfig(rho_s=1.0, quant_bits=32)
 
 
-def _audit_stats(eng, meth, cfg, label):
-    audit = eng.audit(meth, cfg, SEEDS, label=label)
+def _stats(sweep, cell: int) -> dict:
+    """mean/std summaries of one sweep cell's (S, P) metric grids."""
     return {
-        k: common.mean_std(jnp.ravel(v).tolist())
-        for k, v in audit.items()
+        k: common.mean_std(jnp.ravel(v[cell]).tolist())
+        for k, v in sweep.metrics.items()
+    }
+
+
+def _tier_row(a: dict) -> dict:
+    return {
+        "e_total": a["e_total"][0],
+        "e_std": a["e_total"][1],
+        "e_s2f": a["e_s2f"][0],
+        "e_f2f": a["e_f2f"][0],
+        "e_f2g": a["e_f2g"][0],
     }
 
 
 def run(scale: common.Scale) -> dict:
     eng = common.get_engine()
     eng.take_log()
+
+    # N=200 grid: per method ONE audit sweep; panel (b)'s methods add the
+    # matched dense cell to the same program (hfl-selective only feeds
+    # panel (a), so it sweeps the compressed cell alone).  Cell 0 feeds
+    # panel (a)'s N=200 row; panel (b) reads both cells.
+    panel_b_methods = ("fedprox", "hfl-nocoop", "hfl-nearest")
+    sweeps200 = {
+        meth: eng.sweep(
+            meth,
+            [
+                exp.make_config(n_sensors=200, n_fog=20, rounds=20,
+                                compressor=COMPRESSED),
+            ] + ([
+                exp.make_config(n_sensors=200, n_fog=20, rounds=20,
+                                compressor=DENSE),
+            ] if meth in panel_b_methods else []),
+            SEEDS, family="audit", label=f"n=200:{meth}:audit-sweep",
+        )
+        for meth in HFL_METHODS + ("fedprox",)
+    }
+
     panel_a = []
     for n in (150, 200):
-        cfg = exp.make_config(n_sensors=n, n_fog=n // 10, rounds=20)
         row = {"n": n}
-        for meth in ("hfl-nocoop", "hfl-selective", "hfl-nearest"):
-            a = _audit_stats(eng, meth, cfg, label=f"n={n}:{meth}:audit")
-            row[meth] = {
-                "e_total": a["e_total"][0],
-                "e_std": a["e_total"][1],
-                "e_s2f": a["e_s2f"][0],
-                "e_f2f": a["e_f2f"][0],
-                "e_f2g": a["e_f2g"][0],
-            }
+        for meth in HFL_METHODS:
+            if n == 200:
+                row[meth] = _tier_row(_stats(sweeps200[meth], 0))
+            else:
+                cfg = exp.make_config(n_sensors=n, n_fog=n // 10, rounds=20)
+                sw = eng.sweep(
+                    meth, [cfg], SEEDS, family="audit",
+                    label=f"n={n}:{meth}:audit",
+                )
+                row[meth] = _tier_row(_stats(sw, 0))
         sel, near = row["hfl-selective"]["e_total"], row["hfl-nearest"]["e_total"]
         row["selective_saving_vs_nearest"] = 1.0 - sel / near
         panel_a.append(row)
 
     # Panel (b): matched compressed (rho_s=0.05+int8) vs full-precision.
     panel_b = []
-    compressed = comp.CompressorConfig(rho_s=0.05, quant_bits=8)
-    dense = comp.CompressorConfig(rho_s=1.0, quant_bits=32)
-    for meth in ("fedprox", "hfl-nocoop", "hfl-nearest"):
-        cfg_c = exp.make_config(
-            n_sensors=200, n_fog=20, rounds=20, compressor=compressed
-        )
-        cfg_d = exp.make_config(
-            n_sensors=200, n_fog=20, rounds=20, compressor=dense
-        )
-        e_c = _audit_stats(eng, meth, cfg_c, f"{meth}:compressed")["e_total"][0]
-        e_d = _audit_stats(eng, meth, cfg_d, f"{meth}:dense")["e_total"][0]
+    for meth in panel_b_methods:
+        sw = sweeps200[meth]
+        e_c = _stats(sw, 0)["e_total"][0]
+        e_d = _stats(sw, 1)["e_total"][0]
         panel_b.append(
             dict(method=meth, compressed_j=e_c, dense_j=e_d,
                  saving=1.0 - e_c / e_d)
@@ -74,7 +105,7 @@ def report(res: dict) -> str:
     lines.append("(a) hierarchical-method energy + tier breakdown")
     for row in res["panel_a"]:
         lines.append(f"  N={row['n']}:")
-        for meth in ("hfl-nocoop", "hfl-selective", "hfl-nearest"):
+        for meth in HFL_METHODS:
             e = row[meth]
             lines.append(
                 f"    {meth:14} total {e['e_total']:7.1f} J "
@@ -95,7 +126,8 @@ def report(res: dict) -> str:
     eng = res.get("engine")
     if eng:
         lines.append(
-            f"engine: {eng['compiled_programs_new']} compiled programs vs "
-            f"{eng['sequential_program_equivalent']} sequential traces"
+            f"engine: {eng['sweep_compiled_programs']} compiled programs for "
+            f"{eng['sweep_cells']} sweep cells "
+            f"(vs {eng['sequential_program_equivalent']} sequential traces)"
         )
     return "\n".join(lines)

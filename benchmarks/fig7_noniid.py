@@ -4,6 +4,11 @@ Training-bound; quick mode runs the budgeted N.  Checks the structural
 claims: all methods remain functional under strong heterogeneity, and
 HFL-Selective stays within the hierarchical family's accuracy band while
 spending less f2f energy than HFL-Nearest.
+
+Per method, BOTH alpha cells run as one ``Engine.sweep`` with the
+per-alpha datasets stacked along the config axis — one compiled program
+and one device launch per method (4 programs for the 8 cells), recorded
+under ``"engine"``.
 """
 from __future__ import annotations
 
@@ -22,23 +27,27 @@ def run(scale: common.Scale) -> dict:
         n_sensors=n, n_fog=max(4, n // 6), rounds=scale.rounds,
         local_epochs=scale.local_epochs,
     )
-    rows = []
-    for alpha in ALPHAS:
-        ds_stack = eng.stack_datasets(
+    ds_by_alpha = [
+        eng.stack_datasets(
             [common.make_dataset(300 + s, n, scale, alpha=alpha)
              for s in scale.seeds]
         )
-        for meth in METHODS:
-            r = eng.run(
-                meth, cfg, scale.seeds, ds_stack,
-                label=f"alpha={alpha}:{meth}",
-            )
-            f1m, f1s_ = r.seed_mean_std("f1")
-            em, _ = r.seed_mean_std("e_total")
+        for alpha in ALPHAS
+    ]
+    rows = []
+    for meth in METHODS:
+        sw = eng.sweep(
+            meth, [cfg] * len(ALPHAS), scale.seeds, ds_by_alpha,
+            label=f"{meth}:alpha-sweep",
+        )
+        for i, alpha in enumerate(ALPHAS):
+            f1m, f1s_ = sw.seed_mean_std("f1", i)
+            em, _ = sw.seed_mean_std("e_total", i)
             rows.append(
                 dict(alpha=alpha, method=meth, f1_mean=f1m, f1_std=f1s_,
                      energy=em)
             )
+    rows.sort(key=lambda r: (r["alpha"], METHODS.index(r["method"])))
     return {"n": n, "rows": rows,
             "engine": common.engine_snapshot(eng.take_log())}
 

@@ -72,7 +72,10 @@ def compress_and_accumulate(
     """
     fog_weight = jax.ops.segment_sum(weights, fog_id, num_segments=n_fog)
 
-    if cfg.enabled and cfg.rho_s < 1.0 and cfg.fused and cfg.mode == "blockwise":
+    # ``is_sparse`` is the STATIC sparsity predicate: rho_s itself may be a
+    # tracer inside a config-axis sweep, where the shape-class guarantees a
+    # uniform branch.
+    if cfg.enabled and cfg.is_sparse and cfg.fused and cfg.mode == "blockwise":
         # The fused kernel path: EF Top-K + int8 + weighted accumulation
         # directly into the (n_fog, d) buffers — the dense per-client
         # reconstruction never materialises.
@@ -154,26 +157,47 @@ def cooperative_mix(fog_models: Any, decision: CoopDecision) -> Any:
 def global_aggregate(
     fog_models: Any,         # pytree, leaves (M, ...)
     fog_weight: jax.Array,   # (M,) — sum of n_i over the cluster
+    prev: Any = None,        # carry-through when the whole round is dead
 ) -> Any:
-    """Surface-gateway aggregation (Eq. 16): data-weighted fog average."""
-    total = jnp.maximum(jnp.sum(fog_weight), 1e-12)
-    w = fog_weight / total
+    """Surface-gateway aggregation (Eq. 16): data-weighted fog average.
+
+    A dead-network round (no active sensor in any cluster) has total weight
+    0; the normalised weights then vanish and the weighted sum would wipe
+    the model to zeros.  Pass ``prev`` (the current global model, leaves
+    matching ``fog_models`` without the leading fog axis) to carry it
+    through instead — the round becomes an explicit no-op.
+    """
+    total = jnp.sum(fog_weight)
+    w = fog_weight / jnp.maximum(total, 1e-12)
 
     def agg(leaf):
         return jnp.tensordot(w, leaf, axes=(0, 0))
 
-    return _tree_map(agg, fog_models)
+    out = _tree_map(agg, fog_models)
+    if prev is None:
+        return out
+    return _tree_map(lambda o, p: jnp.where(total > 0.0, o, p), out, prev)
 
 
-def weighted_mean(updates: Any, weights: jax.Array) -> Any:
-    """Flat weighted average over the leading client axis (FedAvg, Eq. 11)."""
-    total = jnp.maximum(jnp.sum(weights), 1e-12)
-    w = weights / total
+def weighted_mean(updates: Any, weights: jax.Array, prev: Any = None) -> Any:
+    """Flat weighted average over the leading client axis (FedAvg, Eq. 11).
+
+    Same zero-total-weight semantics as :func:`global_aggregate`: with
+    ``prev`` given, an all-zero weight vector returns ``prev`` instead of
+    collapsing to zeros.  (The flat round loops average *deltas*, where the
+    zero default already means "hold the model" — ``prev`` matters when the
+    averaged quantity is the model itself.)
+    """
+    total = jnp.sum(weights)
+    w = weights / jnp.maximum(total, 1e-12)
 
     def agg(leaf):
         return jnp.tensordot(w, leaf, axes=(0, 0))
 
-    return _tree_map(agg, updates)
+    out = _tree_map(agg, updates)
+    if prev is None:
+        return out
+    return _tree_map(lambda o, p: jnp.where(total > 0.0, o, p), out, prev)
 
 
 # ---------------------------------------------------------------------------

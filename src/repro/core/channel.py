@@ -26,7 +26,14 @@ RHO_WATER = 1025.0
 
 @dataclasses.dataclass(frozen=True)
 class ChannelParams:
-    """Static acoustic parameters (paper Table II baseline)."""
+    """Acoustic parameters (paper Table II baseline).
+
+    Registered as a pytree whose every field is a leaf: all eight knobs are
+    used purely arithmetically downstream, so a sweep can stack several
+    parameter sets along a leading config axis and ``vmap`` the physics
+    (see ``Engine.sweep``).  Plain Python floats keep the class hashable
+    for program-cache keys; traced leaves appear only inside sweeps.
+    """
 
     freq_khz: float = 12.0          # carrier frequency f (kHz)
     bandwidth_hz: float = 4000.0    # receiver bandwidth B (Hz)
@@ -39,6 +46,15 @@ class ChannelParams:
 
     def replace(self, **kw: Any) -> "ChannelParams":
         return dataclasses.replace(self, **kw)
+
+
+_CHANNEL_FIELDS = tuple(f.name for f in dataclasses.fields(ChannelParams))
+
+jax.tree_util.register_pytree_node(
+    ChannelParams,
+    lambda c: (tuple(getattr(c, f) for f in _CHANNEL_FIELDS), None),
+    lambda _, ch_: ChannelParams(**dict(zip(_CHANNEL_FIELDS, ch_))),
+)
 
 
 def thorp_absorption_db_per_km(f_khz: jax.Array | float) -> jax.Array:

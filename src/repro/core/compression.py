@@ -26,9 +26,27 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
 
+def _concrete(x: Any) -> bool:
+    """True when ``x`` is a plain Python number (not a jax value/tracer)."""
+    return isinstance(x, (int, float))
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressorConfig:
-    rho_s: float = 0.05          # sparsification ratio (1.0 = dense)
+    """Compression knobs.  ``rho_s`` is a pytree LEAF so sweeps can stack
+    several ratios along a config axis and trace them through the pipeline
+    (the blockwise kernels select by threshold-bisection against a count,
+    so a traced keep-count is supported on the jnp-oracle path); everything
+    else — bit-width, mode, backend flags — is static aux data that defines
+    the sweep shape-class.
+
+    ``sparse`` is the static sparsity predicate (``rho_s < 1``).  It is
+    derived automatically from a concrete ``rho_s`` and carried through
+    flatten/unflatten, so code can branch Python-side on ``is_sparse`` /
+    ``enabled`` even while ``rho_s`` itself is a tracer.
+    """
+
+    rho_s: float | Any = 0.05    # sparsification ratio (1.0 = dense)
     quant_bits: int = 8          # post-sparsification bit-width (32 = none)
     mode: str = "global"         # "global" | "blockwise"
     use_pallas: bool = False     # blockwise only: route through the kernel
@@ -36,31 +54,67 @@ class CompressorConfig:
     fused: bool = True           # fuse compression into fog aggregation
     # (core/aggregation.compress_and_aggregate); False = legacy per-client
     # compress_update + dense segment-sum, kept as the equivalence baseline.
+    sparse: bool | None = None   # static rho_s < 1 predicate (None = derive)
 
     def replace(self, **kw: Any) -> "CompressorConfig":
+        # A pytree round-trip pins ``sparse`` to a concrete bool; changing
+        # rho_s afterwards must re-derive it or the static predicate goes
+        # stale (pass ``sparse`` explicitly to keep a pinned value).
+        if "rho_s" in kw and "sparse" not in kw:
+            kw["sparse"] = None
         return dataclasses.replace(self, **kw)
 
     @property
+    def is_sparse(self) -> bool:
+        if self.sparse is not None:
+            return self.sparse
+        return bool(self.rho_s < 1.0)
+
+    @property
     def enabled(self) -> bool:
-        return self.rho_s < 1.0 or self.quant_bits < 32
+        return self.is_sparse or self.quant_bits < 32
 
 
-def payload_bits(d: int, cfg: CompressorConfig) -> float:
+def _cc_flatten(c: CompressorConfig):
+    aux = (c.quant_bits, c.mode, c.use_pallas, c.interpret, c.fused,
+           c.is_sparse)
+    return (c.rho_s,), aux
+
+
+def _cc_unflatten(aux, children) -> CompressorConfig:
+    quant_bits, mode, use_pallas, interpret, fused, sparse = aux
+    return CompressorConfig(
+        rho_s=children[0], quant_bits=quant_bits, mode=mode,
+        use_pallas=use_pallas, interpret=interpret, fused=fused,
+        sparse=sparse,
+    )
+
+
+jax.tree_util.register_pytree_node(CompressorConfig, _cc_flatten, _cc_unflatten)
+
+
+def payload_bits(d: int, cfg: CompressorConfig) -> float | jax.Array:
     """Uplink payload size in bits (paper Eq. 31 / Sec. IV-B).
 
-    ``d`` must be a static (python int) parameter count.
+    ``d`` must be a static (python int) parameter count.  With a concrete
+    ``rho_s`` the result is a Python float (exact back-compat); a traced
+    ``rho_s`` (config-axis sweeps) yields the identical value as a jnp
+    scalar — the branch structure is static either way (``is_sparse``).
     """
     if not cfg.enabled:
         return 32.0 * d
     bits = float(cfg.quant_bits)
-    if cfg.rho_s >= 1.0:
+    if not cfg.is_sparse:
         return bits * d  # quantise-only: no index overhead
     b_idx = math.ceil(math.log2(max(d, 2)))
-    k = max(1.0, round(cfg.rho_s * d))
+    if _concrete(cfg.rho_s):
+        k = max(1.0, round(cfg.rho_s * d))
+    else:
+        k = jnp.maximum(1.0, jnp.round(jnp.asarray(cfg.rho_s, jnp.float32) * d))
     return k * (bits + b_idx)
 
 
-def blockwise_k_frac(d: int, rho_s: float) -> float:
+def blockwise_k_frac(d: int, rho_s: float | jax.Array) -> float | jax.Array:
     """Per-tile keep fraction for blockwise mode on a length-``d`` vector.
 
     rho_s is a fraction of the REAL coordinates.  The kernels pad the flat
@@ -69,15 +123,24 @@ def blockwise_k_frac(d: int, rho_s: float) -> float:
     contribute at most its real coordinates (padding zeros never pass the
     magnitude threshold), so when the uniform k exceeds the tail, the full
     tiles must absorb the difference.
+
+    A traced ``rho_s`` (config-axis sweeps) returns the same value as a
+    jnp scalar — tile counts stay static, only the keep target traces.
     """
     block = kops.BLOCK_ELEMS
     nb = max(1, -(-d // block))
     tail = d - (nb - 1) * block      # real coords in the last tile
-    target = max(1, round(rho_s * d))
+    if _concrete(rho_s):
+        target = max(1, round(rho_s * d))
+        k = target / nb
+        if nb > 1 and k > tail:
+            k = (target - tail) / (nb - 1)
+        return min(1.0, k / block)
+    target = jnp.maximum(1.0, jnp.round(jnp.asarray(rho_s, jnp.float32) * d))
     k = target / nb
-    if nb > 1 and k > tail:
-        k = (target - tail) / (nb - 1)
-    return min(1.0, k / block)
+    if nb > 1:
+        k = jnp.where(k > tail, (target - tail) / (nb - 1), k)
+    return jnp.minimum(1.0, k / block)
 
 
 def validate_blockwise_bits(quant_bits: int) -> None:
@@ -97,11 +160,22 @@ def init_error(params: Any) -> jax.Array:
 
 
 def _global_topk_ef(
-    v: jax.Array, k: int
+    v: jax.Array, k: int | jax.Array
 ) -> tuple[jax.Array, jax.Array]:
-    """Exact global Top-K with EF decomposition on a flat vector."""
+    """Exact global Top-K with EF decomposition on a flat vector.
+
+    ``k`` may be traced (config-axis sweeps): the k-th largest magnitude is
+    then read out of a full ascending sort at a dynamic index — identical
+    threshold, shape-independent of ``k``.
+    """
     absv = jnp.abs(v)
-    kth = jax.lax.top_k(absv, k)[0][-1]
+    d = absv.shape[0]
+    if _concrete(k) or isinstance(k, int):
+        kth = jax.lax.top_k(absv, int(k))[0][-1]
+    else:
+        srt = jnp.sort(absv)                       # ascending
+        idx = jnp.clip(d - k.astype(jnp.int32), 0, d - 1)
+        kth = jnp.take(srt, idx)                   # == k-th largest
     mask = absv >= kth
     # Tie-break: keep at most k (top_k threshold may admit ties); paper's
     # payload accounting assumes exactly K coords, ties are measure-zero in
@@ -137,9 +211,14 @@ def compress_update(
 
     if cfg.mode == "global":
         d = flat.shape[0]
-        k = max(1, int(round(cfg.rho_s * d)))
+        if _concrete(cfg.rho_s):
+            k = max(1, int(round(cfg.rho_s * d)))
+        else:
+            k = jnp.maximum(
+                1.0, jnp.round(jnp.asarray(cfg.rho_s, jnp.float32) * d)
+            )
         v = flat + err
-        if cfg.rho_s < 1.0:
+        if cfg.is_sparse:
             sparse, _ = _global_topk_ef(v, k)
         else:
             sparse = v

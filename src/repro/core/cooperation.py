@@ -60,14 +60,26 @@ def no_cooperation(fog_pos: jax.Array) -> CoopDecision:
 
 
 def nearest_cooperation(
-    fog_pos: jax.Array, cparams: ch.ChannelParams
+    fog_pos: jax.Array,
+    cluster_size: jax.Array,
+    cparams: ch.ChannelParams,
 ) -> CoopDecision:
-    """HFL-Nearest: always-on cooperation with the nearest *feasible* fog."""
+    """HFL-Nearest: always-on cooperation with the nearest feasible fog
+    *that serves a nonempty cluster*.
+
+    An empty fog holds no local aggregate — its "model" is just the stale
+    broadcast globals — so pairing with it would let Eq. 15 blend stale
+    params into a real fog's update while the Eq. 18/21 energy and latency
+    masks (``cooperates & fog_active``) count no exchange.  Gating partner
+    eligibility on ``cluster_size > 0`` (and requiring the cooperating fog
+    itself to be nonempty) keeps mixing, energy, and latency consistent.
+    """
     d = _fog_distance_matrix(fog_pos)
-    feas = ch.feasible(d, cparams)
+    nonempty = cluster_size > 0
+    feas = ch.feasible(d, cparams) & nonempty[None, :]
     masked = jnp.where(feas, d, jnp.inf)
     partner = jnp.argmin(masked, axis=-1).astype(jnp.int32)
-    has_any = jnp.any(feas, axis=-1)
+    has_any = jnp.any(feas, axis=-1) & nonempty
     pdist = jnp.take_along_axis(d, partner[:, None], axis=-1)[:, 0]
     w_self, w_peer = NEAREST_WEIGHTS
     m = fog_pos.shape[0]
@@ -85,13 +97,16 @@ def selective_cooperation(
     fog_pos: jax.Array,
     cluster_size: jax.Array,
     cparams: ch.ChannelParams,
+    eligibility_factor: float | jax.Array = 0.75,
 ) -> CoopDecision:
     """HFL-Selective (paper Eqs. 28-29).
 
     A fog m cooperates iff
-      1. its cluster is small:  c_m <= max(2, 0.75 * mean nonempty c)   (28)
-      2. a feasible neighbour exists with *larger* cluster whose distance
-         is below the first quartile of feasible fog-fog distances,
+      1. its cluster is small:  c_m <= max(2, f * mean nonempty c)       (28)
+         (``eligibility_factor`` f = 0.75 in the paper; swept in the
+         ablations),
+      2. a feasible neighbour exists with *larger, nonempty* cluster whose
+         distance is below the first quartile of feasible fog-fog distances,
     in which case it mixes 0.8/0.2 with the *nearest* such neighbour (29).
     """
     m = fog_pos.shape[0]
@@ -102,15 +117,26 @@ def selective_cooperation(
     c = cluster_size.astype(jnp.float32)
     nonempty = c > 0
     mean_c = jnp.sum(c * nonempty) / jnp.maximum(jnp.sum(nonempty), 1.0)
-    eligible = c <= jnp.maximum(2.0, 0.75 * mean_c)                      # (28)
+    eligible = c <= jnp.maximum(2.0, eligibility_factor * mean_c)        # (28)
 
     # First quartile of feasible fog-fog distances (upper triangle of the
     # symmetric matrix; use all feasible off-diagonal entries — each pair
-    # counted twice, which leaves the quantile unchanged).
+    # counted twice, which leaves the quantile unchanged).  With ZERO
+    # feasible pairs the matrix would be all-NaN and nanquantile would
+    # yield NaN plus a RuntimeWarning (noisy under vmap); feed zeros
+    # instead — the q1 value is irrelevant then because ``feas`` already
+    # kills every candidate, so the rule degrades to no-coop explicitly.
+    any_feasible = jnp.any(feas)
     feas_d = jnp.where(feas, d, jnp.nan)
-    q1 = jnp.nanquantile(feas_d, 0.25)
+    q1 = jnp.nanquantile(
+        jnp.where(any_feasible, feas_d, 0.0), 0.25
+    )
 
-    larger = c[None, :] > c[:, None]
+    # Partner must hold a strictly larger — hence nonempty — cluster; the
+    # explicit nonempty mask keeps that invariant even if the size rule
+    # changes (cf. nearest_cooperation: never mix in an empty fog's stale
+    # params).
+    larger = (c[None, :] > c[:, None]) & nonempty[None, :]
     candidate = feas & larger & (d < q1)
     masked = jnp.where(candidate, d, jnp.inf)
     partner = jnp.argmin(masked, axis=-1).astype(jnp.int32)
@@ -138,7 +164,7 @@ def decide(
     if rule is CoopRule.NOCOOP:
         return no_cooperation(fog_pos)
     if rule is CoopRule.NEAREST:
-        return nearest_cooperation(fog_pos, cparams)
+        return nearest_cooperation(fog_pos, cluster_size, cparams)
     if rule is CoopRule.SELECTIVE:
         return selective_cooperation(fog_pos, cluster_size, cparams)
     raise ValueError(f"unknown cooperation rule: {rule}")

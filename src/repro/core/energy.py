@@ -17,7 +17,12 @@ from repro.core import channel as ch
 
 @dataclasses.dataclass(frozen=True)
 class EnergyParams:
-    """Static energy parameters (paper Table II baseline)."""
+    """Energy parameters (paper Table II baseline).
+
+    A pytree with every field a leaf (all knobs are pure arithmetic
+    downstream), so energy-model sweeps batch along a config axis exactly
+    like :class:`repro.core.channel.ChannelParams`.
+    """
 
     eta_ea: float = 0.25          # electro-acoustic efficiency
     p_circuit_tx_w: float = 0.05  # transmit circuit power (W)
@@ -28,6 +33,15 @@ class EnergyParams:
 
     def replace(self, **kw: Any) -> "EnergyParams":
         return dataclasses.replace(self, **kw)
+
+
+_ENERGY_FIELDS = tuple(f.name for f in dataclasses.fields(EnergyParams))
+
+jax.tree_util.register_pytree_node(
+    EnergyParams,
+    lambda c: (tuple(getattr(c, f) for f in _ENERGY_FIELDS), None),
+    lambda _, ch_: EnergyParams(**dict(zip(_ENERGY_FIELDS, ch_))),
+)
 
 
 def acoustic_power_w(sl_min_db: jax.Array) -> jax.Array:

@@ -54,18 +54,30 @@ LossFn = Callable[[Params, jax.Array], jax.Array]
 
 @dataclasses.dataclass(frozen=True)
 class HFLConfig:
+    """Round-loop configuration — a pytree split into swept vs static.
+
+    LEAVES (traceable, stackable along a config axis — see
+    ``Engine.sweep``): ``lr``, ``prox_mu``, ``server_lr``,
+    ``compute_rate_flops`` and the nested ``compressor`` (its ``rho_s``),
+    ``channel``, ``energy`` pytrees.  Everything shape- or
+    structure-bearing — rule enum, round/epoch/batch counts, solver and
+    backend flags, deployment geometry — is static aux data: configs that
+    differ there belong to different sweep shape-classes and are never
+    co-batched.
+    """
+
     rule: coop.CoopRule = coop.CoopRule.SELECTIVE
     rounds: int = 20
     local_epochs: int = 5            # E
     batch_size: int = 32
-    lr: float = 0.01                 # eta
-    prox_mu: float = 0.0             # >0 => FedProx local solver
+    lr: float | Any = 0.01           # eta
+    prox_mu: float | Any = 0.0       # >0 => FedProx local solver
     server_opt: str = "sgd"          # "sgd" (FedAvg identity) | "adam" (FedAdam [34])
-    server_lr: float = 1e-2
+    server_lr: float | Any = 1e-2
     local_solver: LocalTrainConfig = LocalTrainConfig()
     compressor: comp.CompressorConfig = comp.CompressorConfig()
     fog_mobility: bool = True
-    compute_rate_flops: float = 1e8  # embedded-DSP local compute rate
+    compute_rate_flops: float | Any = 1e8  # embedded-DSP local compute rate
     # Fog exchange payloads are full precision in the paper (Sec. VI-A).
     channel: ch.ChannelParams = ch.ChannelParams()
     energy: en.EnergyParams = en.EnergyParams()
@@ -73,6 +85,34 @@ class HFLConfig:
 
     def replace(self, **kw: Any) -> "HFLConfig":
         return dataclasses.replace(self, **kw)
+
+
+_HFL_LEAF_FIELDS = (
+    "lr", "prox_mu", "server_lr", "compute_rate_flops",
+    "compressor", "channel", "energy",
+)
+_HFL_AUX_FIELDS = (
+    "rule", "rounds", "local_epochs", "batch_size", "server_opt",
+    "local_solver", "fog_mobility", "deployment",
+)
+
+
+def _hfl_cfg_flatten(c: HFLConfig):
+    return (
+        tuple(getattr(c, f) for f in _HFL_LEAF_FIELDS),
+        tuple(getattr(c, f) for f in _HFL_AUX_FIELDS),
+    )
+
+
+def _hfl_cfg_unflatten(aux, children) -> HFLConfig:
+    kw = dict(zip(_HFL_LEAF_FIELDS, children))
+    kw.update(zip(_HFL_AUX_FIELDS, aux))
+    return HFLConfig(**kw)
+
+
+jax.tree_util.register_pytree_node(
+    HFLConfig, _hfl_cfg_flatten, _hfl_cfg_unflatten
+)
 
 
 class RoundMetrics(NamedTuple):
@@ -221,10 +261,16 @@ def make_round_fn(
 
         # --- 1. association + cooperation decisions (lines 1-7) ----------
         fa = assoc.nearest_feasible_fog(dep, cfg.channel)
-        decision = coop.decide(cfg.rule, dep.fog_pos, fa.cluster_size, cfg.channel)
-
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
+        # Cooperation sees ROUND-ACTIVE cluster sizes (battery included):
+        # a cluster whose sensors are all dead this round holds no
+        # aggregate to exchange, exactly like an empty one — so the
+        # decision, the Eq. 15 mixing, and the Eq. 18/21 masks agree.
+        c_active = jax.ops.segment_sum(
+            active.astype(jnp.int32), fa.fog_id, num_segments=n_fog
+        )
+        decision = coop.decide(cfg.rule, dep.fog_pos, c_active, cfg.channel)
 
         # --- 2+3. local training, fused compression + fog aggregation
         # (lines 8-18, Eqs. 30 + 13 as one operator) -----------------------
@@ -262,7 +308,9 @@ def make_round_fn(
         mixed = agg.cooperative_mix(fog_model, decision)  # Eq. 15
 
         # --- 4. global aggregation (Eq. 16, lines 19-21) -------------------
-        new_flat = agg.global_aggregate(mixed, fog_weight)
+        # prev=flat0: a dead-network round (every cluster weightless) holds
+        # the global model instead of collapsing it to zeros.
+        new_flat = agg.global_aggregate(mixed, fog_weight, prev=flat0)
         if cfg.server_opt == "adam":
             # FedAdam [34]: the aggregated movement is a pseudo-gradient.
             incr, server = srv.adam_update(

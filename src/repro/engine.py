@@ -135,12 +135,52 @@ class EngineRun:
         return float(jnp.mean(v)), float(jnp.std(v))
 
 
+@dataclasses.dataclass(frozen=True)
+class SweepRun:
+    """Result of one config-axis sweep.  Metric leaves have leading
+    (C, S, P) — config cell x seed x deployment."""
+
+    method: str
+    cfgs: tuple[hfl.HFLConfig, ...]   # resolved configs, input order
+    seeds: tuple[int, ...]
+    n_deployments: int
+    metrics: dict[str, jax.Array]
+    classes: tuple[dict, ...]         # per-shape-class execution info
+    wall_s: float
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.metrics[name]
+
+    @property
+    def compiled_programs(self) -> int:
+        """Programs compiled fresh for THIS sweep (cache hits excluded)."""
+        return sum(1 for c in self.classes if c["fresh_compile"])
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.classes)
+
+    def cell(self, i: int) -> dict[str, jax.Array]:
+        """Metrics of config cell ``i`` with the (S, P) trial axes kept."""
+        return {k: v[i] for k, v in self.metrics.items()}
+
+    def seed_mean_std(self, name: str, i: int) -> tuple[float, float]:
+        v = jnp.asarray(self.metrics[name][i], jnp.float32)
+        return float(jnp.mean(v)), float(jnp.std(v))
+
+
 class Engine:
     """Unified batched front-end for the three round-loop families.
 
     * ``run``   — the trainable families: flat FL (``core/flat_fl``:
       fedavg/fedprox/fedadam/scaffold/centralised) and hierarchical FL
       (``core/hfl``: the hfl-* cooperation rules);
+    * ``sweep`` — ``run``/``audit`` over a whole CONFIG GRID: cells are
+      grouped into shape-classes (identical static structure — enums,
+      shapes, backend flags), each class's swept knobs (channel/energy
+      physics, ``rho_s``, ``lr``, ...) are stacked along a new leading
+      config axis, and one compiled program evaluates the whole class as
+      a ``(C, S, P)`` grid;
     * ``audit`` — the training-free energy/participation replay of either
       family at paper scale;
     * ``pod_train_step`` — the TPU-mesh family (``core/mesh_fl``), returned
@@ -427,6 +467,250 @@ class Engine:
                   n_trials=s_n * p_n, wall_s=wall, fresh_compile=fresh,
                   compressor=_describe_compressor(cfg.compressor))
         return out
+
+    # ------------------------------------------------------------------
+    # config-axis sweeps
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def stack_configs(cfgs: Sequence[hfl.HFLConfig]) -> hfl.HFLConfig:
+        """Stack same-shape-class configs: every swept leaf becomes a
+        (C,) f32 array, static aux fields come from the first config."""
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]),
+            *cfgs,
+        )
+
+    @staticmethod
+    def _audit_normal(cfg: hfl.HFLConfig) -> hfl.HFLConfig:
+        """Blank out the static fields the audit family never reads.
+
+        The audit touches the compressor only through the uplink payload
+        size — which the sweep feeds as a swept operand — so cells that
+        differ only in compressor/solver/server statics collapse into one
+        shape-class.
+        """
+        return cfg.replace(
+            local_epochs=1,
+            batch_size=32,
+            server_opt="sgd",
+            local_solver=LocalTrainConfig(),
+            compressor=comp.CompressorConfig(),
+        )
+
+    @staticmethod
+    def _kernel_static_knobs(cfg: hfl.HFLConfig) -> tuple:
+        """Knobs the Pallas kernels bake into their bodies.
+
+        On the jnp-oracle backend these trace (bisection selection, scalar
+        arithmetic) and the sweep batches across their values; a
+        pallas-backed config must keep them concrete, so they join the
+        shape-class signature and are re-pinned inside the program.
+        """
+        knobs = {}
+        cc = cfg.compressor
+        if cc.enabled and cc.is_sparse and cc.mode == "blockwise" and cc.use_pallas:
+            knobs["rho_s"] = float(cc.rho_s)
+        if cfg.local_solver.fused and cfg.local_solver.use_pallas:
+            knobs["lr"] = float(cfg.lr)
+            knobs["prox_mu"] = float(cfg.prox_mu)
+        return tuple(sorted(knobs.items()))
+
+    def _sweep_classes(
+        self, cfgs: Sequence[hfl.HFLConfig], family: str,
+        ds_shapes: Sequence[tuple] | None,
+    ) -> tuple[list[hfl.HFLConfig], dict]:
+        """Group sweep cells into shape-classes.
+
+        The signature is the config's pytree STRUCTURE (every static aux
+        field — rule enum, round/epoch counts, compressor mode/bits/flags,
+        deployment geometry — lives in the treedef; swept leaves do not),
+        plus any kernel-bound knobs and, for per-cell datasets, the data
+        shapes.  Mixed enums/static shapes therefore never co-batch.
+        """
+        norm, groups = [], {}
+        for i, rcfg in enumerate(cfgs):
+            ncfg = self._audit_normal(rcfg) if family == "audit" else rcfg
+            norm.append(ncfg)
+            sig = (
+                jax.tree_util.tree_structure(ncfg),
+                self._kernel_static_knobs(rcfg) if family == "run" else (),
+                ds_shapes[i] if ds_shapes is not None else None,
+            )
+            groups.setdefault(sig, []).append(i)
+        return norm, groups
+
+    def sweep(
+        self,
+        method: str,
+        cfgs: Sequence[hfl.HFLConfig],
+        seeds: Sequence[int],
+        ds: Any = None,
+        *,
+        n_deployments: int = 1,
+        family: str = "run",
+        d: int = 1352,
+        label: str | None = None,
+    ) -> SweepRun:
+        """Evaluate a whole config grid: ONE compiled program per
+        shape-class, each running its cells as a leading config axis on
+        top of the (seed, deployment) trial grid.
+
+        ``cfgs``: the hyperparameter cells.  Cells may differ in any
+        traceable knob (``ChannelParams`` / ``EnergyParams`` physics,
+        ``CompressorConfig.rho_s``, ``lr`` / ``prox_mu`` / ``server_lr`` /
+        ``compute_rate_flops``) and still share a program; cells that
+        differ in static structure — cooperation rule, round/epoch/batch
+        counts, compressor mode/bit-width/backend, deployment geometry —
+        split into separate shape-classes (and separate programs).
+
+        ``family="run"`` trains and evaluates (``ds`` required: one
+        dataset/callable shared by every cell, or a length-C sequence of
+        per-cell datasets, each in any form ``Engine.run`` accepts);
+        ``family="audit"`` replays the training-free energy accounting
+        (``d`` = model size; ``ds`` ignored).
+
+        Returns a :class:`SweepRun` with metric leaves shaped (C, S, P);
+        cell ``i`` matches ``Engine.run(cfgs[i], ...)`` /
+        ``Engine.audit`` to float tolerance.
+        """
+        if family not in ("run", "audit"):
+            raise ValueError(f"family must be run|audit, got {family!r}")
+        if not cfgs:
+            raise ValueError("need at least one config cell")
+        seeds = tuple(int(s) for s in seeds)
+        s_n, p_n = len(seeds), n_deployments
+        keys = self._trial_keys(seeds, p_n)           # (S, P)
+        rcfgs = tuple(self.resolve_config(c) for c in cfgs)
+
+        stacked_ds, ds_shapes = None, None
+        if family == "run":
+            if ds is None:
+                raise ValueError("family='run' sweeps need a dataset")
+            shape_of = lambda one: tuple(  # noqa: E731
+                (x.shape, str(x.dtype))
+                for x in jax.tree_util.tree_leaves(one)
+            )
+            if isinstance(ds, (list, tuple)):
+                if len(ds) != len(rcfgs):
+                    raise ValueError(
+                        f"got {len(ds)} datasets for {len(rcfgs)} configs"
+                    )
+                stacked_ds = [self._as_stacked(one, seeds) for one in ds]
+                ds_shapes = [shape_of(one) for one in stacked_ds]
+            else:
+                shared = self._as_stacked(ds, seeds)
+                stacked_ds = [shared] * len(rcfgs)
+                ds_shapes = [shape_of(shared)] * len(rcfgs)
+
+        norm, groups = self._sweep_classes(rcfgs, family, ds_shapes)
+
+        per_cfg: list[Any] = [None] * len(rcfgs)
+        classes, wall_total = [], 0.0
+        for sig, idxs in groups.items():
+            stacked_cfg = self.stack_configs([norm[i] for i in idxs])
+            rep = rcfgs[idxs[0]]
+            knobs = dict(self._kernel_static_knobs(rep))
+            cache_key = ("sweep", family, method, sig, len(idxs), s_n, p_n,
+                         d, self.hidden, self.percentile, self.point_adjusted)
+
+            if family == "run":
+                shared_cell_ds = all(
+                    stacked_ds[i] is stacked_ds[idxs[0]] for i in idxs
+                )
+                if shared_cell_ds:
+                    ds_arg, ds_axis = stacked_ds[idxs[0]], None
+                else:
+                    ds_arg = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs),
+                        *[stacked_ds[i] for i in idxs],
+                    )
+                    ds_axis = 0
+                cache_key += (ds_axis,)
+
+                def build(knobs=knobs, ds_axis=ds_axis):
+                    def trial(cfg_, key, one_ds):
+                        if knobs:
+                            # kernel-bound knobs stay concrete per class
+                            cfg_ = cfg_.replace(
+                                lr=knobs.get("lr", cfg_.lr),
+                                prox_mu=knobs.get("prox_mu", cfg_.prox_mu),
+                            )
+                            if "rho_s" in knobs:
+                                cfg_ = cfg_.replace(
+                                    compressor=cfg_.compressor.replace(
+                                        rho_s=knobs["rho_s"]
+                                    )
+                                )
+                        return exp.trial_metrics(
+                            method, key, one_ds, cfg_,
+                            percentile=self.percentile,
+                            point_adjusted=self.point_adjusted,
+                            hidden=self.hidden,
+                        )
+
+                    dep_v = jax.vmap(trial, in_axes=(None, 0, None))
+                    seed_v = jax.vmap(dep_v, in_axes=(None, 0, 0))
+                    return jax.vmap(seed_v, in_axes=(0, None, ds_axis))
+
+                fn, fresh = self._get_program(cache_key, build)
+                # Same launch/sharding placement rules as Engine.run:
+                # per-cell datasets shard over the config axis, shared
+                # ones over the seed axis (no-op on one device).
+                placed_keys = self._place(keys, s_n)
+                placed_ds = self._place(
+                    ds_arg, len(idxs) if ds_axis == 0 else s_n
+                )
+                out, wall = self._timed_call(
+                    fn, stacked_cfg, placed_keys, placed_ds
+                )
+            else:
+                l_u = jnp.asarray(
+                    [float(comp.payload_bits(d, rcfgs[i].compressor))
+                     for i in idxs],
+                    jnp.float32,
+                )
+
+                def build():
+                    def trial(cfg_, lu, key):
+                        return exp.audit_trial(method, key, cfg_, d, l_u=lu)
+
+                    dep_v = jax.vmap(trial, in_axes=(None, None, 0))
+                    seed_v = jax.vmap(dep_v, in_axes=(None, None, 0))
+                    return jax.vmap(seed_v, in_axes=(0, 0, None))
+
+                fn, fresh = self._get_program(cache_key, build)
+                out, wall = self._timed_call(
+                    fn, stacked_cfg, l_u, self._place(keys, s_n)
+                )
+
+            for pos, i in enumerate(idxs):
+                per_cfg[i] = jax.tree_util.tree_map(lambda a: a[pos], out)
+            info = dict(
+                indices=tuple(idxs), n_cells=len(idxs), wall_s=wall,
+                fresh_compile=fresh,
+                compressor=_describe_compressor(rep.compressor),
+            )
+            classes.append(info)
+            wall_total += wall
+            self._log(kind=f"sweep-{family}", method=method,
+                      label=label or f"sweep:{method}", n_cells=len(idxs),
+                      n_trials=len(idxs) * s_n * p_n, wall_s=wall,
+                      fresh_compile=fresh, compressor=info["compressor"])
+
+        # Stack per metric into (C, S, P, ...) where shapes agree across
+        # classes; a metric whose trailing shape differs between classes
+        # (e.g. per-round losses under different round counts) stays a
+        # C-tuple — cell indexing works identically either way.
+        metrics = {}
+        for name in per_cfg[0]:
+            vals = [m[name] for m in per_cfg]
+            if len({v.shape for v in vals}) == 1:
+                metrics[name] = jnp.stack(vals)
+            else:
+                metrics[name] = tuple(vals)
+        return SweepRun(method, rcfgs, seeds, p_n, metrics,
+                        tuple(classes), wall_total)
 
     def reachability(
         self,

@@ -6,6 +6,14 @@ un-padded back.  ``use_pallas=False`` routes to the pure-jnp oracle (the
 default on the CPU dry-run path, so lowered HLO stays clean for roofline
 analysis); ``use_pallas=True`` with ``interpret=True`` exercises the kernel
 body on CPU, and on a real TPU ``interpret=False`` compiles it.
+
+Scalar knobs (``k_frac``, ``lr``, ``prox_mu``) are TRACEABLE on the oracle
+path: the blockwise selection is threshold-by-bisection against a keep
+*count* and SGD uses the rates purely arithmetically, so config-axis
+sweeps (``Engine.sweep``) can batch different knob values in one compiled
+program.  The Pallas kernels bake those scalars into the kernel body, so
+the pallas branch still requires concrete Python numbers — the sweep
+driver keeps kernel-bound knobs static per shape-class on TPU.
 """
 from __future__ import annotations
 
@@ -46,27 +54,66 @@ def _unpad(x: jax.Array, n: int) -> jax.Array:
     return x.reshape(-1)[:n]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k_frac", "use_pallas", "interpret")
-)
+def _static_scalar(x, name: str) -> float:
+    """Concretise a kernel-bound scalar for the Pallas branch.
+
+    The Pallas kernels bake these into the kernel body, so a traced value
+    (a config-axis sweep) cannot reach them — the sweep driver must demote
+    the knob to a per-shape-class constant first (it does, on TPU).
+    """
+    try:
+        return float(x)
+    except (jax.errors.ConcretizationTypeError, TypeError) as e:
+        raise ValueError(
+            f"{name} must be a concrete Python number on the Pallas kernel "
+            f"path (it is baked into the kernel body); traced values are "
+            f"only supported with use_pallas=False"
+        ) from e
+
+
+def _block_k(k_frac) -> jax.Array | int:
+    """Per-block keep count from a keep fraction; traced fractions give a
+    traced count (used only in bisection comparisons on the oracle path)."""
+    if isinstance(k_frac, (int, float)):
+        return max(1, int(round(k_frac * BLOCK_ELEMS)))
+    return jnp.maximum(
+        1.0, jnp.round(jnp.asarray(k_frac, jnp.float32) * BLOCK_ELEMS)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def _topk_ef_pallas(delta, err, k: int, interpret: bool):
+    blocks, n = _pad_blocks(delta)
+    err_blocks, _ = _pad_blocks(err)
+    sparse, new_err = _tk.topk_ef_blocks(blocks, err_blocks, k, interpret)
+    return _unpad(sparse, n), _unpad(new_err, n)
+
+
+@jax.jit
+def _topk_ef_ref(delta, err, k):
+    blocks, n = _pad_blocks(delta)
+    err_blocks, _ = _pad_blocks(err)
+    flat = blocks.reshape(blocks.shape[0], -1)
+    eflat = err_blocks.reshape(blocks.shape[0], -1)
+    sparse, new_err = _ref.blockwise_topk_ef_ref(flat, eflat, k)
+    return _unpad(sparse, n), _unpad(new_err, n)
+
+
 def topk_ef(
     delta: jax.Array,
     err: jax.Array,
-    k_frac: float,
+    k_frac: float | jax.Array,
     use_pallas: bool = False,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
-    """Blockwise EF Top-K on a flat vector.  Keeps ~k_frac of each block."""
-    blocks, n = _pad_blocks(delta)
-    err_blocks, _ = _pad_blocks(err)
-    k = max(1, int(round(k_frac * BLOCK_ELEMS)))
+    """Blockwise EF Top-K on a flat vector.  Keeps ~k_frac of each block.
+
+    ``k_frac`` may be traced on the oracle path (``use_pallas=False``).
+    """
     if use_pallas:
-        sparse, new_err = _tk.topk_ef_blocks(blocks, err_blocks, k, interpret)
-    else:
-        flat = blocks.reshape(blocks.shape[0], -1)
-        eflat = err_blocks.reshape(blocks.shape[0], -1)
-        sparse, new_err = _ref.blockwise_topk_ef_ref(flat, eflat, k)
-    return _unpad(sparse, n), _unpad(new_err, n)
+        k = max(1, int(round(_static_scalar(k_frac, "k_frac") * BLOCK_ELEMS)))
+        return _topk_ef_pallas(delta, err, k, interpret)
+    return _topk_ef_ref(delta, err, _block_k(k_frac))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -90,13 +137,41 @@ def dequant8(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
     return _ref.dequant8_ref(q, scale).reshape(-1)[:n]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k_frac", "use_pallas", "interpret")
-)
+def _compress_payload(qf, scale, new_err, n):
+    recon = _ref.dequant8_ref(qf, scale)
+    nnz = jnp.sum(qf != 0)
+    d = jnp.maximum(n, 2)
+    b_idx = jnp.ceil(jnp.log2(d.astype(jnp.float32)))
+    payload_bits = nnz.astype(jnp.float32) * (8.0 + b_idx)
+    return _unpad(recon, n), _unpad(new_err, n), payload_bits
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def _compress_pallas(delta, err, k: int, interpret: bool):
+    blocks, n = _pad_blocks(delta)
+    err_blocks, _ = _pad_blocks(err)
+    q, scale, new_err = _q8.compress_blocks(blocks, err_blocks, k, interpret)
+    qf = q.reshape(q.shape[0], -1)
+    scale = scale.reshape(-1, 1)
+    return _compress_payload(qf, scale, new_err, n)
+
+
+@jax.jit
+def _compress_ref(delta, err, k):
+    blocks, n = _pad_blocks(delta)
+    err_blocks, _ = _pad_blocks(err)
+    qf, scale, new_err = _ref.compress_ref(
+        blocks.reshape(blocks.shape[0], -1),
+        err_blocks.reshape(blocks.shape[0], -1),
+        k,
+    )
+    return _compress_payload(qf, scale, new_err, n)
+
+
 def compress(
     delta: jax.Array,
     err: jax.Array,
-    k_frac: float,
+    k_frac: float | jax.Array,
     use_pallas: bool = False,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -106,39 +181,57 @@ def compress(
     dequantised sparse update the receiver reconstructs (same length as
     ``delta``) and ``payload_bits`` is the acoustic payload size per the
     paper's accounting (Eq. 31): kept coords * (8 + ceil(log2 d)) bits.
+    ``k_frac`` may be traced on the oracle path.
     """
-    blocks, n = _pad_blocks(delta)
-    err_blocks, _ = _pad_blocks(err)
-    k = max(1, int(round(k_frac * BLOCK_ELEMS)))
     if use_pallas:
-        q, scale, new_err = _q8.compress_blocks(blocks, err_blocks, k, interpret)
-        qf = q.reshape(q.shape[0], -1)
-        scale = scale.reshape(-1, 1)
-    else:
-        qf, scale, new_err = _ref.compress_ref(
-            blocks.reshape(blocks.shape[0], -1),
-            err_blocks.reshape(blocks.shape[0], -1),
-            k,
-        )
-    recon = _ref.dequant8_ref(qf, scale)
-    nnz = jnp.sum(qf != 0)
-    d = jnp.maximum(n, 2)
-    b_idx = jnp.ceil(jnp.log2(d.astype(jnp.float32)))
-    payload_bits = nnz.astype(jnp.float32) * (8.0 + b_idx)
-    return _unpad(recon, n), _unpad(new_err, n), payload_bits
+        k = max(1, int(round(_static_scalar(k_frac, "k_frac") * BLOCK_ELEMS)))
+        return _compress_pallas(delta, err, k, interpret)
+    return _compress_ref(delta, err, _block_k(k_frac))
 
 
 @functools.partial(
-    jax.jit,
-    static_argnames=("n_fog", "k_frac", "quantize", "use_pallas", "interpret"),
+    jax.jit, static_argnames=("n_fog", "k", "quantize", "interpret")
 )
+def _compress_aggregate_pallas(
+    deltas, err, fog_id, weights, n_fog: int, k: int, quantize: bool,
+    interpret: bool,
+):
+    blocks, d = _pad_blocks_batch(deltas)
+    err_blocks, _ = _pad_blocks_batch(err)
+    fog_blocks, new_err = _fa.compress_aggregate_blocks(
+        blocks, err_blocks, fog_id, weights, n_fog, k, quantize, interpret
+    )
+    fog_sum = fog_blocks.reshape(n_fog, -1)[:, :d]
+    return fog_sum, new_err.reshape(deltas.shape[0], -1)[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("n_fog", "quantize"))
+def _compress_aggregate_ref(
+    deltas, err, fog_id, weights, k, n_fog: int, quantize: bool
+):
+    blocks, d = _pad_blocks_batch(deltas)
+    err_blocks, _ = _pad_blocks_batch(err)
+    n_rows = blocks.shape[0]
+    fog_blocks, new_err = _ref.compress_aggregate_ref(
+        blocks.reshape(n_rows, blocks.shape[1], -1),
+        err_blocks.reshape(n_rows, blocks.shape[1], -1),
+        fog_id,
+        weights,
+        n_fog,
+        k,
+        quantize,
+    )
+    fog_sum = fog_blocks.reshape(n_fog, -1)[:, :d]
+    return fog_sum, new_err.reshape(deltas.shape[0], -1)[:, :d]
+
+
 def compress_aggregate(
     deltas: jax.Array,    # (N, d) raw per-client flat updates
     err: jax.Array,       # (N, d) error-feedback buffers
     fog_id: jax.Array,    # (N,) int32 cluster assignment
     weights: jax.Array,   # (N,) f32, zeroed for non-participants
     n_fog: int,
-    k_frac: float,
+    k_frac: float | jax.Array,
     quantize: bool = True,
     use_pallas: bool = False,
     interpret: bool = True,
@@ -151,28 +244,18 @@ def compress_aggregate(
 
     Returns (fog_sum (n_fog, d) f32 — UNNORMALISED weighted sums
     ``sum_{i in C_m} w_i recon_i``; divide by the per-fog weight totals for
-    Eq. 13 — and new_err (N, d)).
+    Eq. 13 — and new_err (N, d)).  ``k_frac`` may be traced on the oracle
+    path — the selection is a bisection against the keep count, so swept
+    compression ratios batch into one program.
     """
-    blocks, d = _pad_blocks_batch(deltas)
-    err_blocks, _ = _pad_blocks_batch(err)
-    k = max(1, int(round(k_frac * BLOCK_ELEMS)))
     if use_pallas:
-        fog_blocks, new_err = _fa.compress_aggregate_blocks(
-            blocks, err_blocks, fog_id, weights, n_fog, k, quantize, interpret
+        k = max(1, int(round(_static_scalar(k_frac, "k_frac") * BLOCK_ELEMS)))
+        return _compress_aggregate_pallas(
+            deltas, err, fog_id, weights, n_fog, k, quantize, interpret
         )
-    else:
-        n_rows = blocks.shape[0]
-        fog_blocks, new_err = _ref.compress_aggregate_ref(
-            blocks.reshape(n_rows, blocks.shape[1], -1),
-            err_blocks.reshape(n_rows, blocks.shape[1], -1),
-            fog_id,
-            weights,
-            n_fog,
-            k,
-            quantize,
-        )
-    fog_sum = fog_blocks.reshape(n_fog, -1)[:, :d]
-    return fog_sum, new_err.reshape(deltas.shape[0], -1)[:, :d]
+    return _compress_aggregate_ref(
+        deltas, err, fog_id, weights, _block_k(k_frac), n_fog, quantize
+    )
 
 
 def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
@@ -223,9 +306,74 @@ def fused_score(
     return err.reshape(-1)[:r], flag.reshape(-1)[:r] > 0.0
 
 
+def _ravel_deltas(dws, dbs, n):
+    # ravel_pytree order for a list of {"b", "w"} dicts: per layer, bias
+    # first (dict keys sort alphabetically), then the row-major weight.
+    return jnp.concatenate(
+        [part for dw, db in zip(dws, dbs)
+         for part in (db.reshape(n, -1), dw.reshape(n, -1))],
+        axis=1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("use_prox",))
+def _local_train_ref(params, data, idx, lr, prox_mu, use_prox: bool):
+    ws = tuple(layer["w"] for layer in params)
+    bs = tuple(layer["b"] for layer in params)
+    n = data.shape[0]
+    new_ws, new_bs, losses = jax.vmap(
+        lambda xx, ii: _ref.local_train_ref(
+            xx, ii, ws, bs, lr, prox_mu, use_prox=use_prox
+        )
+    )(data, idx)
+    dws = [nw - w[None] for nw, w in zip(new_ws, ws)]
+    dbs = [nb.reshape(n, 1, -1) - b[None, None] for nb, b in
+           zip(new_bs, bs)]
+    return _ravel_deltas(dws, dbs, n), losses
+
+
 @functools.partial(
-    jax.jit, static_argnames=("lr", "prox_mu", "use_pallas", "interpret")
+    jax.jit, static_argnames=("lr", "prox_mu", "interpret")
 )
+def _local_train_pallas(
+    params, data, idx, lr: float, prox_mu: float, interpret: bool
+):
+    ws = tuple(layer["w"] for layer in params)
+    bs = tuple(layer["b"] for layer in params)
+    n, _, d = data.shape
+    steps, bsz = idx.shape[1], idx.shape[2]
+    lanes, sub = _flt.LANES, _flt.SUBLANES
+    dims = (d,) + tuple(w.shape[1] for w in ws)
+    dims_pad = tuple(max(1, -(-dd // lanes)) * lanes for dd in dims)
+    w_pad = max(1, -(-data.shape[1] // lanes)) * lanes
+    b_pad = max(1, -(-bsz // sub)) * sub
+    s_pad = max(1, -(-steps // lanes)) * lanes
+    x_pad = (
+        jnp.zeros((n, w_pad, dims_pad[0]), jnp.float32)
+        .at[:, : data.shape[1], :d].set(data.astype(jnp.float32))
+    )
+    idx_t = jnp.swapaxes(idx, 1, 2)                  # (N, bsz, steps)
+    idx_pad = (
+        jnp.full((n, b_pad, s_pad), -1, jnp.int32)
+        .at[:, :bsz, :steps].set(idx_t.astype(jnp.int32))
+    )
+    ws_pad = tuple(
+        _pad2(w.astype(jnp.float32), dims_pad[i], dims_pad[i + 1])
+        for i, w in enumerate(ws)
+    )
+    bs_pad = tuple(
+        _pad2(b.astype(jnp.float32)[None, :], 1, dims_pad[i + 1])
+        for i, b in enumerate(bs)
+    )
+    dws_p, dbs_p, loss = _flt.local_train_blocks(
+        x_pad, idx_pad, ws_pad, bs_pad, steps, bsz, lr, prox_mu,
+        interpret,
+    )
+    dws = [dw[:, : w.shape[0], : w.shape[1]] for dw, w in zip(dws_p, ws)]
+    dbs = [db[:, :, : b.shape[0]] for db, b in zip(dbs_p, bs)]
+    return _ravel_deltas(dws, dbs, n), loss[:, 0]
+
+
 def local_train(
     params: Any,          # autoencoder params: list of {"w", "b"} layers
     data: jax.Array,      # (N, window, D) per-client resident windows
@@ -246,63 +394,21 @@ def local_train(
     batch-for-batch identical to ``local_sgd`` over
     ``multi_epoch_batches`` — without the dense (steps, bsz, D) stream.
 
+    ``lr`` / ``prox_mu`` may be traced on the oracle path (config-axis
+    sweeps); the Pallas kernel bakes them into the kernel body and needs
+    concrete numbers.
+
     Returns (flat_deltas (N, d) f32 in ``ravel_pytree`` leaf order, i.e.
     exactly ``ravel_pytree(theta_i^E - theta^t)``, and mean_losses (N,)).
     The deltas chain straight into :func:`compress_aggregate`.
     """
-    ws = tuple(layer["w"] for layer in params)
-    bs = tuple(layer["b"] for layer in params)
-    n, _, d = data.shape
-    steps, bsz = idx.shape[1], idx.shape[2]
-
-    if not use_pallas:
-        new_ws, new_bs, losses = jax.vmap(
-            lambda xx, ii: _ref.local_train_ref(
-                xx, ii, ws, bs, lr, prox_mu
-            )
-        )(data, idx)
-        dws = [nw - w[None] for nw, w in zip(new_ws, ws)]
-        dbs = [nb.reshape(n, 1, -1) - b[None, None] for nb, b in
-               zip(new_bs, bs)]
-    else:
-        lanes, sub = _flt.LANES, _flt.SUBLANES
-        dims = (d,) + tuple(w.shape[1] for w in ws)
-        dims_pad = tuple(max(1, -(-dd // lanes)) * lanes for dd in dims)
-        w_pad = max(1, -(-data.shape[1] // lanes)) * lanes
-        b_pad = max(1, -(-bsz // sub)) * sub
-        s_pad = max(1, -(-steps // lanes)) * lanes
-        x_pad = (
-            jnp.zeros((n, w_pad, dims_pad[0]), jnp.float32)
-            .at[:, : data.shape[1], :d].set(data.astype(jnp.float32))
+    if use_pallas:
+        return _local_train_pallas(
+            params, data, idx, _static_scalar(lr, "lr"),
+            _static_scalar(prox_mu, "prox_mu"), interpret,
         )
-        idx_t = jnp.swapaxes(idx, 1, 2)                  # (N, bsz, steps)
-        idx_pad = (
-            jnp.full((n, b_pad, s_pad), -1, jnp.int32)
-            .at[:, :bsz, :steps].set(idx_t.astype(jnp.int32))
-        )
-        ws_pad = tuple(
-            _pad2(w.astype(jnp.float32), dims_pad[i], dims_pad[i + 1])
-            for i, w in enumerate(ws)
-        )
-        bs_pad = tuple(
-            _pad2(b.astype(jnp.float32)[None, :], 1, dims_pad[i + 1])
-            for i, b in enumerate(bs)
-        )
-        dws_p, dbs_p, loss = _flt.local_train_blocks(
-            x_pad, idx_pad, ws_pad, bs_pad, steps, bsz, lr, prox_mu,
-            interpret,
-        )
-        dws = [dw[:, : w.shape[0], : w.shape[1]] for dw, w in zip(dws_p, ws)]
-        dbs = [db[:, :, : b.shape[0]] for db, b in zip(dbs_p, bs)]
-        losses = loss[:, 0]
-    # ravel_pytree order for a list of {"b", "w"} dicts: per layer, bias
-    # first (dict keys sort alphabetically), then the row-major weight.
-    flat = jnp.concatenate(
-        [part for dw, db in zip(dws, dbs)
-         for part in (db.reshape(n, -1), dw.reshape(n, -1))],
-        axis=1,
-    )
-    return flat, losses
+    use_prox = not (isinstance(prox_mu, (int, float)) and prox_mu == 0.0)
+    return _local_train_ref(params, data, idx, lr, prox_mu, use_prox)
 
 
 def swa_decode_attention(

@@ -182,8 +182,9 @@ def local_train_ref(
     idx: jax.Array,               # (steps, bsz) int32 minibatch row indices
     ws: tuple[jax.Array, ...],    # per-layer weights, (d_in, d_out)
     bs: tuple[jax.Array, ...],    # per-layer biases, (d_out,)
-    lr: float,
-    mu: float = 0.0,
+    lr: float | jax.Array,
+    mu: float | jax.Array = 0.0,
+    use_prox: bool | None = None,
 ) -> tuple[tuple[jax.Array, ...], tuple[jax.Array, ...], jax.Array]:
     """Oracle for the fused local-training kernel (the client phase).
 
@@ -196,8 +197,13 @@ def local_train_ref(
     ``idx = data/pipeline.multi_epoch_indices(key, ...)`` the two
     formulations see identical batches, so they agree to float tolerance.
 
-    Returns (new_ws, new_bs, mean_loss).
+    Returns (new_ws, new_bs, mean_loss).  ``lr``/``mu`` are traceable
+    (pure arithmetic); ``use_prox`` is the STATIC proximal-term switch —
+    None derives it from a concrete ``mu`` and defaults to True for a
+    traced one (a runtime mu of 0 then contributes an exact zero term).
     """
+    if use_prox is None:
+        use_prox = not (isinstance(mu, (int, float)) and mu == 0.0)
     n_layers = len(ws)
 
     def loss_fn(params, batch):
@@ -214,7 +220,7 @@ def local_train_ref(
 
     def step(params, ib):
         loss, g = grad_fn(params, x[ib])
-        if mu:
+        if use_prox:
             g = jax.tree_util.tree_map(
                 lambda gg, p, a: gg + mu * (p - a), g, params, anchor
             )

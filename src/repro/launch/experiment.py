@@ -191,6 +191,7 @@ def audit_trial(
     key: jax.Array,
     cfg: hfl.HFLConfig,
     d: int = 1352,
+    l_u: jax.Array | float | None = None,
 ) -> dict[str, jax.Array]:
     """One fully traced training-free audit trial (see :func:`audit_method`).
 
@@ -198,6 +199,11 @@ def audit_trial(
     samples a deployment from ``key``, replays Algorithm 1's association /
     cooperation / energy accounting over ``cfg.rounds`` rounds, and returns
     summed energies + mean participation as jnp scalars.
+
+    ``l_u`` overrides the uplink payload (bits).  The audit touches the
+    compressor ONLY through this number, so ``Engine.sweep`` precomputes it
+    per config and feeds it as a swept operand — audit cells that differ
+    only in compressor settings then share one compiled program.
     """
     from repro.core import association as assoc
     from repro.core import compression as comp
@@ -213,7 +219,8 @@ def audit_trial(
         raise ValueError(f"audit unsupported for {method!r}")
 
     dep0 = topo_m.sample_deployment(key, cfg.deployment)
-    l_u = comp.payload_bits(d, cfg.compressor)
+    if l_u is None:
+        l_u = comp.payload_bits(d, cfg.compressor)
     l_full = 32.0 * d
 
     def round_fn(carry, k):

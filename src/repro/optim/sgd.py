@@ -144,10 +144,16 @@ def make_client_solver(
     from repro.kernels import ops as kops
     from repro.models import autoencoder as ae
 
+    # STATIC proximal switch: ``prox_mu`` may be a tracer inside a
+    # config-axis sweep, where the proximal term always runs (a runtime mu
+    # of 0 contributes an exact zero gradient term); a concrete 0 keeps the
+    # plain-SGD solver, bit-identical to the historical path.
+    use_prox = not (isinstance(prox_mu, (int, float)) and prox_mu == 0.0)
+
     def scan_path(params, data, keys):
         def one(dd, kk):
             batches = multi_epoch_batches(kk, dd, batch_size, epochs)
-            if prox_mu > 0.0:
+            if use_prox:
                 p1, loss = proximal_local_sgd(
                     loss_fn, params, batches, lr, prox_mu
                 )

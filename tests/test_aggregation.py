@@ -89,3 +89,68 @@ def test_ring_mix_single_device_identity():
         mesh=mesh, in_specs=(P(),), out_specs=P(),
     )(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Zero-total-weight rounds (dead network) — PR 5 bugfix.
+# ---------------------------------------------------------------------------
+
+def test_global_aggregate_zero_weights_holds_prev():
+    """A dead-network round must hold the model, not wipe it to zeros."""
+    models = jnp.arange(6.0).reshape(3, 2) + 1.0
+    prev = jnp.array([7.0, -3.0])
+    dead = jnp.zeros((3,))
+    held = agg.global_aggregate(models, dead, prev=prev)
+    np.testing.assert_array_equal(np.asarray(held), np.asarray(prev))
+    # without a carry the legacy zero default is preserved
+    np.testing.assert_allclose(np.asarray(agg.global_aggregate(models, dead)), 0.0)
+    # live rounds are untouched by the fallback
+    live_w = jnp.array([1.0, 0.0, 3.0])
+    np.testing.assert_allclose(
+        np.asarray(agg.global_aggregate(models, live_w, prev=prev)),
+        np.asarray(agg.global_aggregate(models, live_w)),
+        rtol=1e-6,
+    )
+
+
+def test_weighted_mean_zero_weights_holds_prev():
+    updates = jnp.arange(4.0).reshape(2, 2)
+    prev = jnp.array([5.0, 5.0])
+    held = agg.weighted_mean(updates, jnp.zeros((2,)), prev=prev)
+    np.testing.assert_array_equal(np.asarray(held), np.asarray(prev))
+
+
+def test_battery_exhaustion_holds_model_through_hfl_train():
+    """Regression: with every sensor battery-dead, fog weights are all zero
+    and hfl.train used to collapse the global model to zeros on round 1;
+    now each dead round is an explicit no-op on the params."""
+    from repro.core import energy as en
+    from repro.core import hfl
+    from repro.data.synthetic import SyntheticConfig, generate, normalize
+    from repro.launch import experiment as exp
+    from repro.models import autoencoder as ae
+
+    ds = normalize(generate(
+        jax.random.key(0),
+        SyntheticConfig(n_sensors=8, train_len=32, val_len=16, test_len=32),
+    ))
+    cfg = exp.make_config(
+        n_sensors=8, n_fog=2, rounds=3, local_epochs=1,
+        energy=en.EnergyParams(e_init_j=0.0, e_min_j=0.0),
+    )
+    key = jax.random.key(1)
+    params0 = ae.init(jax.random.key(2), ds.train.shape[-1], (16, 8, 16))
+    # NEAREST would happily pair stale association clusters; the round now
+    # feeds battery-aware active cluster sizes into the decision, so a
+    # fully dead network also reports zero cooperation links.
+    params, metrics = hfl.train(
+        key, params0, ae.loss, ds, cfg.replace(rule=hfl.coop.CoopRule.NEAREST)
+    )
+    assert float(jnp.max(metrics.participation)) == 0.0
+    assert float(jnp.max(metrics.coop_links)) == 0.0
+    assert float(jnp.max(metrics.e_f2f)) == 0.0
+    for p, p0 in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(params0)
+    ):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+    assert not bool(jnp.any(jnp.isnan(metrics.loss)))

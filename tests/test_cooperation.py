@@ -38,7 +38,7 @@ def test_mixing_rows_are_stochastic(fog_setup, cparams):
 
 def test_nearest_uses_paper_weights(fog_setup, cparams):
     pos, sizes = fog_setup
-    d = coop.nearest_cooperation(pos, cparams)
+    d = coop.nearest_cooperation(pos, sizes, cparams)
     coop_mask = np.asarray(d.cooperates)
     assert coop_mask.any()
     np.testing.assert_allclose(
@@ -49,16 +49,58 @@ def test_nearest_uses_paper_weights(fog_setup, cparams):
     )
 
 
-def test_nearest_picks_nearest_feasible(fog_setup, cparams):
-    pos, _ = fog_setup
-    d = coop.nearest_cooperation(pos, cparams)
+def test_nearest_picks_nearest_feasible_nonempty(fog_setup, cparams):
+    pos, sizes = fog_setup
+    d = coop.nearest_cooperation(pos, sizes, cparams)
     dm = np.array(ch.pairwise_distances(pos, pos))
     np.fill_diagonal(dm, np.inf)
     feas = np.asarray(ch.feasible(jnp.asarray(dm), cparams))
+    eligible = feas & (np.asarray(sizes) > 0)[None, :]
     for m in range(pos.shape[0]):
-        if feas[m].any():
-            masked = np.where(feas[m], dm[m], np.inf)
+        if int(sizes[m]) > 0 and eligible[m].any():
+            masked = np.where(eligible[m], dm[m], np.inf)
+            assert bool(d.cooperates[m])
             assert int(d.partner[m]) == int(np.argmin(masked))
+
+
+def test_empty_fog_never_selected_as_partner(fog_setup, cparams):
+    """Bugfix: an empty fog has no local aggregate to exchange — pairing
+    with it would mix stale globals into a real fog (Eq. 15) while the
+    ``cooperates & fog_active`` energy/latency masks (Eqs. 18/21) count no
+    exchange.  Partner eligibility is gated on cluster_size > 0."""
+    pos, sizes = fog_setup
+    empty = np.flatnonzero(np.asarray(sizes) == 0)
+    assert empty.size > 0  # fixture includes an empty fog
+    for rule in coop.CoopRule:
+        d = coop.decide(rule, pos, sizes, cparams)
+        partners = np.asarray(d.partner)[np.asarray(d.cooperates)]
+        assert not np.isin(partners, empty).any(), rule
+
+
+def test_empty_fog_never_cooperates(cparams):
+    """The empty fog itself must not cooperate either: its mixing row
+    would update a model no cluster owns while energy says nothing moved."""
+    key = jax.random.key(3)
+    pos = jax.random.uniform(key, (6, 3), minval=0.0, maxval=800.0)
+    sizes = jnp.array([0, 5, 7, 0, 3, 9], jnp.int32)
+    for rule in (coop.CoopRule.NEAREST, coop.CoopRule.SELECTIVE):
+        d = coop.decide(rule, pos, sizes, cparams)
+        cooperating = np.flatnonzero(np.asarray(d.cooperates))
+        assert (np.asarray(sizes)[cooperating] > 0).all(), rule
+
+
+def test_coop_decision_consistent_with_energy_masks(fog_setup, cparams):
+    """With every sensor alive, mixing/energy/latency agree: a fog whose
+    mixing row actually blends a partner (partner_weight > 0) is exactly a
+    fog the ``cooperates & fog_active`` masks count as exchanging."""
+    pos, sizes = fog_setup
+    fog_active = np.asarray(sizes) > 0  # full-battery round: weight > 0
+    for rule in coop.CoopRule:
+        d = coop.decide(rule, pos, sizes, cparams)
+        mixes = np.asarray(d.partner_weight) > 0
+        counted = np.asarray(d.cooperates) & fog_active
+        np.testing.assert_array_equal(mixes, np.asarray(d.cooperates))
+        np.testing.assert_array_equal(mixes, counted)
 
 
 def test_selective_eligibility_rule(fog_setup, cparams):
@@ -96,8 +138,53 @@ def test_selective_subset_of_nearest_energy(fog_setup, cparams):
     """Selective must activate at most as many links as always-on."""
     pos, sizes = fog_setup
     ds = coop.selective_cooperation(pos, sizes, cparams)
-    dn = coop.nearest_cooperation(pos, cparams)
+    dn = coop.nearest_cooperation(pos, sizes, cparams)
     assert int(jnp.sum(ds.cooperates)) <= int(jnp.sum(dn.cooperates))
+
+
+def test_selective_no_feasible_pairs_degrades_cleanly(cparams):
+    """Bugfix: with ZERO feasible fog-fog links the q1 quantile used to run
+    nanquantile over an all-NaN matrix — NaN result plus a RuntimeWarning
+    under vmap on CPU.  The guard makes the no-coop degradation explicit
+    and warning-free."""
+    import warnings
+
+    # Pairwise distances ~>= 5 km: far beyond the 140 dB SL cap's reach.
+    pos = jnp.array(
+        [[0.0, 0.0, 100.0], [5000.0, 0.0, 150.0],
+         [0.0, 5000.0, 200.0], [5000.0, 5000.0, 250.0]]
+    )
+    sizes = jnp.array([1, 9, 2, 7], jnp.int32)
+    feas = ch.feasible(
+        ch.pairwise_distances(pos, pos)
+        + jnp.diag(jnp.full((4,), jnp.inf)), cparams
+    )
+    assert not bool(jnp.any(feas))  # scenario really has no feasible pair
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        d = coop.selective_cooperation(pos, sizes, cparams)
+        assert not bool(jnp.any(d.cooperates))
+        # weights stay a clean identity row, not NaN
+        np.testing.assert_allclose(np.asarray(d.self_weight), 1.0)
+        np.testing.assert_allclose(np.asarray(d.dist_m), 0.0)
+
+        # and under vmap (the engine's trial axes) it stays warning-free
+        batched = jax.vmap(
+            lambda p: coop.selective_cooperation(p, sizes, cparams)
+        )(jnp.stack([pos, pos + 10.0]))
+        assert not bool(jnp.any(batched.cooperates))
+
+
+def test_selective_eligibility_factor_monotone(fog_setup, cparams):
+    """The Eq. 28 factor sweep (ablations) reuses the production rule: a
+    larger eligibility factor can only admit more cooperating fogs."""
+    pos, sizes = fog_setup
+    links = [
+        int(jnp.sum(coop.selective_cooperation(
+            pos, sizes, cparams, eligibility_factor=f).cooperates))
+        for f in (0.25, 0.75, 1.5)
+    ]
+    assert links == sorted(links)
 
 
 def test_selective_all_equal_clusters_no_coop(cparams):

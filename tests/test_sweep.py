@@ -1,0 +1,254 @@
+"""Tests for config-axis sweep batching (Engine.sweep, PR 5).
+
+Covers the acceptance pins: a >=8-cell quick-tier ablation grid runs as
+<=3 compiled programs matching per-cell ``Engine.run`` to float tolerance;
+shape-class grouping never co-batches mixed enums/static shapes; a swept
+``rho_s`` row reproduces ``Engine(compressor="keep")`` sequential runs;
+and ``Engine.sweep(family="audit")`` over a swept ``ChannelParams`` grid
+matches the sequential audit path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as eng_mod
+from repro.core import channel as ch
+from repro.core import compression as comp
+from repro.core import energy as en
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+from repro.launch import experiment as exp
+
+
+def _make_ds(seed: int):
+    cfg = SyntheticConfig(n_sensors=12, train_len=48, val_len=24, test_len=48)
+    return normalize(generate(jax.random.key(seed), cfg))
+
+
+def _small_cfg(**kw):
+    kw.setdefault("rounds", 2)
+    kw.setdefault("local_epochs", 1)
+    return exp.make_config(n_sensors=12, n_fog=3, **kw)
+
+
+def test_ablation_grid_compiles_at_most_3_programs():
+    """The acceptance pin: an 8-cell rho x lr quick-tier ablation grid is
+    ONE shape-class -> one compiled program (<= 3), and every cell matches
+    its per-cell Engine.run to float tolerance."""
+    eng = eng_mod.Engine()
+    base = _small_cfg()
+    cfgs = [
+        base.replace(
+            lr=lr, compressor=comp.CompressorConfig(rho_s=rho, quant_bits=8)
+        )
+        for rho in (0.01, 0.05, 0.1, 0.2)
+        for lr in (0.005, 0.01)
+    ]
+    assert len(cfgs) >= 8
+    sw = eng.sweep("hfl-selective", cfgs, (0, 1), _make_ds)
+    assert sw.compiled_programs <= 3
+    assert sw.n_classes == 1
+    assert np.asarray(sw["f1"]).shape == (8, 2, 1)
+
+    for i in (0, 3, 7):
+        r = eng.run("hfl-selective", cfgs[i], (0, 1), _make_ds)
+        np.testing.assert_allclose(
+            np.asarray(sw["e_total"][i]), np.asarray(r["e_total"]), rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(sw["losses"][i]), np.asarray(r.losses),
+            rtol=1e-4, atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(sw["f1"][i]), np.asarray(r.f1), atol=1e-3
+        )
+
+
+def test_mixed_statics_never_cobatched():
+    """Cells differing in enums / static structure (compressor mode,
+    bit-width, server optimiser, round count) land in separate
+    shape-classes — only true knob sweeps share a program."""
+    eng = eng_mod.Engine(compressor="keep")
+    base = _small_cfg()
+    cfgs = [
+        base,                                                    # class A
+        base.replace(compressor=comp.CompressorConfig(
+            rho_s=0.1, quant_bits=8)),                           # A (rho swept)
+        base.replace(compressor=comp.CompressorConfig(
+            rho_s=1.0, quant_bits=32)),                          # B: dense
+        base.replace(compressor=comp.CompressorConfig(
+            rho_s=0.05, quant_bits=8, mode="blockwise")),        # C: mode enum
+        base.replace(server_opt="adam"),                         # D: enum
+        base.replace(rounds=3),                                  # E: shape
+    ]
+    sw = eng.sweep("hfl-nocoop", cfgs, (0,), _make_ds)
+    assert sw.n_classes == 5
+    grouped = {c["indices"] for c in sw.classes}
+    assert (0, 1) in grouped  # the one genuine knob sweep co-batched
+    # ... and the grid still matches the per-cell path.
+    for i in (2, 4):
+        r = eng.run("hfl-nocoop", cfgs[i], (0,), _make_ds)
+        np.testing.assert_allclose(
+            np.asarray(sw["losses"][i]), np.asarray(r.losses),
+            rtol=1e-4, atol=1e-6,
+        )
+
+
+def test_swept_rho_matches_keep_sequential():
+    """A swept rho_s row under Engine(compressor="keep") — the paper's
+    exact global Top-K semantics, traced k via a dynamic sort index —
+    reproduces sequential experiment.run_method per cell."""
+    eng = eng_mod.Engine(compressor="keep")
+    base = _small_cfg(rounds=3)
+    rhos = (0.02, 0.05, 0.3)
+    cfgs = [
+        base.replace(compressor=comp.CompressorConfig(
+            rho_s=r, quant_bits=8, mode="global"))
+        for r in rhos
+    ]
+    sw = eng.sweep("hfl-selective", cfgs, (0, 1), _make_ds)
+    assert sw.n_classes == 1
+    for i, c in enumerate(cfgs):
+        for j, s in enumerate((0, 1)):
+            ref = exp.run_method(
+                "hfl-selective", _make_ds(s), eng.resolve_config(c), seed=s
+            )
+            np.testing.assert_allclose(
+                float(sw["e_total"][i, j, 0]), ref.e_total, rtol=1e-5
+            )
+            np.testing.assert_allclose(
+                np.asarray(sw["losses"][i, j, 0]), np.asarray(ref.losses),
+                rtol=1e-4,
+            )
+            np.testing.assert_allclose(
+                float(sw["f1"][i, j, 0]), ref.f1, atol=1e-3
+            )
+
+
+def test_audit_sweep_channel_grid_matches_sequential():
+    """Audit sweep over a ChannelParams x EnergyParams x compressor grid:
+    everything lands in ONE program (the compressor enters only through
+    the payload-bits operand) and each cell matches the sequential
+    audit_method on the resolved config."""
+    eng = eng_mod.Engine()
+    grid = [
+        exp.make_config(
+            n_sensors=30, n_fog=5, rounds=4,
+            channel=ch.ChannelParams(wind_m_s=w, shipping=s),
+            energy=en.EnergyParams(eta_ea=eta),
+            compressor=cc,
+        )
+        for (w, s, eta) in ((3.0, 0.2, 0.25), (8.0, 0.7, 0.4))
+        for cc in (
+            comp.CompressorConfig(rho_s=0.05, quant_bits=8),
+            comp.CompressorConfig(rho_s=1.0, quant_bits=32),
+        )
+    ]
+    sw = eng.sweep("hfl-selective", grid, (0, 1), family="audit")
+    assert sw.n_classes == 1
+    assert sw.compiled_programs == 1
+    for i, c in enumerate(grid):
+        rcfg = eng.resolve_config(c)
+        for j, s in enumerate((0, 1)):
+            ref = exp.audit_method("hfl-selective", rcfg, seed=s)
+            for k in ("e_s2f", "e_f2f", "e_f2g", "e_total", "participation"):
+                np.testing.assert_allclose(
+                    float(sw[k][i, j, 0]), ref[k], rtol=1e-5, atol=1e-7
+                )
+
+
+def test_sweep_program_cache_reuse():
+    """Re-running the same grid hits the program cache: zero fresh
+    compiles, identical results — the CI compile-count gate relies on
+    this accounting."""
+    eng = eng_mod.Engine()
+    cfgs = [
+        _small_cfg(channel=ch.ChannelParams(wind_m_s=w)) for w in (3.0, 7.0)
+    ]
+    s1 = eng.sweep("hfl-nocoop", cfgs, (0,), family="audit")
+    before = eng.compile_count
+    s2 = eng.sweep("hfl-nocoop", cfgs, (0,), family="audit")
+    assert s1.compiled_programs == 1
+    assert s2.compiled_programs == 0
+    assert eng.compile_count == before
+    np.testing.assert_array_equal(
+        np.asarray(s1["e_total"]), np.asarray(s2["e_total"])
+    )
+    log = eng.take_log()
+    assert [e["fresh_compile"] for e in log] == [True, False]
+    assert all(e["kind"] == "sweep-audit" and e["n_cells"] == 2 for e in log)
+
+
+def test_sweep_per_cell_datasets():
+    """The config axis can carry per-cell datasets (the fig7 non-IID
+    sweep): same config, different data, one program."""
+    eng = eng_mod.Engine()
+    cfg = _small_cfg()
+    ds_list = [_make_ds(100), _make_ds(200)]
+    sw = eng.sweep("fedprox", [cfg, cfg], (0,), ds_list)
+    assert sw.n_classes == 1
+    for i, one in enumerate(ds_list):
+        r = eng.run("fedprox", cfg, (0,), one)
+        np.testing.assert_allclose(
+            np.asarray(sw["losses"][i]), np.asarray(r.losses),
+            rtol=1e-4, atol=1e-6,
+        )
+
+
+def test_sweep_rejects_bad_inputs():
+    eng = eng_mod.Engine()
+    cfg = _small_cfg()
+    with pytest.raises(ValueError, match="family"):
+        eng.sweep("hfl-nocoop", [cfg], (0,), _make_ds, family="pod")
+    with pytest.raises(ValueError, match="at least one"):
+        eng.sweep("hfl-nocoop", [], (0,), _make_ds)
+    with pytest.raises(ValueError, match="dataset"):
+        eng.sweep("hfl-nocoop", [cfg], (0,))
+    with pytest.raises(ValueError, match="datasets for"):
+        eng.sweep("hfl-nocoop", [cfg], (0,), [_make_ds(0), _make_ds(1)])
+
+
+def test_traced_payload_and_k_frac_match_concrete():
+    """The traced payload/keep-count formulas agree with the concrete
+    Python ones across a (d, rho) grid — the sweep's numerics contract."""
+    for d in (137, 1352, 9000, 20000):
+        for rho in (0.01, 0.05, 0.2, 0.9):
+            cc = comp.CompressorConfig(rho_s=rho, quant_bits=8)
+            cc_t = cc.replace(rho_s=jnp.float32(rho), sparse=True)
+            np.testing.assert_allclose(
+                float(jax.jit(lambda c: comp.payload_bits(d, c))(cc_t)),
+                comp.payload_bits(d, cc), rtol=1e-6,
+            )
+            np.testing.assert_allclose(
+                float(jax.jit(
+                    lambda r: comp.blockwise_k_frac(d, r)
+                )(jnp.float32(rho))),
+                comp.blockwise_k_frac(d, rho), rtol=1e-6,
+            )
+
+
+def test_config_pytree_roundtrip_preserves_statics():
+    """Flatten/unflatten keeps enums, counts, and the static sparsity
+    predicate intact while leaves may be replaced by tracers."""
+    cfg = _small_cfg(
+        compressor=comp.CompressorConfig(rho_s=0.05, quant_bits=8),
+        server_opt="adam",
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(cfg)
+    assert all(isinstance(x, (int, float)) for x in leaves)
+    cfg2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert cfg2.rule is cfg.rule
+    assert cfg2.rounds == cfg.rounds
+    assert cfg2.compressor.is_sparse and cfg2.compressor.enabled
+    # a stacked config still answers the static predicates
+    stacked = eng_mod.Engine.stack_configs([cfg, cfg.replace(lr=0.02)])
+    assert stacked.compressor.is_sparse
+    assert stacked.compressor.enabled
+    assert np.asarray(stacked.lr).shape == (2,)
+    # replace(rho_s=...) across the sparsity boundary re-derives the
+    # pinned predicate instead of keeping it stale
+    pinned = cfg2.compressor
+    assert pinned.sparse is True
+    dense = pinned.replace(rho_s=1.0, quant_bits=32)
+    assert dense.sparse is None and not dense.is_sparse and not dense.enabled
+    assert comp.payload_bits(1352, dense) == 32.0 * 1352
