@@ -22,11 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.core import association as assoc
 from repro.core import channel as ch
 from repro.core import compression as comp
 from repro.core import cooperation as coop
 from repro.core import energy as en
-from repro.core import association as assoc
 from repro.core import topology as topo
 from repro.launch import experiment as exp
 

@@ -1,0 +1,131 @@
+"""Async-family benchmark: round throughput + accuracy vs simulated time.
+
+Measures the claim behind ``core/async_fl``: an event-driven loop paced by
+the median acoustic path produces global model updates in fewer simulated
+seconds than the synchronous loop paced by the slowest feasible path —
+without giving the detection F1 back.  Compared head-to-head, on the SAME
+event-driven clock (compute + uplink wait, then merge propagation):
+
+* the sync baseline: ``async_fl.sync_limit`` — every merge waits for the
+  whole fleet's slowest uplink (pinned equivalent to ``hfl.train`` by
+  ``tests/test_async_fl.py``, which is what makes it the fair baseline:
+  identical numerics, identical clock semantics);
+* a small (alpha, buffer) staleness grid of async cells, all run as ONE
+  compiled ``Engine.sweep`` program: each merge waits only for the
+  ``buffer_k`` fastest paths.  Reported per cell: simulated seconds per
+  global merge, F1, and mean staleness at merge.
+
+``speedup_vs_sync`` (sync s/round over async s/merge) is the headline
+number; ``benchmarks/check_async_bench`` gates it (and the per-cell F1)
+against the committed ``experiments/bench/async_bench.json`` — simulated
+time is deterministic for a given seed, so unlike wall-clock the gate can
+run tight.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import async_fl
+from repro.launch import experiment as exp
+
+# (staleness exponent, merge buffer as a fraction of the fleet) cells.
+CELLS = ((0.0, 0.5), (0.5, 0.25), (1.0, 0.25))
+EVENTS_PER_ROUND = 3  # fog ticks simulated per sync-round equivalent
+
+
+def _configs(scale: common.Scale):
+    n = scale.train_n[50]
+    base = exp.make_config(
+        n_sensors=n, n_fog=max(4, n // 6),
+        rounds=scale.rounds, local_epochs=scale.local_epochs,
+    )
+    cfgs = [
+        async_fl.AsyncFLConfig(
+            base=base,
+            n_events=scale.rounds * EVENTS_PER_ROUND,
+            buffer_k=max(2.0, frac * n),
+            fog_k=2.0,
+            alpha=alpha,
+        )
+        for alpha, frac in CELLS
+    ]
+    return n, base, cfgs
+
+
+def run(scale: common.Scale) -> dict:
+    eng = common.get_engine()
+    eng.take_log()  # drop entries from earlier modules
+    n, base, cfgs = _configs(scale)
+
+    def ds_fn(s):
+        return common.make_dataset(700 + s, n, scale)
+
+    sync = eng.run(
+        "hfl-async", async_fl.sync_limit(base), scale.seeds, ds_fn,
+        label="async:sync-baseline",
+    )
+    sync_time = float(jnp.mean(sync["sim_time_s"]))
+    sync_merges = float(jnp.mean(sync["merges"]))
+    sync_row = dict(
+        f1_mean=sync.seed_mean_std("f1")[0],
+        f1_std=sync.seed_mean_std("f1")[1],
+        sim_time_s=sync_time,
+        rounds=base.rounds,
+        merges=sync_merges,
+        sim_s_per_round=sync_time / max(sync_merges, 1.0),
+    )
+
+    sw = eng.sweep("hfl-async", cfgs, scale.seeds, ds_fn,
+                   label="async:staleness-sweep")
+    rows = []
+    for i, (alpha, frac) in enumerate(CELLS):
+        f1m, f1sd = sw.seed_mean_std("f1", i)
+        sim_time = float(jnp.mean(sw["sim_time_s"][i]))
+        merges = float(jnp.mean(sw["merges"][i]))
+        s_per_merge = sim_time / max(merges, 1.0)
+        rows.append(dict(
+            alpha=alpha,
+            buffer_frac=frac,
+            n_events=cfgs[i].n_events,
+            f1_mean=f1m, f1_std=f1sd,
+            sim_time_s=sim_time,
+            merges=merges,
+            staleness_mean=float(jnp.mean(sw["staleness"][i])),
+            sim_s_per_merge=s_per_merge,
+            speedup_vs_sync=sync_row["sim_s_per_round"] / max(s_per_merge, 1e-9),
+        ))
+    return {
+        "n_sensors": n,
+        "seeds": list(scale.seeds),
+        "sync": sync_row,
+        "rows": rows,
+        "engine": common.engine_snapshot(eng.take_log()),
+    }
+
+
+def report(res: dict) -> str:
+    s = res["sync"]
+    lines = [
+        "async_bench — event-driven vs synchronous round throughput "
+        f"(N={res['n_sensors']}, {len(res['seeds'])} seeds)",
+        f"sync baseline: {s['sim_s_per_round']:.2f} sim-s/round, "
+        f"F1 {s['f1_mean']:.3f}±{s['f1_std']:.3f} "
+        f"({s['rounds']} rounds in {s['sim_time_s']:.1f} sim-s)",
+        f"{'alpha':>6} {'buf':>5} {'s/merge':>8} {'speedup':>8} "
+        f"{'stale':>6} {'F1':>13}",
+    ]
+    for r in res["rows"]:
+        lines.append(
+            f"{r['alpha']:>6g} {r['buffer_frac']:>5g} "
+            f"{r['sim_s_per_merge']:>8.2f} {r['speedup_vs_sync']:>7.2f}x "
+            f"{r['staleness_mean']:>6.2f} {r['f1_mean']:.3f}±{r['f1_std']:.3f}"
+        )
+    eng = res.get("engine")
+    if eng:
+        lines.append(
+            f"engine: {eng['sweep_compiled_programs']} compiled program(s) "
+            f"for {eng['sweep_cells']} staleness cells, "
+            f"{eng['wall_s_total']:.1f}s batched wall"
+        )
+    return "\n".join(lines)

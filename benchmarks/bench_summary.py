@@ -1,0 +1,124 @@
+"""Bench-delta summary: fresh vs committed JSONs as one markdown table.
+
+  python -m benchmarks.bench_summary --fresh DIR --baseline DIR [--out PATH]
+
+CI's bench-smoke job runs this after the trend gates and appends the
+table to ``$GITHUB_STEP_SUMMARY`` (the default ``--out`` when that env
+var is set), so every PR shows the per-row movement of the gated metrics
+— not just the gates' pass/fail bit.  Row specs are imported from the
+gate modules themselves (``check_kernel_micro.CHECKS`` etc.), so the
+summary and the gates can never drift apart on what is tracked.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks import check_kernel_micro, check_serve_bench
+
+# json name -> (table, row-key fields, tracked field) triples.
+TABLE_SPECS: dict[str, tuple] = {
+    "kernel_micro": check_kernel_micro.CHECKS,
+    "serve_bench": check_serve_bench.CHECKS,
+    "async_bench": (
+        ("rows", ("alpha", "buffer_frac"), "sim_s_per_merge"),
+        ("rows", ("alpha", "buffer_frac"), "speedup_vs_sync"),
+        ("rows", ("alpha", "buffer_frac"), "f1_mean"),
+    ),
+}
+
+# jsons whose ``engine`` block (sweep compile accounting) is summarised.
+ENGINE_JSONS = ("fig6_energy", "ablations", "async_bench")
+
+
+def _load(path: str) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+def delta_rows(fresh_dir: str, baseline_dir: str) -> list[tuple]:
+    """(json, row, metric, baseline, fresh, ratio-or-note) tuples."""
+    out = []
+    for name, checks in TABLE_SPECS.items():
+        fresh = _load(os.path.join(fresh_dir, f"{name}.json"))
+        base = _load(os.path.join(baseline_dir, f"{name}.json"))
+        if fresh is None or base is None:
+            continue
+        for table, keys, field in checks:
+            fresh_idx = {
+                tuple(r[k] for k in keys): r for r in fresh.get(table, [])
+            }
+            for brow in base.get(table, []):
+                if field not in brow:
+                    continue
+                row_key = tuple(brow[k] for k in keys)
+                row_tag = ",".join(
+                    f"{k}={_fmt(v)}" for k, v in zip(keys, row_key)
+                )
+                frow = fresh_idx.get(row_key)
+                if frow is None or field not in frow:
+                    out.append((name, row_tag, field, brow[field], None, "missing"))
+                    continue
+                ratio = frow[field] / max(abs(brow[field]), 1e-9)
+                out.append((name, row_tag, field, brow[field], frow[field],
+                            f"{ratio:.2f}x"))
+    for name in ENGINE_JSONS:
+        fresh = _load(os.path.join(fresh_dir, f"{name}.json"))
+        base = _load(os.path.join(baseline_dir, f"{name}.json"))
+        if fresh is None or base is None:
+            continue
+        fe, be = fresh.get("engine") or {}, base.get("engine") or {}
+        for field in ("sweep_cells", "sweep_compiled_programs"):
+            if field in be:
+                out.append((name, "engine", field, be[field],
+                            fe.get(field), "exact"))
+    return out
+
+
+def markdown(rows: list[tuple]) -> str:
+    lines = [
+        "## Bench delta — fresh vs committed baseline",
+        "",
+        "| json | row | metric | baseline | fresh | ratio |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, row_tag, field, base_v, fresh_v, note in rows:
+        fresh_s = "**MISSING**" if fresh_v is None else _fmt(fresh_v)
+        lines.append(
+            f"| {name} | {row_tag} | {field} | {_fmt(base_v)} "
+            f"| {fresh_s} | {note} |"
+        )
+    if len(lines) == 4:
+        lines.append("| _no overlapping bench JSONs found_ | | | | | |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, help="dir with fresh JSONs")
+    ap.add_argument("--baseline", required=True,
+                    help="dir with committed baseline JSONs")
+    ap.add_argument("--out", default=os.environ.get("GITHUB_STEP_SUMMARY"),
+                    help="append the markdown here (default: "
+                         "$GITHUB_STEP_SUMMARY, else stdout only)")
+    args = ap.parse_args()
+    md = markdown(delta_rows(args.fresh, args.baseline))
+    print(md)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

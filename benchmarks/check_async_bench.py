@@ -1,0 +1,125 @@
+"""Trend gate for the async-family benchmark (sibling of
+``check_kernel_micro`` / ``check_serve_bench`` / ``check_sweep_compile``).
+
+  python -m benchmarks.check_async_bench FRESH.json BASELINE.json
+
+Unlike the kernel gates this one checks SIMULATED time, which is
+deterministic for a given seed — so the threshold is tight (default
+1.25x), not the 3x wall-clock noise allowance.  Checked against the
+committed ``experiments/bench/async_bench.json``:
+
+* per (alpha, buffer_frac) row: ``sim_s_per_merge`` must not exceed the
+  baseline by more than the threshold, ``speedup_vs_sync`` must not
+  shrink below baseline/threshold, and ``f1_mean`` must not drop by more
+  than ``--f1-tol`` (absolute);
+* the sync row's ``sim_s_per_round`` gets the same ratio check (a
+  latency-model change that slows BOTH paths would otherwise hide in the
+  speedup ratio);
+* a vanished row fails loudly, exactly like the kernel gates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+THRESHOLD = 1.25
+F1_TOL = 0.08
+
+
+def _row_key(row: dict) -> tuple:
+    return (row["alpha"], row["buffer_frac"])
+
+
+def compare(
+    fresh: dict,
+    baseline: dict,
+    threshold: float = THRESHOLD,
+    f1_tol: float = F1_TOL,
+) -> list[str]:
+    failures = []
+
+    def ratio_check(tag, base_v, fresh_v, *, larger_is_worse):
+        if fresh_v is None:
+            failures.append(f"{tag}: missing from the fresh JSON")
+            return
+        ratio = (
+            fresh_v / max(base_v, 1e-9)
+            if larger_is_worse else base_v / max(fresh_v, 1e-9)
+        )
+        line = f"{tag}: {base_v:.3f} -> {fresh_v:.3f} ({ratio:.2f}x)"
+        if ratio > threshold:
+            failures.append(line)
+        else:
+            print(f"ok   {line}")
+
+    base_sync = baseline.get("sync") or {}
+    if "sim_s_per_round" in base_sync:
+        ratio_check(
+            "sync.sim_s_per_round",
+            base_sync["sim_s_per_round"],
+            (fresh.get("sync") or {}).get("sim_s_per_round"),
+            larger_is_worse=True,
+        )
+
+    fresh_rows = {_row_key(r): r for r in fresh.get("rows", [])}
+    for base_row in baseline.get("rows", []):
+        key = _row_key(base_row)
+        tag = f"rows[alpha={key[0]:g},buf={key[1]:g}]"
+        fresh_row = fresh_rows.get(key)
+        if fresh_row is None:
+            failures.append(f"{tag}: missing from the fresh JSON")
+            continue
+        ratio_check(
+            f"{tag}.sim_s_per_merge",
+            base_row["sim_s_per_merge"], fresh_row.get("sim_s_per_merge"),
+            larger_is_worse=True,
+        )
+        ratio_check(
+            f"{tag}.speedup_vs_sync",
+            base_row["speedup_vs_sync"], fresh_row.get("speedup_vs_sync"),
+            larger_is_worse=False,
+        )
+        f1_fresh = fresh_row.get("f1_mean")
+        f1_line = (
+            f"{tag}.f1_mean: {base_row['f1_mean']:.3f} -> "
+            f"{f1_fresh if f1_fresh is None else format(f1_fresh, '.3f')}"
+        )
+        if f1_fresh is None:
+            failures.append(f"{tag}.f1_mean: missing from the fresh JSON")
+        elif base_row["f1_mean"] - f1_fresh > f1_tol:
+            failures.append(f"{f1_line} (dropped > {f1_tol})")
+        else:
+            print(f"ok   {f1_line}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated async_bench.json")
+    ap.add_argument("baseline", help="committed baseline async_bench.json")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    ap.add_argument("--f1-tol", type=float, default=F1_TOL)
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(fresh, baseline, args.threshold, args.f1_tol)
+    if failures:
+        print(f"ASYNC THROUGHPUT/ACCURACY REGRESSION (> {args.threshold}x "
+              f"or F1 drop > {args.f1_tol}):")
+        for line in failures:
+            print(f"FAIL {line}")
+        print(
+            "If this PR intentionally changed the async simulation or its "
+            "scales, regenerate the baseline: "
+            "PYTHONPATH=src python -m benchmarks.run --only async_bench"
+        )
+        return 1
+    print("async_bench within tolerance of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

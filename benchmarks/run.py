@@ -26,6 +26,7 @@ MODULES = (
     "kernel_micro",
     "serve_bench",
     "roofline",
+    "async_bench",
 )
 
 
@@ -39,6 +40,14 @@ def main() -> None:
 
     scale = common.Scale(quick=not args.full)
     names = args.only.split(",") if args.only else list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        # Fail fast with the valid choices instead of letting __import__
+        # raise a raw ModuleNotFoundError mid-suite on a typo'd --only.
+        ap.error(
+            f"unknown benchmark module(s): {', '.join(unknown)} "
+            f"(choose from: {', '.join(MODULES)})"
+        )
     failures = []
     for name in names:
         mod = __import__(f"benchmarks.{name}", fromlist=["run", "report"])

@@ -24,12 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from repro.checkpoint import CheckpointStore
 from repro.models import autoencoder as ae
 from repro.serving import ScoringService
 from repro.serving.score import score as fused_score
-
-from benchmarks import common
 
 D = 32                                   # paper Table II feature dim
 HIDDEN = (16, 8, 16)

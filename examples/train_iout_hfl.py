@@ -11,11 +11,9 @@ This is the paper's pipeline end-to-end:
   PYTHONPATH=src python examples/train_iout_hfl.py [--rounds 10]
 """
 import argparse
-import json
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointStore
 from repro.core import hfl

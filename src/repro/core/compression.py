@@ -23,7 +23,6 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.kernels import ops as kops
-from repro.kernels import ref as kref
 
 
 def _concrete(x: Any) -> bool:

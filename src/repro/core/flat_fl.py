@@ -11,18 +11,16 @@ finite centralised energies reproducible.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
-
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import association as assoc
-from repro.core import channel as ch
 from repro.core import compression as comp
 from repro.core import energy as en
 from repro.core import topology as topo

@@ -34,7 +34,8 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import association as assoc

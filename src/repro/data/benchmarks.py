@@ -76,7 +76,7 @@ def _try_load_real(
 
     train, val, test = stack(trains), stack(vals), stack(tests)
     label = jnp.asarray(
-        np.stack([l[: test.shape[1]] for l in labels]), bool
+        np.stack([lab[: test.shape[1]] for lab in labels]), bool
     )
     n = jnp.full((train.shape[0],), float(train.shape[1]))
     return SensorDataset(train, val, test, label, n)

@@ -79,11 +79,11 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import async_fl, hfl
 from repro.core import compression as comp
-from repro.core import hfl
 from repro.data.synthetic import SensorDataset
-from repro.launch import sharding as shard_rules
 from repro.launch import experiment as exp
+from repro.launch import sharding as shard_rules
 from repro.optim.sgd import LocalTrainConfig
 
 
@@ -91,6 +91,13 @@ def default_use_pallas() -> bool:
     """Compiled Pallas kernels need a real TPU; elsewhere the engine falls
     back to the pure-jnp oracle in :mod:`repro.kernels.ref`."""
     return jax.default_backend() == "tpu"
+
+
+def _base_cfg(cfg) -> hfl.HFLConfig:
+    """The nested ``HFLConfig`` of an async config, else the config itself —
+    every engine path that reads kernel/compressor/round statics goes
+    through here so the four families share one code path."""
+    return cfg.base if isinstance(cfg, async_fl.AsyncFLConfig) else cfg
 
 
 def _describe_compressor(cc: comp.CompressorConfig) -> str:
@@ -170,11 +177,15 @@ class SweepRun:
 
 
 class Engine:
-    """Unified batched front-end for the three round-loop families.
+    """Unified batched front-end for the four round-loop families.
 
     * ``run``   — the trainable families: flat FL (``core/flat_fl``:
-      fedavg/fedprox/fedadam/scaffold/centralised) and hierarchical FL
-      (``core/hfl``: the hfl-* cooperation rules);
+      fedavg/fedprox/fedadam/scaffold/centralised), hierarchical FL
+      (``core/hfl``: the hfl-* cooperation rules), and the event-driven
+      asynchronous family (``core/async_fl``: method ``"hfl-async"`` with
+      an :class:`repro.core.async_fl.AsyncFLConfig` — its staleness knobs
+      ``alpha`` / ``buffer_k`` / ``fog_k`` / timeouts are swept leaves,
+      so ``sweep`` grids them exactly like the physics knobs);
     * ``sweep`` — ``run``/``audit`` over a whole CONFIG GRID: cells are
       grouped into shape-classes (identical static structure — enums,
       shapes, backend flags), each class's swept knobs (channel/energy
@@ -242,7 +253,11 @@ class Engine:
             return ls
         return ls.replace(use_pallas=use_pallas, interpret=not use_pallas)
 
-    def resolve_config(self, cfg: hfl.HFLConfig) -> hfl.HFLConfig:
+    def resolve_config(self, cfg):
+        """Apply the engine's kernel-backend defaults; an async config
+        resolves through its nested ``base`` round-loop config."""
+        if isinstance(cfg, async_fl.AsyncFLConfig):
+            return cfg.replace(base=self.resolve_config(cfg.base))
         return cfg.replace(
             compressor=self.resolve_compressor(cfg.compressor),
             local_solver=self.resolve_local_solver(cfg.local_solver),
@@ -302,7 +317,9 @@ class Engine:
         through the fused pipeline (hfl / flat FL), and a sensor count the
         device count divides; every other cell keeps default placement.
         """
-        if not self.shard_clients or method in ("centralised", "scaffold"):
+        if not self.shard_clients or method in (
+            "centralised", "scaffold", "hfl-async"
+        ):
             return None
         devices = jax.devices()
         n_clients = stacked.train.shape[1]
@@ -428,11 +445,12 @@ class Engine:
         if store is not None:
             params0 = jax.tree_util.tree_map(lambda a: a[0, 0], out.pop("params"))
             store.publish(
-                cfg.rounds if publish_step is None else publish_step, params0
+                _base_cfg(cfg).rounds if publish_step is None else publish_step,
+                params0,
             )
         self._log(kind="run", method=method, label=label or method,
                   n_trials=s_n * p_n, wall_s=wall, fresh_compile=fresh,
-                  compressor=_describe_compressor(cfg.compressor),
+                  compressor=_describe_compressor(_base_cfg(cfg).compressor),
                   client_sharded=client_mesh is not None)
         return EngineRun(method, cfg, seeds, p_n, out, wall, fresh)
 
@@ -490,6 +508,11 @@ class Engine:
         differ only in compressor/solver/server statics collapse into one
         shape-class.
         """
+        if isinstance(cfg, async_fl.AsyncFLConfig):
+            raise ValueError(
+                "audit family is training-free and synchronous; it does "
+                "not support AsyncFLConfig cells"
+            )
         return cfg.replace(
             local_epochs=1,
             batch_size=32,
@@ -507,13 +530,14 @@ class Engine:
         pallas-backed config must keep them concrete, so they join the
         shape-class signature and are re-pinned inside the program.
         """
+        base = _base_cfg(cfg)
         knobs = {}
-        cc = cfg.compressor
+        cc = base.compressor
         if cc.enabled and cc.is_sparse and cc.mode == "blockwise" and cc.use_pallas:
             knobs["rho_s"] = float(cc.rho_s)
-        if cfg.local_solver.fused and cfg.local_solver.use_pallas:
-            knobs["lr"] = float(cfg.lr)
-            knobs["prox_mu"] = float(cfg.prox_mu)
+        if base.local_solver.fused and base.local_solver.use_pallas:
+            knobs["lr"] = float(base.lr)
+            knobs["prox_mu"] = float(base.prox_mu)
         return tuple(sorted(knobs.items()))
 
     def _sweep_classes(
@@ -631,17 +655,24 @@ class Engine:
                 def build(knobs=knobs, ds_axis=ds_axis):
                     def trial(cfg_, key, one_ds):
                         if knobs:
-                            # kernel-bound knobs stay concrete per class
-                            cfg_ = cfg_.replace(
-                                lr=knobs.get("lr", cfg_.lr),
-                                prox_mu=knobs.get("prox_mu", cfg_.prox_mu),
+                            # kernel-bound knobs stay concrete per class;
+                            # async cells carry them in the nested base.
+                            b = _base_cfg(cfg_)
+                            b = b.replace(
+                                lr=knobs.get("lr", b.lr),
+                                prox_mu=knobs.get("prox_mu", b.prox_mu),
                             )
                             if "rho_s" in knobs:
-                                cfg_ = cfg_.replace(
-                                    compressor=cfg_.compressor.replace(
+                                b = b.replace(
+                                    compressor=b.compressor.replace(
                                         rho_s=knobs["rho_s"]
                                     )
                                 )
+                            cfg_ = (
+                                cfg_.replace(base=b)
+                                if isinstance(cfg_, async_fl.AsyncFLConfig)
+                                else b
+                            )
                         return exp.trial_metrics(
                             method, key, one_ds, cfg_,
                             percentile=self.percentile,
@@ -689,7 +720,7 @@ class Engine:
             info = dict(
                 indices=tuple(idxs), n_cells=len(idxs), wall_s=wall,
                 fresh_compile=fresh,
-                compressor=_describe_compressor(rep.compressor),
+                compressor=_describe_compressor(_base_cfg(rep).compressor),
             )
             classes.append(info)
             wall_total += wall

@@ -28,8 +28,8 @@ from repro.kernels import fused_local_train as _flt
 from repro.kernels import fused_score as _fs
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
-from repro.kernels import topk_ef as _tk
 from repro.kernels import swa_attention as _swa
+from repro.kernels import topk_ef as _tk
 
 BLOCK_ELEMS = _tk.BLOCK_ELEMS
 

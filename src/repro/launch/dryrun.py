@@ -20,7 +20,6 @@ import time          # noqa: E402
 import traceback     # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro import configs                     # noqa: E402
 from repro.configs.base import SHAPES         # noqa: E402

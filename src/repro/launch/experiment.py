@@ -13,7 +13,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import anomaly, cooperation as coop, flat_fl, hfl
+from repro.core import anomaly, async_fl, flat_fl, hfl
+from repro.core import cooperation as coop
 from repro.core import topology as topo
 from repro.data.synthetic import SensorDataset
 from repro.models import autoencoder as ae
@@ -28,6 +29,7 @@ METHODS = (
     "hfl-selective",
     "hfl-nearest",
     "hfl-adam",
+    "hfl-async",
 )
 
 _RULES = {
@@ -79,7 +81,7 @@ def trial_metrics(
     method: str,
     key: jax.Array,
     ds: SensorDataset,
-    cfg: hfl.HFLConfig,
+    cfg: hfl.HFLConfig | async_fl.AsyncFLConfig,
     *,
     percentile: float = 99.0,
     point_adjusted: bool = False,
@@ -100,6 +102,14 @@ def trial_metrics(
 
     ``return_params``: include the trained model under ``"params"`` (used
     by ``Engine.run(store=...)`` to publish rounds for the serving path).
+
+    ``method="hfl-async"`` runs the event-driven staleness-aware family
+    (``core/async_fl``); ``cfg`` may then be an
+    :class:`repro.core.async_fl.AsyncFLConfig` (a plain ``HFLConfig`` is
+    wrapped with the async defaults).  Every branch also reports
+    ``sim_time_s`` — summed Eq. 21 round latency for the synchronous
+    loops, the final simulated clock for the async loop — so
+    accuracy-vs-simulated-wall-clock comparisons read one key.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; one of {METHODS}")
@@ -116,7 +126,27 @@ def trial_metrics(
         out = {
             "e_s2f": zero, "e_f2f": zero, "e_f2g": zero,
             "e_total": e_up, "participation": jnp.ones(()),
-            "coop_links": zero, "losses": losses,
+            "coop_links": zero, "losses": losses, "sim_time_s": zero,
+        }
+    elif method == "hfl-async":
+        acfg = (
+            cfg if isinstance(cfg, async_fl.AsyncFLConfig)
+            else async_fl.AsyncFLConfig(base=cfg)
+        )
+        params, m = async_fl.train(k_train, params0, ae.loss, ds, acfg)
+        arrived_f = m.n_arrived.astype(jnp.float32)
+        out = {
+            "e_total": jnp.sum(m.e_total),
+            "e_s2f": jnp.sum(m.e_s2f),
+            "e_f2f": jnp.sum(m.e_f2f),
+            "e_f2g": jnp.sum(m.e_f2g),
+            "participation": jnp.mean(m.participation),
+            "coop_links": jnp.mean(m.coop_links.astype(jnp.float32)),
+            "losses": m.loss,
+            "sim_time_s": m.t_sim[-1],
+            "merges": jnp.sum(m.merged.astype(jnp.float32)),
+            "staleness": jnp.sum(m.staleness * arrived_f)
+            / jnp.maximum(jnp.sum(arrived_f), 1.0),
         }
     else:
         if method in ("fedavg", "fedprox", "fedadam"):
@@ -148,6 +178,7 @@ def trial_metrics(
             "participation": jnp.mean(m.participation),
             "coop_links": jnp.mean(m.coop_links.astype(jnp.float32)),
             "losses": m.loss,
+            "sim_time_s": jnp.sum(m.latency_s),
         }
 
     f1 = _detector_eval(params, ds, percentile, point_adjusted)
@@ -160,7 +191,7 @@ def trial_metrics(
 def run_method(
     method: str,
     ds: SensorDataset,
-    cfg: hfl.HFLConfig,
+    cfg: hfl.HFLConfig | async_fl.AsyncFLConfig,
     seed: int = 0,
     percentile: float = 99.0,
     point_adjusted: bool = False,

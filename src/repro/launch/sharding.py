@@ -22,7 +22,8 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 # Order matters: prefer the big compute dims, fall back to head_dim.
 # "seq_shard" is an ACTIVATION-only logical name (sequence-parallel

@@ -12,8 +12,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
 from repro.kernels import ops as kops
+from repro.models import layers as L
 
 NEG_INF = -2.3819763e38  # min bf16-representable-ish; standard mask value
 

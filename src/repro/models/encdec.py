@@ -207,7 +207,10 @@ class DecodeCache(NamedTuple):
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                long_context: bool = False) -> DecodeCache:
     kv = attn.init_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
-    stack = lambda leaf: jnp.broadcast_to(leaf[None], (cfg.n_layers, *leaf.shape))
+
+    def stack(leaf):
+        return jnp.broadcast_to(leaf[None], (cfg.n_layers, *leaf.shape))
+
     t_a = cfg.n_audio_frames
     return DecodeCache(
         kv=jax.tree_util.tree_map(stack, kv),

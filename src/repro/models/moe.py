@@ -56,10 +56,11 @@ def _init_mlp(key: jax.Array, cfg: ModelConfig) -> MoEMLP:
     d, ffe, e = cfg.d_model, cfg.moe_hidden, cfg.n_experts
     shared = cfg.n_shared_experts > 0
     ffs = cfg.moe_hidden * cfg.n_shared_experts
-    init3 = lambda k, shape: (
-        (shape[1] ** -0.5)
-        * jax.random.normal(k, shape, jnp.float32)
-    ).astype(cfg.dtype)
+    def init3(k, shape):
+        return (
+            (shape[1] ** -0.5)
+            * jax.random.normal(k, shape, jnp.float32)
+        ).astype(cfg.dtype)
     return MoEMLP(
         w_router=(d**-0.5) * jax.random.normal(kr, (d, e), jnp.float32),
         w_gate=init3(kg, (e, d, ffe)),
@@ -243,7 +244,10 @@ class DecodeCache(NamedTuple):
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                long_context: bool = False) -> DecodeCache:
     kv = attn.init_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
-    stack = lambda leaf: jnp.broadcast_to(leaf[None], (cfg.n_layers, *leaf.shape))
+
+    def stack(leaf):
+        return jnp.broadcast_to(leaf[None], (cfg.n_layers, *leaf.shape))
+
     return DecodeCache(kv=jax.tree_util.tree_map(stack, kv))
 
 

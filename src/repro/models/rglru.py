@@ -232,12 +232,14 @@ def forward(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig) -> ja
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     for tp, mp in zip(params.temporal, params.mlps):
         if isinstance(tp, RecParams):
-            fn = lambda tpp, xx: _rec_apply(tpp, xx, cfg)[0]
+            def fn(tpp, xx):
+                return _rec_apply(tpp, xx, cfg)[0]
         else:
-            fn = lambda tpp, xx: xx + attn.full_attention(
-                tpp.attn, L.rms_norm(xx, tpp.ln), positions,
-                window=cfg.sliding_window, rope_theta=cfg.rope_theta,
-            )
+            def fn(tpp, xx):
+                return xx + attn.full_attention(
+                    tpp.attn, L.rms_norm(xx, tpp.ln), positions,
+                    window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+                )
         if cfg.remat:
             fn = jax.checkpoint(fn)
         x = fn(tp, x)

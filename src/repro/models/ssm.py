@@ -127,9 +127,9 @@ def ssd_chunked(
     h0: jax.Array | None = None,   # (b, h, n, p) initial state
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked SSD scan. Returns (y (b,l,h,p), final_state (b,h,n,p))."""
-    b, l, h, p = x.shape
+    b, sl, h, p = x.shape
     n = bmat.shape[-1]
-    nc = l // chunk
+    nc = sl // chunk
     q = chunk
 
     xr = x.reshape(b, nc, q, h, p)
@@ -174,7 +174,7 @@ def ssd_chunked(
     y_inter = jnp.einsum(
         "bcin,bcih,bchnp->bcihp", cr, jnp.exp(cum), hstart
     )
-    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = (y_intra + y_inter).reshape(b, sl, h, p)
     return y, hfin
 
 

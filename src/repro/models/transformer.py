@@ -14,7 +14,7 @@ activation-checkpoint memory profile.  Handles:
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -229,9 +229,10 @@ def init_cache(
         # the dry run; positions wrap via modulo in a real server).
         max_seq = min(max_seq, cfg.long_context_window)
     kv = attn.init_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
-    stack = lambda leaf: jnp.broadcast_to(
-        leaf[None], (cfg.n_layers, *leaf.shape)
-    )
+
+    def stack(leaf):
+        return jnp.broadcast_to(leaf[None], (cfg.n_layers, *leaf.shape))
+
     return DecodeCache(kv=jax.tree_util.tree_map(stack, kv))
 
 

@@ -1,3 +1,4 @@
+from repro.optim.scaffold import ScaffoldState, scaffold_local  # noqa: F401
 from repro.optim.sgd import (  # noqa: F401
     LocalTrainConfig,
     adam,
@@ -7,4 +8,3 @@ from repro.optim.sgd import (  # noqa: F401
     proximal_local_sgd,
     sgd,
 )
-from repro.optim.scaffold import ScaffoldState, scaffold_local  # noqa: F401

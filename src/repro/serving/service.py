@@ -33,7 +33,8 @@ from repro.checkpoint import CheckpointStore
 from repro.serving import calibrate as cal
 # Import the functions, not the submodule: the package __init__ re-exports
 # a function named `score`, which shadows the module attribute.
-from repro.serving.score import ScoreResult, score as _score
+from repro.serving.score import ScoreResult
+from repro.serving.score import score as _score
 
 
 @dataclasses.dataclass

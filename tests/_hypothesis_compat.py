@@ -9,7 +9,7 @@ only the ``@given`` property tests skip when hypothesis is missing.
 import pytest
 
 try:
-    from hypothesis import given, settings
+    from hypothesis import given, settings  # noqa: F401  (re-exported to tests)
     import hypothesis.strategies as st
 
     HAVE_HYPOTHESIS = True

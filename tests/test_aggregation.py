@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.core import aggregation as agg
 from repro.core import cooperation as coop

@@ -45,7 +45,8 @@ def test_full_config_matches_assignment(arch):
     spec = {
         "whisper_medium": dict(n_layers=24, d_model=1024, n_heads=16, vocab_size=51865),
         "qwen3_14b": dict(n_layers=40, d_model=5120, n_heads=40, vocab_size=151936),
-        "qwen2_moe_a2_7b": dict(n_layers=24, d_model=2048, n_heads=16, vocab_size=151936, n_experts=60),
+        "qwen2_moe_a2_7b": dict(n_layers=24, d_model=2048, n_heads=16,
+                                vocab_size=151936, n_experts=60),
         "grok_1_314b": dict(n_layers=64, d_model=6144, n_heads=48, vocab_size=131072, n_experts=8),
         "gemma2_27b": dict(n_layers=46, d_model=4608, n_heads=32, vocab_size=256000),
         "internvl2_26b": dict(n_layers=48, d_model=6144, n_heads=48, vocab_size=92553),

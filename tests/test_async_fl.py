@@ -1,0 +1,227 @@
+"""Tests for the event-driven async family (core/async_fl, PR 6).
+
+The acceptance pin lives here: ``async_fl.sync_limit`` must reproduce
+``hfl.train`` round-for-round to float tolerance — that equivalence is
+what lets the async loop share the fused local-train and compress kernels
+with the synchronous families without a parallel numerics audit.  The
+rest covers the genuinely-async semantics (staleness discounting, version
+counting, decoupled fog/global cadence) and the Engine integration
+(fourth family, one compiled program per sweep shape-class).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro import engine as eng_mod
+from repro.core import async_fl, hfl
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+from repro.launch import experiment as exp
+from repro.models import autoencoder as ae
+
+N_SENSORS = 12
+N_FOG = 3
+
+
+def _make_ds(seed: int = 0):
+    cfg = SyntheticConfig(
+        n_sensors=N_SENSORS, train_len=48, val_len=24, test_len=48
+    )
+    return normalize(generate(jax.random.key(seed), cfg))
+
+
+def _base_cfg(**kw):
+    kw.setdefault("rounds", 3)
+    kw.setdefault("local_epochs", 1)
+    return exp.make_config(n_sensors=N_SENSORS, n_fog=N_FOG, **kw)
+
+
+def _async_cfg(**kw):
+    kw.setdefault("base", _base_cfg())
+    kw.setdefault("n_events", 8)
+    kw.setdefault("buffer_k", 4.0)
+    kw.setdefault("fog_k", 1.0)
+    kw.setdefault("alpha", 0.5)
+    return async_fl.AsyncFLConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return _make_ds(0)
+
+
+@pytest.fixture(scope="module")
+def params0(ds):
+    return ae.init(jax.random.key(1), ds.train.shape[-1], (16, 8, 16))
+
+
+# ---------------------------------------------------------------------------
+# The acceptance pin: sync limiting case == Algorithm 1.
+# ---------------------------------------------------------------------------
+
+def test_sync_limit_reproduces_hfl_train(ds, params0):
+    """fog_k = buffer_k = N, alpha = 0, timeouts never: every event is one
+    synchronous round, bit-comparable to ``hfl.train``."""
+    cfg = _base_cfg(rounds=3)
+    key = jax.random.key(5)
+
+    p_sync, m_sync = hfl.train(key, params0, ae.loss, ds, cfg)
+    p_async, m_async = async_fl.train(
+        key, params0, ae.loss, ds, async_fl.sync_limit(cfg)
+    )
+
+    flat_s, _ = ravel_pytree(p_sync)
+    flat_a, _ = ravel_pytree(p_async)
+    np.testing.assert_allclose(
+        np.asarray(flat_a), np.asarray(flat_s), rtol=1e-5, atol=1e-6
+    )
+    # The shared metric block matches RoundMetrics term for term.
+    for field in hfl.RoundMetrics._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(m_async, field)),
+            np.asarray(getattr(m_sync, field)),
+            rtol=1e-4, atol=1e-6, err_msg=field,
+        )
+    # Every tick is a round: all merge, none are stale.
+    assert bool(jnp.all(m_async.merged))
+    np.testing.assert_array_equal(np.asarray(m_async.staleness), 0.0)
+
+
+def test_sync_limit_through_run_method(ds):
+    """Engine-facing equivalence: the async family in its sync limit
+    reports the same detector quality as ``hfl-selective``."""
+    cfg = _base_cfg(rounds=2)
+    r_sync = exp.run_method("hfl-selective", ds, cfg, seed=3)
+    r_async = exp.run_method(
+        "hfl-async", ds, async_fl.sync_limit(cfg), seed=3
+    )
+    assert r_async.f1 == pytest.approx(r_sync.f1, abs=1e-6)
+    assert r_async.e_total == pytest.approx(r_sync.e_total, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Genuinely asynchronous semantics.
+# ---------------------------------------------------------------------------
+
+def test_async_run_produces_staleness_and_merges(ds, params0):
+    acfg = _async_cfg(n_events=10, alpha=1.0)
+    _, m = async_fl.train(jax.random.key(2), params0, ae.loss, ds, acfg)
+
+    assert bool(jnp.any(m.merged)), "no global merge in 10 events"
+    # With fog_k=1 and a small buffer some updates must arrive late.
+    assert float(jnp.max(m.staleness)) > 0.0
+    # The simulated clock is monotone and finite.
+    t = np.asarray(m.t_sim)
+    assert np.all(np.isfinite(t)) and np.all(np.diff(t) >= 0.0)
+    assert np.all(np.isfinite(np.asarray(m.loss)))
+
+
+def test_version_advances_only_on_effective_merges(ds, params0):
+    """The global version counts model *movements*: it can never exceed
+    the number of merge ticks that actually carried weight."""
+    acfg = _async_cfg(n_events=12)
+    state = async_fl.init_state(jax.random.key(4), params0, acfg)
+    event_fn = async_fl.make_event_fn(ae.loss, ds, acfg)
+    final, m = jax.lax.scan(event_fn, state, None, length=acfg.n_events)
+
+    n_merges = int(jnp.sum(m.merged.astype(jnp.int32)))
+    assert int(final.version) <= n_merges
+    assert int(final.version) > 0
+    # Staleness tau is bounded by the version distance.
+    assert float(jnp.max(m.staleness)) <= float(final.version)
+
+
+def test_fog_cadence_decoupled_from_global(ds, params0):
+    """fog_k only paces the fog ticks — the same buffer_k merges either
+    way, but waiting for more arrivals per tick changes WHEN."""
+    fast = _async_cfg(n_events=8, fog_k=1.0)
+    slow = _async_cfg(n_events=8, fog_k=6.0)
+    _, m_fast = async_fl.train(jax.random.key(6), params0, ae.loss, ds, fast)
+    _, m_slow = async_fl.train(jax.random.key(6), params0, ae.loss, ds, slow)
+    # Waiting for the 6th arrival folds more updates per typical tick
+    # (a merge-propagation clock jump can batch arrivals even at fog_k=1,
+    # so compare the mean, not the max).
+    assert float(jnp.mean(m_slow.n_arrived.astype(jnp.float32))) > float(
+        jnp.mean(m_fast.n_arrived.astype(jnp.float32))
+    )
+    # ...and both remain valid simulations.
+    assert bool(jnp.any(m_fast.merged)) and bool(jnp.any(m_slow.merged))
+
+
+def test_async_beats_sync_limit_on_event_time(ds, params0):
+    """The family's reason to exist: merging on the buffer_k fastest
+    paths advances the clock less per merge than waiting for the fleet."""
+    base = _base_cfg(rounds=3)
+    sync = async_fl.sync_limit(base)
+    acfg = async_fl.AsyncFLConfig(
+        base=base, n_events=9, buffer_k=4.0, fog_k=1.0, alpha=0.5
+    )
+    _, m_sync = async_fl.train(jax.random.key(8), params0, ae.loss, ds, sync)
+    _, m_async = async_fl.train(jax.random.key(8), params0, ae.loss, ds, acfg)
+
+    per_merge_sync = float(m_sync.t_sim[-1]) / max(
+        float(jnp.sum(m_sync.merged.astype(jnp.float32))), 1.0
+    )
+    per_merge_async = float(m_async.t_sim[-1]) / max(
+        float(jnp.sum(m_async.merged.astype(jnp.float32))), 1.0
+    )
+    assert per_merge_async < per_merge_sync
+
+
+def test_timeout_forces_merge(ds, params0):
+    """A tiny global timeout merges every tick even when the buffer never
+    fills."""
+    acfg = _async_cfg(n_events=6, buffer_k=1e6, timeout_s=1e-3)
+    _, m = async_fl.train(jax.random.key(9), params0, ae.loss, ds, acfg)
+    assert bool(jnp.all(m.merged))
+
+
+# ---------------------------------------------------------------------------
+# Pytree / sweep contract.
+# ---------------------------------------------------------------------------
+
+def test_config_is_registered_pytree_with_static_n_events():
+    a = _async_cfg(alpha=0.25, n_events=8)
+    b = _async_cfg(alpha=0.75, n_events=8)
+    # Same treedef (n_events is aux) -> stackable along a config axis.
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]), a, b
+    )
+    assert float(jnp.asarray(stacked.alpha)[1]) == 0.75
+    # A different n_events is a different shape-class.
+    c = _async_cfg(alpha=0.25, n_events=9)
+    _, tc = jax.tree_util.tree_flatten(c)
+    assert tc != ta
+
+
+def test_engine_sweep_one_program_for_alpha_grid():
+    """alpha x buffer_k cells share one treedef -> ONE compiled program,
+    each cell matching its own Engine.run to float tolerance."""
+    eng = eng_mod.Engine()
+    base = _base_cfg(rounds=2)
+    cfgs = [
+        _async_cfg(base=base, n_events=6, alpha=a, buffer_k=k)
+        for a in (0.0, 0.5) for k in (3.0, 6.0)
+    ]
+    sw = eng.sweep("hfl-async", cfgs, (0, 1), _make_ds)
+    assert sw.n_classes == 1
+    assert sw.compiled_programs == 1
+    for i in (0, 3):
+        r = eng.run("hfl-async", cfgs[i], (0, 1), _make_ds)
+        np.testing.assert_allclose(
+            np.asarray(sw["f1"][i]), np.asarray(r["f1"]), rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(sw["sim_time_s"][i]), np.asarray(r["sim_time_s"]),
+            rtol=1e-5,
+        )
+
+
+def test_audit_family_rejects_async_config():
+    eng = eng_mod.Engine()
+    with pytest.raises(ValueError, match="audit"):
+        eng.run("audit", _async_cfg(), (0,), _make_ds)

@@ -1,0 +1,183 @@
+"""Unit tests for the CI bench gates (satellites of PR 6).
+
+The gates run in CI against freshly generated JSONs; these tests pin the
+``compare`` contracts themselves on synthetic fixtures — a passing pair,
+a regressed pair, and the vanished-row case — so a gate refactor cannot
+silently stop failing.  Also covers the ``benchmarks.run --only``
+typo handling and the step-summary delta table.
+"""
+import pytest
+
+from benchmarks import (
+    bench_summary,
+    check_async_bench,
+    check_kernel_micro,
+    check_sweep_compile,
+)
+from benchmarks import run as bench_run
+
+
+# ---------------------------------------------------------------------------
+# check_kernel_micro.compare (shared by check_serve_bench)
+# ---------------------------------------------------------------------------
+
+def _kernel_json(us_ref: float) -> dict:
+    return {"rows": [{"n": 1024, "us_ref": us_ref}]}
+
+
+def test_kernel_gate_passes_within_threshold():
+    failures = check_kernel_micro.compare(
+        _kernel_json(120.0), _kernel_json(100.0), threshold=3.0
+    )
+    assert failures == []
+
+
+def test_kernel_gate_trips_on_regression():
+    failures = check_kernel_micro.compare(
+        _kernel_json(400.0), _kernel_json(100.0), threshold=3.0
+    )
+    assert len(failures) == 1
+    assert "us_ref" in failures[0]
+
+
+def test_kernel_gate_fails_loudly_on_missing_row():
+    fresh = {"rows": []}  # the refactor dropped the cell
+    failures = check_kernel_micro.compare(
+        fresh, _kernel_json(100.0), threshold=3.0
+    )
+    assert failures and "missing" in failures[0]
+
+
+def test_kernel_gate_skips_baseline_without_metric():
+    """A baseline predating the metric is 'no trend yet', not a failure."""
+    failures = check_kernel_micro.compare(
+        _kernel_json(100.0), {"rows": [{"n": 1024}]}, threshold=3.0
+    )
+    assert failures == []
+
+
+# ---------------------------------------------------------------------------
+# check_sweep_compile.compare
+# ---------------------------------------------------------------------------
+
+def _sweep_json(programs: int, cells: int = 8) -> dict:
+    return {"engine": {
+        "sweep_compiled_programs": programs, "sweep_cells": cells,
+    }}
+
+
+def test_sweep_gate_passes_on_equal_counts():
+    assert check_sweep_compile.compare(_sweep_json(1), _sweep_json(1)) == []
+
+
+def test_sweep_gate_trips_on_per_cell_fallback():
+    failures = check_sweep_compile.compare(_sweep_json(8), _sweep_json(1))
+    assert failures and "fallback" in failures[0]
+
+
+def test_sweep_gate_trips_on_shrunk_coverage():
+    failures = check_sweep_compile.compare(
+        _sweep_json(1, cells=2), _sweep_json(1, cells=8)
+    )
+    assert failures and "shrank" in failures[0]
+
+
+def test_sweep_gate_fails_loudly_on_missing_engine_block():
+    failures = check_sweep_compile.compare({}, _sweep_json(1))
+    assert failures and "missing" in failures[0]
+
+
+# ---------------------------------------------------------------------------
+# check_async_bench.compare
+# ---------------------------------------------------------------------------
+
+def _async_json(
+    s_per_merge: float = 4.0,
+    speedup: float = 1.1,
+    f1: float = 0.9,
+    sync_s: float = 4.5,
+) -> dict:
+    return {
+        "sync": {"sim_s_per_round": sync_s},
+        "rows": [{
+            "alpha": 0.5, "buffer_frac": 0.25,
+            "sim_s_per_merge": s_per_merge,
+            "speedup_vs_sync": speedup,
+            "f1_mean": f1,
+        }],
+    }
+
+
+def test_async_gate_passes_within_threshold():
+    failures = check_async_bench.compare(_async_json(), _async_json())
+    assert failures == []
+
+
+def test_async_gate_trips_on_throughput_regression():
+    failures = check_async_bench.compare(
+        _async_json(s_per_merge=8.0), _async_json(), threshold=1.25
+    )
+    assert any("sim_s_per_merge" in f for f in failures)
+
+
+def test_async_gate_trips_on_shrunk_speedup():
+    failures = check_async_bench.compare(
+        _async_json(speedup=0.7), _async_json(speedup=1.1), threshold=1.25
+    )
+    assert any("speedup_vs_sync" in f for f in failures)
+
+
+def test_async_gate_trips_on_f1_drop():
+    failures = check_async_bench.compare(
+        _async_json(f1=0.7), _async_json(f1=0.9), f1_tol=0.08
+    )
+    assert any("f1_mean" in f for f in failures)
+
+
+def test_async_gate_trips_on_sync_baseline_regression():
+    """A latency-model slowdown that hits BOTH paths hides in the speedup
+    ratio — the sync row's own ratio check is what catches it."""
+    failures = check_async_bench.compare(
+        _async_json(sync_s=9.0), _async_json(sync_s=4.5)
+    )
+    assert any("sync.sim_s_per_round" in f for f in failures)
+
+
+def test_async_gate_fails_loudly_on_missing_row():
+    fresh = {"sync": {"sim_s_per_round": 4.5}, "rows": []}
+    failures = check_async_bench.compare(fresh, _async_json())
+    assert any("missing" in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run --only validation + step-summary table
+# ---------------------------------------------------------------------------
+
+def test_run_only_rejects_typo_with_usage(monkeypatch, capsys):
+    monkeypatch.setattr(
+        "sys.argv", ["run.py", "--only", "async_bnech"]
+    )
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 2  # argparse usage error, not a traceback
+    err = capsys.readouterr().err
+    assert "unknown benchmark module" in err
+    assert "async_bench" in err  # the valid choices are listed
+
+
+def test_bench_summary_builds_delta_rows(tmp_path):
+    import json
+
+    fresh_dir = tmp_path / "fresh"
+    base_dir = tmp_path / "base"
+    fresh_dir.mkdir()
+    base_dir.mkdir()
+    (base_dir / "async_bench.json").write_text(json.dumps(_async_json()))
+    (fresh_dir / "async_bench.json").write_text(
+        json.dumps(_async_json(s_per_merge=4.4))
+    )
+    rows = bench_summary.delta_rows(str(fresh_dir), str(base_dir))
+    tagged = [r for r in rows if r[0] == "async_bench" and r[2] == "sim_s_per_merge"]
+    assert tagged, f"no async delta rows in {rows}"
+    md = bench_summary.markdown(rows)
+    assert "|" in md and "sim_s_per_merge" in md

@@ -3,9 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest  # noqa: F401
-
 from _hypothesis_compat import given, settings, st  # noqa: F401
-
 
 from repro.core import compression as comp
 

@@ -2,9 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest  # noqa: F401
-
 from _hypothesis_compat import given, settings, st  # noqa: F401
-
 
 from repro.core import channel as ch
 from repro.core import energy as en

@@ -6,7 +6,6 @@ exercise resolve_spec through a lightweight stand-in mesh object with the
 production shapes (the function only reads .shape and .axis_names).
 """
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch import sharding as sh

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import compression as comp
-from repro.core import hfl, topology as topo
+from repro.core import hfl
+from repro.core import topology as topo
 from repro.data.synthetic import SyntheticConfig, generate, normalize
 from repro.launch import experiment as exp
 
