@@ -27,10 +27,14 @@ TABLE_SPECS: dict[str, tuple] = {
         ("rows", ("alpha", "buffer_frac"), "speedup_vs_sync"),
         ("rows", ("alpha", "buffer_frac"), "f1_mean"),
     ),
+    "robustness_bench": (
+        ("rows", ("robust", "byz_frac", "erasure"), "f1_mean"),
+        ("rows", ("robust", "byz_frac", "erasure"), "nonfinite_rounds"),
+    ),
 }
 
 # jsons whose ``engine`` block (sweep compile accounting) is summarised.
-ENGINE_JSONS = ("fig6_energy", "ablations", "async_bench")
+ENGINE_JSONS = ("fig6_energy", "ablations", "async_bench", "robustness_bench")
 
 
 def _load(path: str) -> dict | None:

@@ -1,0 +1,167 @@
+"""Trend gate for the robustness benchmark (sibling of
+``check_async_bench`` / ``check_sweep_compile``).
+
+  python -m benchmarks.check_robustness_bench FRESH.json BASELINE.json
+
+Four contracts, all on DETERMINISTIC simulated quantities:
+
+* robust holds: every zero-erasure trimmed/median row stays within
+  ``--f1-tol`` of the clean-mean baseline row (fresh-internal AND vs the
+  committed baseline);
+* mean collapses: the attacked plain-mean row must sit at least
+  ``--degrade-margin`` below the clean row — if the attack stops hurting
+  the mean, the benchmark no longer demonstrates anything;
+* graceful degradation: every row reports ZERO non-finite global-model
+  rounds, and every erased row (except the attacked mean, which is
+  already collapsed by design) stays within ``--erasure-tol`` of its
+  zero-erasure sibling (smooth, no cliff);
+* one program per shape-class: the sweep compiled at most ``n_classes``
+  programs for the whole grid (the config-axis batching contract).
+
+A vanished row fails loudly, exactly like the other gates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+F1_TOL = 0.12
+DEGRADE_MARGIN = 0.25
+ERASURE_TOL = 0.15
+
+
+def _key(row: dict) -> tuple:
+    return (row["robust"], row["byz_frac"], row["erasure"])
+
+
+def _rows(res: dict) -> dict:
+    return {_key(r): r for r in res.get("rows", [])}
+
+
+def compare(
+    fresh: dict,
+    baseline: dict,
+    f1_tol: float = F1_TOL,
+    degrade_margin: float = DEGRADE_MARGIN,
+    erasure_tol: float = ERASURE_TOL,
+) -> list[str]:
+    failures = []
+    fresh_rows, base_rows = _rows(fresh), _rows(baseline)
+
+    def tag(key):
+        return f"rows[{key[0]},byz={key[1]:g},er={key[2]:g}]"
+
+    # Every baseline row must still exist.
+    for key in base_rows:
+        if key not in fresh_rows:
+            failures.append(f"{tag(key)}: missing from the fresh JSON")
+    clean_key = ("mean", 0.0, 0.0)
+    clean = fresh_rows.get(clean_key)
+    if clean is None:
+        failures.append(f"{tag(clean_key)}: missing — nothing to anchor on")
+        return failures
+
+    attacked = [k for k in fresh_rows if k[1] > 0.0]
+    if not attacked:
+        failures.append("no attacked (byz_frac > 0) rows in the fresh JSON")
+
+    for key, row in sorted(fresh_rows.items()):
+        robust, byz, er = key
+        f1 = row["f1_mean"]
+        # Zero NaN rounds, everywhere — the graceful-degradation contract.
+        if row.get("nonfinite_rounds", 0.0) != 0.0:
+            failures.append(
+                f"{tag(key)}: {row['nonfinite_rounds']:g} non-finite "
+                "global-model round(s)"
+            )
+        if robust in ("trimmed", "median") and er == 0.0:
+            # Robust rules hold F1 under attack.
+            line = (f"{tag(key)}.f1_mean: {f1:.3f} vs clean "
+                    f"{clean['f1_mean']:.3f}")
+            if clean["f1_mean"] - f1 > f1_tol:
+                failures.append(f"{line} (dropped > {f1_tol})")
+            else:
+                print(f"ok   {line}")
+        elif robust == "mean" and byz > 0.0 and er == 0.0:
+            # The attack must demonstrably collapse the plain mean.
+            line = (f"{tag(key)}.f1_mean: {f1:.3f} vs clean "
+                    f"{clean['f1_mean']:.3f}")
+            if clean["f1_mean"] - f1 < degrade_margin:
+                failures.append(
+                    f"{line} (mean no longer degrades by {degrade_margin})"
+                )
+            else:
+                print(f"ok   {line} (collapsed, as the benchmark requires)")
+        elif er > 0.0 and not (robust == "mean" and byz > 0.0):
+            # Erasure degrades smoothly vs the zero-erasure sibling.  With
+            # BOTH faults on, erasure can leave a fog majority-Byzantine
+            # among delivered packets — beyond any trim's breakdown point —
+            # so the contract there is bounded degradation, not immunity.
+            sib = fresh_rows.get((robust, byz, 0.0))
+            if sib is not None:
+                line = (f"{tag(key)}.f1_mean: {f1:.3f} vs er=0 "
+                        f"{sib['f1_mean']:.3f}")
+                if sib["f1_mean"] - f1 > erasure_tol:
+                    failures.append(f"{line} (erasure cliff > {erasure_tol})")
+                else:
+                    print(f"ok   {line}")
+        # vs the committed baseline: robust + clean rows must not drift
+        # down (a lower attacked-mean F1 is not a regression — collapsing
+        # harder is fine, the margin check above owns that direction).
+        base_row = base_rows.get(key)
+        if base_row is not None and not (robust == "mean" and byz > 0.0):
+            line = (f"{tag(key)}.f1_mean: baseline "
+                    f"{base_row['f1_mean']:.3f} -> {f1:.3f}")
+            if base_row["f1_mean"] - f1 > f1_tol:
+                failures.append(f"{line} (dropped > {f1_tol})")
+            else:
+                print(f"ok   {line}")
+
+    # One compiled program per robust-mode shape-class.
+    eng = fresh.get("engine") or {}
+    n_classes = fresh.get("n_classes")
+    if eng and n_classes:
+        compiled = eng.get("sweep_compiled_programs")
+        cells = eng.get("sweep_cells")
+        line = (f"engine: {compiled} compiled program(s) for {cells} cells, "
+                f"{n_classes} shape-classes")
+        if compiled is None or compiled > n_classes:
+            failures.append(f"{line} (config-axis batching regressed)")
+        else:
+            print(f"ok   {line}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated robustness_bench.json")
+    ap.add_argument("baseline",
+                    help="committed baseline robustness_bench.json")
+    ap.add_argument("--f1-tol", type=float, default=F1_TOL)
+    ap.add_argument("--degrade-margin", type=float, default=DEGRADE_MARGIN)
+    ap.add_argument("--erasure-tol", type=float, default=ERASURE_TOL)
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(
+        fresh, baseline, args.f1_tol, args.degrade_margin, args.erasure_tol
+    )
+    if failures:
+        print("ROBUSTNESS REGRESSION:")
+        for line in failures:
+            print(f"FAIL {line}")
+        print(
+            "If this PR intentionally changed the fault model, the robust "
+            "aggregators, or their scales, regenerate the baseline: "
+            "PYTHONPATH=src python -m benchmarks.run --only robustness_bench"
+        )
+        return 1
+    print("robustness_bench within tolerance of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""Robustness benchmark: Byzantine attacks + lossy links vs aggregation rule.
+
+Measures the claim behind ``core/faults`` + the robust aggregation path:
+under a >=20% Byzantine fleet a plain weighted-mean aggregate collapses the
+detector, while the coordinate-wise trimmed mean / weighted median hold F1
+within tolerance of the clean run — and packet erasure degrades the
+detector smoothly (no NaN rounds, no cliff) because lost packets only
+withdraw aggregation weight.
+
+The grid is ``robust in (mean, trimmed, median) x byz_frac in (0, ATTACK)
+x erasure in (0, EROSION)`` — 12 cells.  Every cell shares the fault-layer
+statics (``byz_mode`` pins the layer active even at ``byz_frac=0``), so
+the whole grid compiles as ONE program per robust mode (3 shape-classes);
+``engine.sweep_compiled_programs`` in the JSON is the proof the CI gate
+(``benchmarks/check_robustness_bench``) pins, alongside the F1 contracts
+above, against the committed ``experiments/bench/robustness_bench.json``.
+
+The attack is ``gauss`` noise at ``byz_scale=20`` — strong enough that the
+mean demonstrably collapses at quick scale, while staying finite (the
+non-finite guard is exercised separately by the test suite).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import faults as flt
+from repro.launch import experiment as exp
+
+METHOD = "hfl-selective"
+ROBUST = ("mean", "trimmed", "median")
+BYZ_FRACS = (0.0, 0.25)          # >= 20% Byzantine clients when attacked
+ERASURES = (0.0, 0.3)
+BYZ_MODE = "gauss"
+BYZ_SCALE = 20.0
+TRIM_FRAC = 0.45                 # > per-fog Byzantine weight share, with
+                                 # headroom for erasure concentrating it
+
+
+def _cells(scale: common.Scale):
+    n = scale.train_n[50]
+    base = exp.make_config(
+        n_sensors=n, n_fog=max(4, n // 6),
+        rounds=scale.rounds, local_epochs=scale.local_epochs,
+    )
+    keys, cfgs = [], []
+    for robust in ROBUST:
+        for byz in BYZ_FRACS:
+            for er in ERASURES:
+                keys.append((robust, byz, er))
+                cfgs.append(base.replace(
+                    robust=robust,
+                    trim_frac=TRIM_FRAC if robust == "trimmed" else 0.0,
+                    faults=flt.FaultConfig(
+                        erasure_prob=er, byz_frac=byz,
+                        byz_scale=BYZ_SCALE, byz_mode=BYZ_MODE,
+                    ),
+                ))
+    return n, keys, cfgs
+
+
+def run(scale: common.Scale) -> dict:
+    eng = common.get_engine()
+    eng.take_log()  # drop entries from earlier modules
+    n, keys, cfgs = _cells(scale)
+
+    def ds_fn(s):
+        return common.make_dataset(700 + s, n, scale)
+
+    sw = eng.sweep(METHOD, cfgs, scale.seeds, ds_fn,
+                   label="robustness:attack-grid")
+    rows = []
+    for i, (robust, byz, er) in enumerate(keys):
+        f1m, f1sd = sw.seed_mean_std("f1", i)
+        rows.append(dict(
+            robust=robust,
+            byz_frac=byz,
+            erasure=er,
+            byz_mode=BYZ_MODE,
+            byz_scale=BYZ_SCALE,
+            trim_frac=TRIM_FRAC if robust == "trimmed" else 0.0,
+            f1_mean=f1m, f1_std=f1sd,
+            nonfinite_rounds=float(jnp.sum(sw["nonfinite_rounds"][i])),
+            nonfinite_total=float(jnp.sum(sw["nonfinite_total"][i])),
+            erased_total=float(jnp.mean(sw["erased_total"][i])),
+            e_total_mean=float(jnp.mean(sw["e_total"][i])),
+        ))
+    return {
+        "method": METHOD,
+        "n_sensors": n,
+        "seeds": list(scale.seeds),
+        "n_classes": sw.n_classes,
+        "rows": rows,
+        "engine": common.engine_snapshot(eng.take_log()),
+    }
+
+
+def _row(res: dict, robust: str, byz: float, er: float) -> dict | None:
+    for r in res["rows"]:
+        if (r["robust"], r["byz_frac"], r["erasure"]) == (robust, byz, er):
+            return r
+    return None
+
+
+def report(res: dict) -> str:
+    clean = _row(res, "mean", 0.0, 0.0)
+    lines = [
+        "robustness_bench — Byzantine attack x erasure x aggregation rule "
+        f"(N={res['n_sensors']}, {len(res['seeds'])} seeds, "
+        f"{res['rows'][0]['byz_mode']}@{res['rows'][0]['byz_scale']:g})",
+        f"clean mean baseline: F1 {clean['f1_mean']:.3f}"
+        f"±{clean['f1_std']:.3f}",
+        f"{'robust':>8} {'byz':>5} {'erase':>6} {'F1':>13} "
+        f"{'erased':>7} {'nan-rounds':>10}",
+    ]
+    for r in res["rows"]:
+        lines.append(
+            f"{r['robust']:>8} {r['byz_frac']:>5g} {r['erasure']:>6g} "
+            f"{r['f1_mean']:.3f}±{r['f1_std']:.3f} "
+            f"{r['erased_total']:>7.1f} {r['nonfinite_rounds']:>10g}"
+        )
+    eng = res.get("engine")
+    if eng:
+        lines.append(
+            f"engine: {eng['sweep_compiled_programs']} compiled program(s) "
+            f"for {eng['sweep_cells']} grid cells "
+            f"({res['n_classes']} robust-mode shape-classes), "
+            f"{eng['wall_s_total']:.1f}s batched wall"
+        )
+    return "\n".join(lines)

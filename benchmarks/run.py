@@ -27,6 +27,7 @@ MODULES = (
     "serve_bench",
     "roofline",
     "async_bench",
+    "robustness_bench",
 )
 
 

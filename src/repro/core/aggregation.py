@@ -69,7 +69,19 @@ def compress_and_accumulate(
 
     Returns (fog_sum (n_fog, d) = sum_{i in C_m} w_i recon_i,
     fog_weight (n_fog,) = sum_{i in C_m} w_i, new_err (N, d)).
+
+    Graceful degradation: rows carrying any NaN/Inf (a diverging or
+    malicious client) are zeroed — delta, EF buffer AND weight — before
+    they touch the fog sums, so one poisoned client can never NaN the
+    global model.  Always on, independent of the fault layer; a no-op
+    (bit-identical ``where(true, x, _)``) for finite inputs.
     """
+    finite = jnp.all(jnp.isfinite(deltas), axis=-1) & jnp.all(
+        jnp.isfinite(err), axis=-1
+    )
+    deltas = jnp.where(finite[:, None], deltas, 0.0)
+    err = jnp.where(finite[:, None], err, 0.0)
+    weights = weights * finite.astype(weights.dtype)
     fog_weight = jax.ops.segment_sum(weights, fog_id, num_segments=n_fog)
 
     # ``is_sparse`` is the STATIC sparsity predicate: rho_s itself may be a
@@ -136,6 +148,50 @@ def compress_and_aggregate(
         fog_weight = jax.lax.psum(fog_weight, axis)
     denom = jnp.maximum(fog_weight, 1e-12)
     return fog_sum / denom[:, None], fog_weight, new_err
+
+
+def robust_compress_and_aggregate(
+    deltas: jax.Array,      # (N, d) raw flat client updates
+    err: jax.Array,         # (N, d) error-feedback buffers
+    fog_id: jax.Array,      # (N,) int32 cluster assignment
+    weights: jax.Array,     # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    cfg: comp.CompressorConfig,
+    trim_frac: float | jax.Array,
+    mode: str,              # "trimmed" | "median"
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Byzantine-robust variant of :func:`compress_and_aggregate`.
+
+    Runs the SAME fused compress path but with per-client segments
+    (``fog_id = arange(N)``, unit weights — the async family's trick), so
+    each client's dequantised reconstruction stays addressable and the EF
+    buffer math is bit-identical to the mean path; the per-fog reduce is
+    then the coordinate-wise trimmed mean / median
+    (:func:`repro.kernels.ops.robust_aggregate`) instead of the weighted
+    sum.  At ``trim_frac == 0`` this reproduces the weighted mean to float
+    tolerance (summation order differs).
+
+    Returns (fog_update (n_fog, d) — NORMALISED robust aggregates —
+    fog_weight (n_fog,), new_err (N, d)).
+    """
+    n = deltas.shape[0]
+    recon, _, new_err = compress_and_accumulate(
+        deltas, err,
+        jnp.arange(n, dtype=jnp.int32), jnp.ones((n,), jnp.float32),
+        n, cfg,
+    )
+    # The isfinite guard above zeroed poisoned reconstructions; their
+    # aggregation weight must vanish too, or a zeroed row would still pull
+    # the order statistic toward zero.
+    finite = jnp.all(jnp.isfinite(deltas), axis=-1) & jnp.all(
+        jnp.isfinite(err), axis=-1
+    )
+    fog_out, fog_weight = kops.robust_aggregate(
+        recon, fog_id, weights * finite.astype(weights.dtype), n_fog,
+        trim_frac, mode,
+        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+    )
+    return fog_out, fog_weight, new_err
 
 
 def cooperative_mix(fog_models: Any, decision: CoopDecision) -> Any:

@@ -60,9 +60,11 @@ from repro.core import association as assoc
 from repro.core import compression as comp
 from repro.core import cooperation as coop
 from repro.core import energy as en
+from repro.core import faults as flt
 from repro.core import hfl
 from repro.core import topology as topo
 from repro.data.synthetic import SensorDataset
+from repro.kernels import ops as kops
 from repro.optim import server as srv
 
 Params = Any
@@ -81,13 +83,19 @@ class AsyncFLConfig:
 
     LEAVES (traceable, stackable along a config axis — see
     ``Engine.sweep``): ``buffer_k``, ``fog_k``, ``alpha``, ``timeout_s``,
-    ``fog_timeout_s`` plus everything swept inside the nested ``base``
-    config (lr, physics, ``rho_s``, ...).  ``n_events`` — the scan length
-    — is static aux data: configs that differ there belong to different
-    sweep shape-classes.
+    ``fog_timeout_s``, ``tau_max`` plus everything swept inside the nested
+    ``base`` config (lr, physics, ``rho_s``, faults, ...).  ``n_events`` —
+    the scan length — is static aux data: configs that differ there belong
+    to different sweep shape-classes.
 
     ``base.rounds`` is ignored by this family; ``n_events`` fog ticks are
     simulated instead (in the sync limit one tick == one round).
+
+    Staleness policy: arrivals are discounted by ``(1 + tau)^(-alpha)``,
+    and — the clipping policy on top — any update staler than ``tau_max``
+    global versions is DROPPED (weight 0) instead of merely discounted.
+    The default ``tau_max = NEVER_S`` keeps every update (the pure
+    discount path, numerically unchanged).
     """
 
     base: hfl.HFLConfig = hfl.HFLConfig()
@@ -97,6 +105,7 @@ class AsyncFLConfig:
     alpha: float | Any = 0.5             # staleness exponent in (1+tau)^(-alpha)
     timeout_s: float | Any = NEVER_S     # global merge timeout (sim seconds)
     fog_timeout_s: float | Any = NEVER_S  # fog tick timeout (sim seconds)
+    tau_max: float | Any = NEVER_S       # drop updates staler than this
 
     def replace(self, **kw: Any) -> "AsyncFLConfig":
         return dataclasses.replace(self, **kw)
@@ -104,6 +113,7 @@ class AsyncFLConfig:
 
 _ASYNC_CHILD_FIELDS = (
     "base", "buffer_k", "fog_k", "alpha", "timeout_s", "fog_timeout_s",
+    "tau_max",
 )
 _ASYNC_AUX_FIELDS = ("n_events",)
 
@@ -159,6 +169,9 @@ class AsyncEventMetrics(NamedTuple):
     participation: jax.Array
     coop_links: jax.Array     # active fog-to-fog exchanges (merge ticks)
     battery_min: jax.Array
+    n_nonfinite: jax.Array    # launched deltas carrying NaN/Inf (zeroed)
+    n_erased: jax.Array       # arrivals lost to packet erasure
+    global_finite: jax.Array  # bool — global params finite after this tick
     # --- async-specific ---
     merged: jax.Array         # bool — did the gateway merge this tick
     n_launched: jax.Array     # clients that started a job this tick
@@ -190,6 +203,13 @@ class AsyncState(NamedTuple):
     fog_sum: jax.Array        # (M, d) — staleness-weighted delta sums
     fog_w: jax.Array          # (M,) — buffered weight per fog
     fog_n: jax.Array          # (M,) int32 — buffered update count per fog
+    # Robust-aggregation buffers (``base.robust != "mean"`` only; degenerate
+    # (N, 0) / untouched otherwise): per-CLIENT weighted sums so the merge
+    # can reduce addressable per-client means with the trimmed/median
+    # statistic instead of the pre-summed fog buffers.
+    cli_sum: jax.Array        # (N, d_or_0) — weighted arrival sums
+    cli_w: jax.Array          # (N,) — accumulated arrival weight
+    cli_fog: jax.Array        # (N,) int32 — fog of the latest arrival
 
 
 def init_state(
@@ -224,6 +244,11 @@ def init_state(
         fog_sum=jnp.zeros((m, d), flat.dtype),
         fog_w=jnp.zeros((m,)),
         fog_n=jnp.zeros((m,), jnp.int32),
+        cli_sum=jnp.zeros(
+            (n, d if cfg.robust != "mean" else 0), flat.dtype
+        ),
+        cli_w=jnp.zeros((n,)),
+        cli_fog=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -236,9 +261,21 @@ def make_event_fn(
     cfg = acfg.base
     n_fog = cfg.deployment.n_fog
     clients_fn = hfl._client_train_fn(loss_fn, cfg)
+    if cfg.robust not in ("mean", "trimmed", "median"):
+        raise ValueError(
+            f"robust must be 'mean', 'trimmed' or 'median', got "
+            f"{cfg.robust!r}"
+        )
+    fl = cfg.faults
+    fault_on = fl.is_active       # STATIC: off => exact legacy event
 
     def event_fn(state: AsyncState, _) -> tuple[AsyncState, AsyncEventMetrics]:
-        key, k_mob, k_train = jax.random.split(state.key, 3)
+        if fault_on:
+            key, k_mob, k_train, k_byz, k_crash, k_erase = jax.random.split(
+                state.key, 6
+            )
+        else:
+            key, k_mob, k_train = jax.random.split(state.key, 3)
         dep = state.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
@@ -247,6 +284,12 @@ def make_event_fn(
         fa = assoc.nearest_feasible_fog(dep, cfg.channel)
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
+        if fault_on:
+            # A crashed client cannot launch this tick; packets it already
+            # has on the wire were sent before the crash and still travel.
+            active = active & ~flt.draw_crash(
+                k_crash, alive.shape[0], fl.crash_prob
+            )
         active_f = active.astype(jnp.float32)
 
         flat0, unravel = ravel_pytree(state.params)
@@ -261,6 +304,13 @@ def make_event_fn(
         launch = active & ~state.busy
         launch_f = launch.astype(jnp.float32)
         deltas, losses = clients_fn(state.params, ds.train, keys)
+        if fault_on:
+            # Byzantine corruption hits the raw delta before compression —
+            # the attacker controls what leaves the sensor.
+            deltas = flt.corrupt_deltas(k_byz, deltas, fl)
+        n_nonfinite = jnp.sum(
+            (launch & flt.nonfinite_rows(deltas)).astype(jnp.int32)
+        )
         # One segment per client keeps the same fused compress kernel while
         # leaving each compressed reconstruction addressable for its own
         # in-flight journey (weights fold in at MERGE time, when the
@@ -313,15 +363,27 @@ def make_event_fn(
         t_tick = jnp.maximum(t_tick, state.t_now)
 
         arrived = busy & (arrive_t <= t_tick)
-        arrived_f = arrived.astype(jnp.float32)
-        n_arrived = jnp.sum(arrived.astype(jnp.int32))
+        # Erasure strikes at DELIVERY: the packet travelled (launch energy
+        # was already charged, the EF buffer already advanced) but the fog
+        # never decodes it — the client slot frees up, nothing folds in.
+        if fault_on:
+            lost = arrived & flt.draw_erasure(k_erase, n, fl.erasure_prob)
+        else:
+            lost = jnp.zeros_like(arrived)
+        ok = arrived & ~lost
+        ok_f = ok.astype(jnp.float32)
+        n_arrived = jnp.sum(ok.astype(jnp.int32))
 
         # --- fold arrivals into the fog accumulators ---------------------
         # Staleness tau = versions the global model moved since the job's
-        # anchor; w(tau) = (1 + tau)^(-alpha) discounts late updates.
+        # anchor; w(tau) = (1 + tau)^(-alpha) discounts late updates, and
+        # the clipping policy drops anything staler than tau_max outright.
         tau = (state.version - base_version).astype(jnp.float32)
         w_tau = (1.0 + tau) ** (-jnp.asarray(acfg.alpha, jnp.float32))
-        w = ds.n_samples * w_tau * arrived_f
+        w_tau = jnp.where(
+            tau <= jnp.asarray(acfg.tau_max, jnp.float32), w_tau, 0.0
+        )
+        w = ds.n_samples * w_tau * ok_f
         fog_sum = state.fog_sum + jax.ops.segment_sum(
             inflight * w[:, None], launch_fog, num_segments=n_fog
         )
@@ -329,8 +391,17 @@ def make_event_fn(
             w, launch_fog, num_segments=n_fog
         )
         fog_n = state.fog_n + jax.ops.segment_sum(
-            arrived.astype(jnp.int32), launch_fog, num_segments=n_fog
+            ok.astype(jnp.int32), launch_fog, num_segments=n_fog
         )
+        if cfg.robust == "mean":
+            cli_sum, cli_w, cli_fog = state.cli_sum, state.cli_w, state.cli_fog
+        else:
+            # Per-client accumulation (w is zero for non-arrivals, so this
+            # is a masked add); summing these over a fog reproduces fog_sum,
+            # which is what makes trim 0 the weighted-mean equivalence.
+            cli_sum = state.cli_sum + inflight * w[:, None]
+            cli_w = state.cli_w + w
+            cli_fog = jnp.where(ok, launch_fog, state.cli_fog)
         pending = state.pending + n_arrived
         busy = busy & ~arrived
         arrive_t = jnp.where(arrived, NEVER_S, arrive_t)
@@ -352,9 +423,23 @@ def make_event_fn(
         # async analogue of the sync loop's round-active cluster sizes.
         decision = coop.decide(cfg.rule, dep.fog_pos, fog_n, cfg.channel)
         fog_has = fog_w > 0
-        fog_model = fog_sum / jnp.maximum(fog_w, 1e-12)[:, None] + flat0[None, :]
+        if cfg.robust == "mean":
+            fog_delta = fog_sum / jnp.maximum(fog_w, 1e-12)[:, None]
+            merge_w = fog_w
+        else:
+            # Robust reduce over the addressable per-client means: each
+            # client's buffered arrivals collapse to a weighted mean first
+            # (identical to its contribution to fog_sum), then the fog
+            # reduce is the trimmed/median statistic.
+            v_cli = cli_sum / jnp.maximum(cli_w, 1e-12)[:, None]
+            fog_delta, merge_w = kops.robust_aggregate(
+                v_cli, cli_fog, cli_w, n_fog, cfg.trim_frac, cfg.robust,
+                use_pallas=cfg.compressor.use_pallas,
+                interpret=cfg.compressor.interpret,
+            )
+        fog_model = fog_delta + flat0[None, :]
         mixed = agg.cooperative_mix(fog_model, decision)
-        merged_flat = agg.global_aggregate(mixed, fog_w, prev=flat0)
+        merged_flat = agg.global_aggregate(mixed, merge_w, prev=flat0)
         if cfg.server_opt == "adam":
             # FedAdam at the gateway; its state advances only on merges.
             incr, server_m = srv.adam_update(
@@ -419,6 +504,9 @@ def make_event_fn(
         fog_sum = jnp.where(merge, 0.0, fog_sum)
         fog_w = jnp.where(merge, 0.0, fog_w)
         fog_n = jnp.where(merge, 0, fog_n)
+        if cfg.robust != "mean":
+            cli_sum = jnp.where(merge, 0.0, cli_sum)
+            cli_w = jnp.where(merge, 0.0, cli_w)
         t_last_merge = jnp.where(merge, t_tick, state.t_last_merge)
         pending = jnp.where(merge, 0, pending)
 
@@ -435,10 +523,13 @@ def make_event_fn(
                 merge, jnp.sum(decision.cooperates.astype(jnp.int32)), 0
             ),
             battery_min=jnp.min(battery),
+            n_nonfinite=n_nonfinite,
+            n_erased=jnp.sum(lost.astype(jnp.int32)),
+            global_finite=jnp.all(jnp.isfinite(new_flat)),
             merged=merge,
             n_launched=jnp.sum(launch.astype(jnp.int32)),
             n_arrived=n_arrived,
-            staleness=jnp.sum(tau * arrived_f)
+            staleness=jnp.sum(tau * ok_f)
             / jnp.maximum(n_arrived.astype(jnp.float32), 1.0),
             event_s=event_s,
             t_sim=t_next,
@@ -463,6 +554,9 @@ def make_event_fn(
             fog_sum=fog_sum,
             fog_w=fog_w,
             fog_n=fog_n,
+            cli_sum=cli_sum,
+            cli_w=cli_w,
+            cli_fog=cli_fog,
         )
         return new_state, metrics
 

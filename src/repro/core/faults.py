@@ -1,0 +1,164 @@
+"""Fault injection for hostile acoustic deployments (ROADMAP scenario
+diversity: lossy links, crashing sensors, Byzantine clients).
+
+:class:`FaultConfig` is a registered pytree whose knobs are traceable
+sweep LEAVES — ``Engine.sweep`` grids attack fraction x erasure rate x
+trim fraction exactly like the physics knobs.  The static aux data is the
+Byzantine behaviour name plus ``active``, the static on/off predicate
+(mirroring ``CompressorConfig.sparse``): it is derived from concrete
+probabilities, pinned through flatten/unflatten so code can branch
+Python-side while the probabilities themselves are tracers, and — the
+part that matters for sweeps — can be pinned ``True`` on zero-valued
+cells so a robustness grid with a clean corner still co-batches into ONE
+shape-class.
+
+Semantics (threaded through all four round-loop families):
+
+* **Crash** — a per-round Bernoulli(``crash_prob``) draw removes a client
+  exactly like a dead battery: no training, no transmission, no energy.
+* **Byzantine** — the first ``floor(byz_frac * N)`` clients are
+  adversarial (a deterministic, traceable mask: the fraction can sweep
+  without re-tracing).  Their raw deltas are corrupted BEFORE
+  compression: ``sign_flip`` sends ``-byz_scale * delta``, ``gauss``
+  sends pure noise ``byz_scale * N(0, I)``, ``inflate`` sends
+  ``byz_scale * delta``.
+* **Erasure** — applied AFTER SNR feasibility: a feasible, transmitted
+  packet is lost with probability ``erasure_prob``.  The transmit energy
+  is still charged (real acoustics: the modem spent the joules whether or
+  not the fog decoded the frame) and the client's error-feedback buffer
+  still advances (the sender cannot know); only the aggregation weight
+  vanishes.  Erasures are surfaced per round as ``n_erased``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BYZ_MODES = ("none", "sign_flip", "gauss", "inflate")
+
+
+def _concrete(x: Any) -> bool:
+    return isinstance(x, (int, float))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Fault-injection knobs.  The probabilities and the attack scale are
+    pytree LEAVES (traceable/stackable); ``byz_mode`` and the derived
+    ``active`` predicate are static aux data."""
+
+    erasure_prob: float | Any = 0.0   # P(uplink packet lost | feasible)
+    crash_prob: float | Any = 0.0     # P(client crashes this round)
+    byz_frac: float | Any = 0.0       # fraction of adversarial clients
+    byz_scale: float | Any = 1.0      # attack magnitude (mode-dependent)
+    byz_mode: str = "none"            # none | sign_flip | gauss | inflate
+    active: bool | None = None        # static on/off predicate (None = derive)
+
+    def __post_init__(self) -> None:
+        if self.byz_mode not in BYZ_MODES:
+            raise ValueError(
+                f"byz_mode must be one of {BYZ_MODES}, got {self.byz_mode!r}"
+            )
+
+    def replace(self, **kw: Any) -> "FaultConfig":
+        # Changing a probability leaf re-derives the static predicate
+        # unless the caller pins it explicitly (CompressorConfig.sparse
+        # pattern — a pytree round-trip pins ``active`` concrete).
+        if "active" not in kw and any(
+            f in kw for f in ("erasure_prob", "crash_prob", "byz_frac",
+                              "byz_mode")
+        ):
+            kw["active"] = None
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def is_active(self) -> bool:
+        """STATIC fault-layer switch.  A pinned value wins; otherwise any
+        non-concrete (traced) probability or any concrete nonzero one
+        turns the layer on.  When False, round loops take the exact
+        legacy path — same key splits, zero extra ops."""
+        if self.active is not None:
+            return self.active
+        if self.byz_mode != "none":
+            return True
+        probs = (self.erasure_prob, self.crash_prob, self.byz_frac)
+        return any((not _concrete(p)) or p > 0.0 for p in probs)
+
+
+_FAULT_LEAF_FIELDS = ("erasure_prob", "crash_prob", "byz_frac", "byz_scale")
+
+
+def _fault_flatten(c: FaultConfig):
+    return (
+        tuple(getattr(c, f) for f in _FAULT_LEAF_FIELDS),
+        (c.byz_mode, c.is_active),
+    )
+
+
+def _fault_unflatten(aux, children) -> FaultConfig:
+    kw = dict(zip(_FAULT_LEAF_FIELDS, children))
+    return FaultConfig(byz_mode=aux[0], active=aux[1], **kw)
+
+
+jax.tree_util.register_pytree_node(FaultConfig, _fault_flatten, _fault_unflatten)
+
+
+def byzantine_mask(n: int, byz_frac: float | jax.Array) -> jax.Array:
+    """(N,) bool — the first ``floor(byz_frac * n)`` clients are Byzantine.
+
+    Deterministic and traceable in ``byz_frac``: the client identities are
+    fixed (adversaries do not rotate), only the fraction sweeps, so a
+    robustness grid batches without re-tracing.
+    """
+    frac = jnp.asarray(byz_frac, jnp.float32)
+    return (jnp.arange(n, dtype=jnp.float32) + 0.5) / n < frac
+
+
+def corrupt_deltas(
+    key: jax.Array,
+    deltas: jax.Array,          # (N, d) raw flat client updates
+    cfg: FaultConfig,
+) -> jax.Array:
+    """Inject the configured Byzantine behaviour into the delta stream
+    (BEFORE compression — the attacker controls what leaves the sensor).
+
+    ``byz_mode`` branches statically; the mask/scale are traceable.
+    """
+    if cfg.byz_mode == "none":
+        return deltas
+    mask = byzantine_mask(deltas.shape[0], cfg.byz_frac)
+    scale = jnp.asarray(cfg.byz_scale, jnp.float32)
+    if cfg.byz_mode == "sign_flip":
+        attacked = -scale * deltas
+    elif cfg.byz_mode == "gauss":
+        attacked = scale * jax.random.normal(key, deltas.shape, deltas.dtype)
+    else:  # inflate
+        attacked = scale * deltas
+    return jnp.where(mask[:, None], attacked, deltas)
+
+
+def draw_crash(
+    key: jax.Array, n: int, crash_prob: float | jax.Array
+) -> jax.Array:
+    """(N,) bool per-round crash/straggler mask (Bernoulli per client)."""
+    return jax.random.uniform(key, (n,)) < jnp.asarray(crash_prob, jnp.float32)
+
+
+def draw_erasure(
+    key: jax.Array, n: int, erasure_prob: float | jax.Array
+) -> jax.Array:
+    """(N,) bool packet-erasure mask, applied after SNR feasibility."""
+    return jax.random.uniform(key, (n,)) < jnp.asarray(
+        erasure_prob, jnp.float32
+    )
+
+
+def nonfinite_rows(deltas: jax.Array) -> jax.Array:
+    """(N,) bool — rows carrying any NaN/Inf coordinate (the graceful-
+    degradation counter; the zeroing itself lives in
+    ``aggregation.compress_and_accumulate`` so it protects the global
+    model even with the fault layer off)."""
+    return ~jnp.all(jnp.isfinite(deltas), axis=-1)

@@ -23,10 +23,12 @@ from repro.core import aggregation as agg
 from repro.core import association as assoc
 from repro.core import compression as comp
 from repro.core import energy as en
+from repro.core import faults as flt
 from repro.core import topology as topo
 from repro.core.hfl import (
     HFLConfig, HFLState, RoundMetrics, _client_train_fn, _clients_round,
 )
+from repro.kernels import ops as kops
 from repro.data.pipeline import multi_epoch_batches
 from repro.data.synthetic import SensorDataset
 from repro.launch.mesh import shard_map_compat
@@ -56,6 +58,19 @@ def make_flat_round_fn(
     :func:`repro.core.hfl.make_round_fn`.
     """
     clients_fn = _client_train_fn(loss_fn, cfg)
+    if cfg.robust not in ("mean", "trimmed", "median"):
+        raise ValueError(
+            f"robust must be 'mean', 'trimmed' or 'median', got "
+            f"{cfg.robust!r}"
+        )
+    fl = cfg.faults
+    fault_on = fl.is_active       # STATIC: off => exact legacy round
+    if client_mesh is not None and (fault_on or cfg.robust != "mean"):
+        raise ValueError(
+            "client-sharded rounds do not support fault injection or "
+            "robust aggregation (the per-client reconstructions never "
+            "leave their shard)"
+        )
     if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
         raise ValueError(
             f"client axis ({ds.train.shape[0]} sensors) must divide the "
@@ -63,7 +78,12 @@ def make_flat_round_fn(
         )
 
     def round_fn(state: HFLState, _) -> tuple[HFLState, RoundMetrics]:
-        key, k_mob, k_train = jax.random.split(state.key, 3)
+        if fault_on:
+            key, k_mob, k_train, k_byz, k_crash, k_erase = jax.random.split(
+                state.key, 6
+            )
+        else:
+            key, k_mob, k_train = jax.random.split(state.key, 3)
         dep = state.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
@@ -71,6 +91,10 @@ def make_flat_round_fn(
         fa = assoc.flat_association(dep, cfg.channel)
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
+        if fault_on:
+            active = active & ~flt.draw_crash(
+                k_crash, alive.shape[0], fl.crash_prob
+            )
 
         flat0, unravel = ravel_pytree(state.params)
         d = flat0.shape[0]
@@ -78,14 +102,33 @@ def make_flat_round_fn(
         keys = jax.random.split(k_train, n)
 
         active_f = active.astype(jnp.float32)
-        weights = ds.n_samples * active_f
+        # Erasure after feasibility: energy charged, EF advanced, weight 0.
+        if fault_on:
+            erased = active & flt.draw_erasure(k_erase, n, fl.erasure_prob)
+        else:
+            erased = jnp.zeros_like(active)
+        delivered = active & ~erased
+        weights = ds.n_samples * delivered.astype(jnp.float32)
         gateway_id = jnp.zeros((ds.train.shape[0],), jnp.int32)
 
         if client_mesh is None:
-            fog_delta, _, new_err, losses = _clients_round(
-                clients_fn, state.params, ds.train, keys, state.err,
-                weights, gateway_id, 1, cfg.compressor,
+            deltas, losses = clients_fn(state.params, ds.train, keys)
+            if fault_on:
+                deltas = flt.corrupt_deltas(k_byz, deltas, fl)
+            n_nonfinite = jnp.sum(
+                (delivered & flt.nonfinite_rows(deltas)).astype(jnp.int32)
             )
+            if cfg.robust == "mean":
+                fog_sum, fog_weight, new_err = agg.compress_and_accumulate(
+                    deltas, state.err, gateway_id, weights, 1,
+                    cfg.compressor,
+                )
+                fog_delta = fog_sum / jnp.maximum(fog_weight, 1e-12)[:, None]
+            else:
+                fog_delta, _, new_err = agg.robust_compress_and_aggregate(
+                    deltas, state.err, gateway_id, weights, 1,
+                    cfg.compressor, cfg.trim_frac, cfg.robust,
+                )
         else:
             sharded = shard_map_compat(
                 lambda p, dat, kk, e, w, fid: _clients_round(
@@ -100,6 +143,7 @@ def make_flat_round_fn(
             fog_delta, _, new_err, losses = sharded(
                 state.params, ds.train, keys, state.err, weights, gateway_id
             )
+            n_nonfinite = jnp.int32(0)
         new_err = jnp.where(active[:, None], new_err, state.err)
         mean_delta = fog_delta[0]
         if cfg.server_opt == "adam":
@@ -136,6 +180,9 @@ def make_flat_round_fn(
             participation=jnp.mean(active_f),
             coop_links=jnp.zeros((), jnp.int32),
             battery_min=jnp.min(battery),
+            n_nonfinite=n_nonfinite,
+            n_erased=jnp.sum(erased.astype(jnp.int32)),
+            global_finite=jnp.all(jnp.isfinite(flat0 + incr)),
         )
         return HFLState(new_params, new_err, battery, dep, key, server), metrics
 
@@ -175,8 +222,24 @@ def train_scaffold(
     ds: SensorDataset,
     cfg: HFLConfig,
 ) -> tuple[Params, RoundMetrics]:
-    """SCAFFOLD over feasible direct links (released-trace baseline)."""
+    """SCAFFOLD over feasible direct links (released-trace baseline).
+
+    SCAFFOLD's deltas are pytrees averaged without the compress path, so
+    the fault layer ravels them to flat rows first: Byzantine corruption /
+    the isfinite guard / the robust reduce all act on the flat stream,
+    and the mean is unravelled back.  With the fault layer statically
+    inactive and ``robust == "mean"`` the legacy tree path runs untouched.
+    """
     from repro.core.hfl import init_state
+
+    if cfg.robust not in ("mean", "trimmed", "median"):
+        raise ValueError(
+            f"robust must be 'mean', 'trimmed' or 'median', got "
+            f"{cfg.robust!r}"
+        )
+    fl_cfg = cfg.faults
+    fault_on = fl_cfg.is_active
+    fault_path = fault_on or cfg.robust != "mean"
 
     n = ds.train.shape[0]
     state = ScaffoldTrainState(
@@ -186,12 +249,19 @@ def train_scaffold(
 
     def round_fn(s: ScaffoldTrainState, _):
         st = s.fl
-        key, k_mob, k_train = jax.random.split(st.key, 3)
+        if fault_on:
+            key, k_mob, k_train, k_byz, k_crash, k_erase = jax.random.split(
+                st.key, 6
+            )
+        else:
+            key, k_mob, k_train = jax.random.split(st.key, 3)
         dep = st.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
         fa = assoc.flat_association(dep, cfg.channel)
         active = fa.participates & (st.battery > cfg.energy.e_min_j)
+        if fault_on:
+            active = active & ~flt.draw_crash(k_crash, n, fl_cfg.crash_prob)
         active_f = active.astype(jnp.float32)
 
         keys = jax.random.split(k_train, n)
@@ -210,14 +280,45 @@ def train_scaffold(
         deltas, new_ci, dcs, losses = jax.vmap(client_step)(
             ds.train, keys, s.ctrl.c_local
         )
-        weights = ds.n_samples * active_f
-        mean_delta = agg.weighted_mean(deltas, weights)
+        if fault_on:
+            erased = active & flt.draw_erasure(k_erase, n, fl_cfg.erasure_prob)
+        else:
+            erased = jnp.zeros_like(active)
+        delivered = active & ~erased
+        delivered_f = delivered.astype(jnp.float32)
+        weights = ds.n_samples * delivered_f
+
+        if fault_path:
+            flat_deltas = jax.vmap(lambda t: ravel_pytree(t)[0])(deltas)
+            if fault_on:
+                flat_deltas = flt.corrupt_deltas(k_byz, flat_deltas, fl_cfg)
+            finite = ~flt.nonfinite_rows(flat_deltas)
+            n_nonfinite = jnp.sum((delivered & ~finite).astype(jnp.int32))
+            w_del = weights * finite.astype(jnp.float32)
+            safe = jnp.where(finite[:, None], flat_deltas, 0.0)
+            if cfg.robust == "mean":
+                mean_flat = agg.weighted_mean(safe, w_del)
+            else:
+                fog_out, _ = kops.robust_aggregate(
+                    safe, jnp.zeros((n,), jnp.int32), w_del, 1,
+                    cfg.trim_frac, cfg.robust,
+                    use_pallas=cfg.compressor.use_pallas,
+                    interpret=cfg.compressor.interpret,
+                )
+                mean_flat = fog_out[0]
+            _, unravel_delta = ravel_pytree(
+                jax.tree_util.tree_map(lambda x: x[0], deltas)
+            )
+            mean_delta = unravel_delta(mean_flat)
+        else:
+            n_nonfinite = jnp.int32(0)
+            mean_delta = agg.weighted_mean(deltas, weights)
         new_params = jax.tree_util.tree_map(
             lambda p, dlt: p + dlt, st.params, mean_delta
         )
-        # c <- c + (1/N) sum active dc
-        frac = jnp.sum(active_f) / n
-        mean_dc = agg.weighted_mean(dcs, active_f)
+        # c <- c + (1/N) sum delivered dc (== active with the faults off)
+        frac = jnp.sum(delivered_f) / n
+        mean_dc = agg.weighted_mean(dcs, delivered_f)
         new_cg = jax.tree_util.tree_map(
             lambda c, dc: c + frac * dc, s.ctrl.c_global, mean_dc
         )
@@ -247,6 +348,11 @@ def train_scaffold(
             participation=jnp.mean(active_f),
             coop_links=jnp.zeros((), jnp.int32),
             battery_min=jnp.min(battery),
+            n_nonfinite=n_nonfinite,
+            n_erased=jnp.sum(erased.astype(jnp.int32)),
+            global_finite=jnp.all(
+                jnp.isfinite(ravel_pytree(new_params)[0])
+            ),
         )
         return (
             ScaffoldTrainState(

@@ -43,6 +43,7 @@ from repro.core import channel as ch
 from repro.core import compression as comp
 from repro.core import cooperation as coop
 from repro.core import energy as en
+from repro.core import faults as flt
 from repro.core import topology as topo
 from repro.data.synthetic import SensorDataset
 from repro.launch.mesh import shard_map_compat
@@ -59,12 +60,20 @@ class HFLConfig:
 
     LEAVES (traceable, stackable along a config axis — see
     ``Engine.sweep``): ``lr``, ``prox_mu``, ``server_lr``,
-    ``compute_rate_flops`` and the nested ``compressor`` (its ``rho_s``),
-    ``channel``, ``energy`` pytrees.  Everything shape- or
-    structure-bearing — rule enum, round/epoch/batch counts, solver and
-    backend flags, deployment geometry — is static aux data: configs that
-    differ there belong to different sweep shape-classes and are never
-    co-batched.
+    ``compute_rate_flops``, ``trim_frac`` and the nested ``compressor``
+    (its ``rho_s``), ``channel``, ``energy``, ``faults`` pytrees.
+    Everything shape- or structure-bearing — rule enum, round/epoch/batch
+    counts, solver and backend flags, deployment geometry, the ``robust``
+    aggregation rule — is static aux data: configs that differ there
+    belong to different sweep shape-classes and are never co-batched.
+
+    Robustness: ``robust`` selects the fog reduce — ``"mean"`` (Eq. 13
+    weighted mean, the default), ``"trimmed"`` (coordinate-wise weighted
+    trimmed mean, cutting ``trim_frac`` of the member weight from each
+    end), or ``"median"``.  ``faults`` injects crashes / Byzantine deltas /
+    packet erasure (see :mod:`repro.core.faults`); when it is statically
+    inactive and ``robust == "mean"`` the round loop is bit-identical to
+    the legacy path (same PRNG splits).
     """
 
     rule: coop.CoopRule = coop.CoopRule.SELECTIVE
@@ -83,6 +92,9 @@ class HFLConfig:
     channel: ch.ChannelParams = ch.ChannelParams()
     energy: en.EnergyParams = en.EnergyParams()
     deployment: topo.DeploymentParams = topo.DeploymentParams()
+    robust: str = "mean"             # fog reduce: mean | trimmed | median
+    trim_frac: float | Any = 0.0     # weight fraction cut per end (trimmed)
+    faults: flt.FaultConfig = flt.FaultConfig()
 
     def replace(self, **kw: Any) -> "HFLConfig":
         return dataclasses.replace(self, **kw)
@@ -90,11 +102,11 @@ class HFLConfig:
 
 _HFL_LEAF_FIELDS = (
     "lr", "prox_mu", "server_lr", "compute_rate_flops",
-    "compressor", "channel", "energy",
+    "compressor", "channel", "energy", "trim_frac", "faults",
 )
 _HFL_AUX_FIELDS = (
     "rule", "rounds", "local_epochs", "batch_size", "server_opt",
-    "local_solver", "fog_mobility", "deployment",
+    "local_solver", "fog_mobility", "deployment", "robust",
 )
 
 
@@ -126,6 +138,10 @@ class RoundMetrics(NamedTuple):
     participation: jax.Array
     coop_links: jax.Array     # number of active fog-to-fog exchanges
     battery_min: jax.Array
+    # Robustness counters (zero / True on the clean legacy path):
+    n_nonfinite: jax.Array    # delivered deltas carrying NaN/Inf (zeroed)
+    n_erased: jax.Array       # transmitted packets lost to erasure
+    global_finite: jax.Array  # bool — global params finite after the round
 
 
 class HFLState(NamedTuple):
@@ -248,6 +264,19 @@ def make_round_fn(
 
     n_fog = cfg.deployment.n_fog
     clients_fn = _client_train_fn(loss_fn, cfg)
+    if cfg.robust not in ("mean", "trimmed", "median"):
+        raise ValueError(
+            f"robust must be 'mean', 'trimmed' or 'median', got "
+            f"{cfg.robust!r}"
+        )
+    fl = cfg.faults
+    fault_on = fl.is_active       # STATIC: off => exact legacy round
+    if client_mesh is not None and (fault_on or cfg.robust != "mean"):
+        raise ValueError(
+            "client-sharded rounds do not support fault injection or "
+            "robust aggregation (the per-client reconstructions never "
+            "leave their shard)"
+        )
     if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
         raise ValueError(
             f"client axis ({ds.train.shape[0]} sensors) must divide the "
@@ -255,7 +284,12 @@ def make_round_fn(
         )
 
     def round_fn(state: HFLState, _) -> tuple[HFLState, RoundMetrics]:
-        key, k_mob, k_train = jax.random.split(state.key, 3)
+        if fault_on:
+            key, k_mob, k_train, k_byz, k_crash, k_erase = jax.random.split(
+                state.key, 6
+            )
+        else:
+            key, k_mob, k_train = jax.random.split(state.key, 3)
         dep = state.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
@@ -264,6 +298,12 @@ def make_round_fn(
         fa = assoc.nearest_feasible_fog(dep, cfg.channel)
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
+        if fault_on:
+            # Crashed clients drop out like a dead battery: no training,
+            # no transmission, no energy spend this round.
+            active = active & ~flt.draw_crash(
+                k_crash, alive.shape[0], fl.crash_prob
+            )
         # Cooperation sees ROUND-ACTIVE cluster sizes (battery included):
         # a cluster whose sensors are all dead this round holds no
         # aggregate to exchange, exactly like an empty one — so the
@@ -281,13 +321,37 @@ def make_round_fn(
         keys = jax.random.split(k_train, n)
 
         active_f = active.astype(jnp.float32)
-        weights = ds.n_samples * active_f
+        # Erasure strikes AFTER the SNR feasibility gate: the packet was
+        # transmitted (energy still charged below, EF buffer still
+        # advances) but the fog never decodes it — only the aggregation
+        # weight vanishes.
+        if fault_on:
+            erased = active & flt.draw_erasure(k_erase, n, fl.erasure_prob)
+        else:
+            erased = jnp.zeros_like(active)
+        delivered = active & ~erased
+        weights = ds.n_samples * delivered.astype(jnp.float32)
 
         if client_mesh is None:
-            fog_delta, fog_weight, new_err, losses = _clients_round(
-                clients_fn, state.params, ds.train, keys, state.err,
-                weights, fa.fog_id, n_fog, cfg.compressor,
+            deltas, losses = clients_fn(state.params, ds.train, keys)
+            if fault_on:
+                deltas = flt.corrupt_deltas(k_byz, deltas, fl)
+            n_nonfinite = jnp.sum(
+                (delivered & flt.nonfinite_rows(deltas)).astype(jnp.int32)
             )
+            if cfg.robust == "mean":
+                fog_sum, fog_weight, new_err = agg.compress_and_accumulate(
+                    deltas, state.err, fa.fog_id, weights, n_fog,
+                    cfg.compressor,
+                )
+                fog_delta = fog_sum / jnp.maximum(fog_weight, 1e-12)[:, None]
+            else:
+                fog_delta, fog_weight, new_err = (
+                    agg.robust_compress_and_aggregate(
+                        deltas, state.err, fa.fog_id, weights, n_fog,
+                        cfg.compressor, cfg.trim_frac, cfg.robust,
+                    )
+                )
         else:
             sharded = shard_map_compat(
                 lambda p, dat, kk, e, w, fid: _clients_round(
@@ -302,6 +366,10 @@ def make_round_fn(
             fog_delta, fog_weight, new_err, losses = sharded(
                 state.params, ds.train, keys, state.err, weights, fa.fog_id
             )
+            # Sharded deltas never leave their shard: the isfinite guard
+            # inside compress_and_accumulate still protects, only the
+            # counter is unavailable there.
+            n_nonfinite = jnp.int32(0)
         # Non-participants keep their error buffer and contribute nothing.
         new_err = jnp.where(active[:, None], new_err, state.err)
 
@@ -365,6 +433,9 @@ def make_round_fn(
             participation=jnp.mean(active_f),
             coop_links=jnp.sum(decision.cooperates.astype(jnp.int32)),
             battery_min=jnp.min(battery),
+            n_nonfinite=n_nonfinite,
+            n_erased=jnp.sum(erased.astype(jnp.int32)),
+            global_finite=jnp.all(jnp.isfinite(new_flat)),
         )
         return (
             HFLState(new_params, new_err, battery, dep, key, server),

@@ -81,6 +81,7 @@ import jax.numpy as jnp
 
 from repro.core import async_fl, hfl
 from repro.core import compression as comp
+from repro.core import faults as flt
 from repro.data.synthetic import SensorDataset
 from repro.launch import experiment as exp
 from repro.launch import sharding as shard_rules
@@ -519,6 +520,9 @@ class Engine:
             server_opt="sgd",
             local_solver=LocalTrainConfig(),
             compressor=comp.CompressorConfig(),
+            faults=flt.FaultConfig(),
+            trim_frac=0.0,
+            robust="mean",
         )
 
     @staticmethod
@@ -538,6 +542,8 @@ class Engine:
         if base.local_solver.fused and base.local_solver.use_pallas:
             knobs["lr"] = float(base.lr)
             knobs["prox_mu"] = float(base.prox_mu)
+        if base.robust != "mean" and cc.use_pallas:
+            knobs["trim_frac"] = float(base.trim_frac)
         return tuple(sorted(knobs.items()))
 
     def _sweep_classes(
@@ -661,6 +667,9 @@ class Engine:
                             b = b.replace(
                                 lr=knobs.get("lr", b.lr),
                                 prox_mu=knobs.get("prox_mu", b.prox_mu),
+                                trim_frac=knobs.get(
+                                    "trim_frac", b.trim_frac
+                                ),
                             )
                             if "rho_s" in knobs:
                                 b = b.replace(

@@ -28,6 +28,7 @@ from repro.kernels import fused_local_train as _flt
 from repro.kernels import fused_score as _fs
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
+from repro.kernels import robust_agg as _ra
 from repro.kernels import swa_attention as _swa
 from repro.kernels import topk_ef as _tk
 
@@ -255,6 +256,74 @@ def compress_aggregate(
         )
     return _compress_aggregate_ref(
         deltas, err, fog_id, weights, _block_k(k_frac), n_fog, quantize
+    )
+
+
+def _fog_weight_totals(fog_id, weights, n_fog: int) -> jax.Array:
+    return jnp.sum(
+        jnp.where(
+            fog_id[None, :] == jnp.arange(n_fog)[:, None],
+            weights[None, :].astype(jnp.float32), 0.0,
+        ),
+        axis=1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_fog", "mode"))
+def _robust_aggregate_ref(recon, fog_id, weights, trim_frac, n_fog, mode):
+    return _ref.robust_aggregate_ref(
+        recon, fog_id, weights, n_fog, trim_frac, mode
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_fog", "beta", "mode", "interpret")
+)
+def _robust_aggregate_pallas(
+    recon, fog_id, weights, n_fog: int, beta: float, mode: str,
+    interpret: bool,
+):
+    blocks, d = _pad_blocks_batch(recon)
+    out = _ra.robust_aggregate_blocks(
+        blocks, fog_id, weights, n_fog, beta, mode, interpret
+    )
+    return (
+        out.reshape(n_fog, -1)[:, :d],
+        _fog_weight_totals(fog_id, weights, n_fog),
+    )
+
+
+def robust_aggregate(
+    recon: jax.Array,     # (N, d) per-client dequantised reconstructions
+    fog_id: jax.Array,    # (N,) int32 cluster assignment
+    weights: jax.Array,   # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    trim_frac: float | jax.Array,
+    mode: str = "trimmed",
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Coordinate-wise Byzantine-robust fog aggregation (weighted trimmed
+    mean / weighted median) as an alternative to the weighted-sum reduce.
+
+    Returns (fog_out (n_fog, d) f32 — the NORMALISED robust aggregate per
+    fog, zeros for empty fogs — and fog_weight (n_fog,), the Eq. 16
+    gateway weights).  At ``trim_frac == 0`` this reproduces
+    ``fog_sum / max(fog_weight, eps)`` exactly (the equivalence pin).
+    ``trim_frac`` may be traced on the oracle path; the Pallas kernel bakes
+    it into the kernel body and needs a concrete number.
+    """
+    if mode not in ("trimmed", "median"):
+        raise ValueError(
+            f"robust mode must be 'trimmed' or 'median', got {mode!r}"
+        )
+    if use_pallas:
+        beta = min(max(_static_scalar(trim_frac, "trim_frac"), 0.0), 0.4995)
+        return _robust_aggregate_pallas(
+            recon, fog_id, weights, n_fog, beta, mode, interpret
+        )
+    return _robust_aggregate_ref(
+        recon, fog_id, weights, trim_frac, n_fog, mode
     )
 
 

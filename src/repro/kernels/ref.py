@@ -152,6 +152,71 @@ def compress_aggregate_ref(
     return fog_sum, v - recon
 
 
+def robust_aggregate_ref(
+    recon: jax.Array,        # (N, d) per-client reconstructions
+    fog_id: jax.Array,       # (N,) int32 cluster id per client
+    weights: jax.Array,      # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    trim_frac: float | jax.Array = 0.1,
+    mode: str = "trimmed",
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for coordinate-wise Byzantine-robust fog aggregation.
+
+    ``mode="trimmed"``: weighted trimmed mean — per fog and coordinate,
+    the members' values are (conceptually) laid out on a weight axis of
+    total mass W, the outer ``trim_frac`` mass is cut from EACH end, and
+    the surviving mass is averaged.  Implemented sort-free via tie-group
+    interval overlap: member i with value v_i owns the weight interval
+    [A_i, A_i + g_i) scaled by w_i/g_i, where A_i is the weight strictly
+    below v_i and g_i the weight tied at v_i; its surviving (effective)
+    weight is the overlap of that interval with [beta W, (1 - beta) W].
+    Order-independent, no data-dependent gathers, and at
+    ``trim_frac == 0`` the overlap is exactly g_i — so the result reduces
+    to the plain weighted mean bit-for-bit up to summation order (the
+    equivalence pin in the tests).
+
+    ``mode="median"``: weighted (lower) median — the tie group whose
+    interval contains W/2.
+
+    Returns (fog_out (n_fog, d) f32 — the NORMALISED robust aggregate per
+    fog, zeros for empty fogs — and fog_weight (n_fog,) = sum of member
+    weights, the Eq. 16 gateway weights).  ``trim_frac`` may be traced
+    (config-axis sweeps); it is clamped below 0.5 — trimming half the
+    mass from both ends leaves nothing.
+    """
+    v = recon.astype(jnp.float32)
+    w_fog = jnp.where(
+        fog_id[None, :] == jnp.arange(n_fog)[:, None],
+        weights[None, :].astype(jnp.float32), 0.0,
+    )                                                    # (M, N)
+    fog_weight = jnp.sum(w_fog, axis=1)
+    # Pairwise comparisons, shared across fogs: [i, k, d].
+    less = (v[None, :, :] < v[:, None, :]).astype(jnp.float32)
+    eq = (v[None, :, :] == v[:, None, :]).astype(jnp.float32)
+
+    def one_fog(w):                                      # (N,) member weights
+        big_w = jnp.sum(w)
+        a = jnp.einsum("ikd,k->id", less, w)             # weight below v_i
+        g = jnp.einsum("ikd,k->id", eq, w)               # weight tied at v_i
+        g_safe = jnp.maximum(g, 1e-30)
+        if mode == "median":
+            half = 0.5 * big_w
+            ratio = jnp.where((a < half) & (half <= a + g), 1.0 / g_safe, 0.0)
+        else:
+            beta = jnp.clip(jnp.asarray(trim_frac, jnp.float32), 0.0, 0.4995)
+            lo = jnp.maximum(a, beta * big_w)
+            hi = jnp.minimum(a + g, (1.0 - beta) * big_w)
+            # overlap == g exactly at beta 0, so ratio == 1.0 exactly and
+            # eff_i == w_i — the weighted-mean equivalence.
+            ratio = jnp.maximum(hi - lo, 0.0) / g_safe
+        eff = w[:, None] * ratio                         # (N, d)
+        num = jnp.einsum("id,id->d", eff, v)
+        den = jnp.sum(eff, axis=0)
+        return num / jnp.maximum(den, 1e-12)
+
+    return jax.vmap(one_fog)(w_fog), fog_weight
+
+
 def fused_score_ref(
     x: jax.Array,                 # (R, d) telemetry rows
     ws: tuple[jax.Array, ...],    # per-layer weights, (d_in, d_out)

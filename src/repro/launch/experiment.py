@@ -127,6 +127,9 @@ def trial_metrics(
             "e_s2f": zero, "e_f2f": zero, "e_f2g": zero,
             "e_total": e_up, "participation": jnp.ones(()),
             "coop_links": zero, "losses": losses, "sim_time_s": zero,
+            # No federated uplinks: the robustness counters are trivially 0.
+            "nonfinite_total": zero, "erased_total": zero,
+            "nonfinite_rounds": zero,
         }
     elif method == "hfl-async":
         acfg = (
@@ -147,6 +150,11 @@ def trial_metrics(
             "merges": jnp.sum(m.merged.astype(jnp.float32)),
             "staleness": jnp.sum(m.staleness * arrived_f)
             / jnp.maximum(jnp.sum(arrived_f), 1.0),
+            "nonfinite_total": jnp.sum(m.n_nonfinite.astype(jnp.float32)),
+            "erased_total": jnp.sum(m.n_erased.astype(jnp.float32)),
+            "nonfinite_rounds": jnp.sum(
+                1.0 - m.global_finite.astype(jnp.float32)
+            ),
         }
     else:
         if method in ("fedavg", "fedprox", "fedadam"):
@@ -179,6 +187,11 @@ def trial_metrics(
             "coop_links": jnp.mean(m.coop_links.astype(jnp.float32)),
             "losses": m.loss,
             "sim_time_s": jnp.sum(m.latency_s),
+            "nonfinite_total": jnp.sum(m.n_nonfinite.astype(jnp.float32)),
+            "erased_total": jnp.sum(m.n_erased.astype(jnp.float32)),
+            "nonfinite_rounds": jnp.sum(
+                1.0 - m.global_finite.astype(jnp.float32)
+            ),
         }
 
     f1 = _detector_eval(params, ds, percentile, point_adjusted)

@@ -44,17 +44,22 @@ def init(key: jax.Array, capacity: int, n_fog: int = 0) -> ReservoirState:
     )
 
 
-def _row_update(buffer, count, g, v, k):
+def _row_update(buffer, count, g, v, k, ok):
     """Algorithm R step for group ``g``: slot ``count[g]`` while filling,
-    then replace a uniform slot with probability capacity/(count+1)."""
+    then replace a uniform slot with probability capacity/(count+1).
+
+    ``ok`` gates the whole step: a rejected value (non-finite error) draws
+    its PRNG slot but touches neither the buffer nor the count, so the
+    key-split sequence stays identical with and without rejections.
+    """
     cap = buffer.shape[1]
     c = count[g]
     j = jax.random.randint(k, (), 0, jnp.maximum(c + 1, 1))
     pos = jnp.where(c < cap, c, j)
-    keep = pos < cap
+    keep = (pos < cap) & ok
     pos_c = jnp.minimum(pos, cap - 1)
     buffer = buffer.at[g, pos_c].set(jnp.where(keep, v, buffer[g, pos_c]))
-    return buffer, count.at[g].add(1)
+    return buffer, count.at[g].add(jnp.where(ok, 1, 0))
 
 
 @jax.jit
@@ -66,9 +71,13 @@ def update(
     """Fold a batch of validation errors into the reservoirs.
 
     Every error feeds the global group; with ``fog_id`` it also feeds that
-    fog's group.  Scan-sequential by construction — reservoir sampling is
-    order-dependent — which is fine off the hot path (calibration batches
-    are small next to the scoring stream).
+    fog's group.  Non-finite errors (NaN/Inf from corrupt telemetry or a
+    poisoned model) never enter a reservoir or advance its count — they
+    would otherwise pin every threshold to NaN/inf — though each event
+    still draws its per-position PRNG keys.  Scan-sequential
+    by construction — reservoir sampling is order-dependent — which is fine
+    off the hot path (calibration batches are small next to the scoring
+    stream).
     """
     errors = errors.reshape(-1).astype(jnp.float32)
     g_global = state.buffer.shape[0] - 1
@@ -82,9 +91,10 @@ def update(
         buffer, count, key = carry
         e, f = ev
         key, k1, k2 = jax.random.split(key, 3)
-        buffer, count = _row_update(buffer, count, g_global, e, k1)
+        ok = jnp.isfinite(e)
+        buffer, count = _row_update(buffer, count, g_global, e, k1, ok)
         if fog_id is not None:
-            buffer, count = _row_update(buffer, count, f, e, k2)
+            buffer, count = _row_update(buffer, count, f, e, k2, ok)
         return (buffer, count, key), None
 
     (buffer, count, key), _ = jax.lax.scan(

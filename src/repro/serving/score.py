@@ -72,6 +72,10 @@ def score(
     else:
         err = anomaly.reconstruction_errors(ae.apply, params, rows)
         flag = anomaly.flag_anomalies(err, tau_rows)
+    # Non-finite errors (NaN telemetry, poisoned/diverged model) are
+    # anomalous by policy: ``NaN > tau`` is False, which would otherwise
+    # silently pass the corrupt rows as normal.
+    flag = jnp.where(jnp.isfinite(err), flag, True)
     return ScoreResult(err.reshape(lead), flag.reshape(lead))
 
 

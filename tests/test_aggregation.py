@@ -119,6 +119,53 @@ def test_weighted_mean_zero_weights_holds_prev():
     np.testing.assert_array_equal(np.asarray(held), np.asarray(prev))
 
 
+# ---------------------------------------------------------------------------
+# Non-finite client updates (graceful degradation guard) — ISSUE 7.
+# ---------------------------------------------------------------------------
+
+def test_compress_and_accumulate_zeroes_nonfinite_rows():
+    """A client delta carrying Inf/NaN must be zeroed — delta, EF buffer
+    AND weight — before it touches the fog sums, independent of the fault
+    layer; finite clients are bit-identical with or without the poisoned
+    neighbour."""
+    from repro.core import compression as comp
+
+    key = jax.random.key(7)
+    n, d = 8, 24
+    deltas = jax.random.normal(key, (n, d))
+    err = jax.random.normal(jax.random.fold_in(key, 1), (n, d)) * 0.1
+    fog_id = jnp.arange(n, dtype=jnp.int32) % 2
+    weights = jnp.ones((n,))
+    cfg = comp.CompressorConfig(rho_s=0.25, quant_bits=8, mode="blockwise")
+
+    poisoned = deltas.at[2, 3].set(jnp.inf).at[5, 0].set(jnp.nan)
+    fog_sum, fog_w, new_err = agg.compress_and_accumulate(
+        poisoned, err, fog_id, weights, 2, cfg
+    )
+    assert bool(jnp.all(jnp.isfinite(fog_sum)))
+    assert bool(jnp.all(jnp.isfinite(new_err)))
+    # The poisoned clients' weight is gone from their fogs.
+    np.testing.assert_allclose(np.asarray(fog_w), [3.0, 3.0])
+
+    # Equivalent to excluding them up front (weight 0, zero delta/err).
+    excl = jnp.where(jnp.asarray([i in (2, 5) for i in range(n)]))[0]
+    w_ref = weights.at[excl].set(0.0)
+    d_ref = deltas.at[excl].set(0.0)
+    e_ref = err.at[excl].set(0.0)
+    ref_sum, ref_w, ref_err = agg.compress_and_accumulate(
+        d_ref, e_ref, fog_id, w_ref, 2, cfg
+    )
+    np.testing.assert_array_equal(np.asarray(fog_sum), np.asarray(ref_sum))
+    np.testing.assert_array_equal(np.asarray(fog_w), np.asarray(ref_w))
+    np.testing.assert_array_equal(np.asarray(new_err), np.asarray(ref_err))
+
+    # Finite inputs: the guard is an exact no-op.
+    g_sum, g_w, g_err = agg.compress_and_accumulate(
+        deltas, err, fog_id, weights, 2, cfg
+    )
+    assert bool(jnp.all(jnp.isfinite(g_sum))) and float(g_w.sum()) == n
+
+
 def test_battery_exhaustion_holds_model_through_hfl_train():
     """Regression: with every sensor battery-dead, fog weights are all zero
     and hfl.train used to collapse the global model to zeros on round 1;

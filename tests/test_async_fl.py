@@ -169,6 +169,39 @@ def test_async_beats_sync_limit_on_event_time(ds, params0):
     assert per_merge_async < per_merge_sync
 
 
+def test_tau_max_drops_stale_updates(ds, params0):
+    """tau_max is a hard staleness clip on top of the (1+tau)^(-alpha)
+    discount: updates staler than the bound get weight ZERO instead of a
+    small positive one (drop vs discount, ISSUE 7)."""
+    acfg = _async_cfg(n_events=10, alpha=1.0)
+    key = jax.random.key(13)
+
+    _, m_disc = async_fl.train(key, params0, ae.loss, ds, acfg)
+    assert float(jnp.max(m_disc.staleness)) > 0.0   # stale arrivals exist
+    # The default bound (NEVER) is bit-identical to no bound at all.
+    _, m_never = async_fl.train(
+        key, params0, ae.loss, ds, acfg.replace(tau_max=1e20)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m_disc.loss), np.asarray(m_never.loss)
+    )
+    # tau_max=0 admits only perfectly-fresh updates; the run stays finite
+    # but merges move the model differently than the discounted run.
+    _, m_drop = async_fl.train(
+        key, params0, ae.loss, ds, acfg.replace(tau_max=0.0)
+    )
+    assert bool(jnp.all(m_drop.global_finite))
+    assert not np.allclose(
+        np.asarray(m_drop.staleness), np.asarray(m_disc.staleness)
+    ) or not np.allclose(
+        np.asarray(m_drop.loss), np.asarray(m_disc.loss)
+    )
+    # tau_max is a swept LEAF: same treedef, stackable along a config axis.
+    _, t0 = jax.tree_util.tree_flatten(acfg)
+    _, t1 = jax.tree_util.tree_flatten(acfg.replace(tau_max=2.0))
+    assert t0 == t1
+
+
 def test_timeout_forces_merge(ds, params0):
     """A tiny global timeout merges every tick even when the buffer never
     fills."""

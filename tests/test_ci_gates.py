@@ -12,6 +12,7 @@ from benchmarks import (
     bench_summary,
     check_async_bench,
     check_kernel_micro,
+    check_robustness_bench,
     check_sweep_compile,
 )
 from benchmarks import run as bench_run
@@ -147,6 +148,99 @@ def test_async_gate_fails_loudly_on_missing_row():
     fresh = {"sync": {"sim_s_per_round": 4.5}, "rows": []}
     failures = check_async_bench.compare(fresh, _async_json())
     assert any("missing" in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# check_robustness_bench.compare
+# ---------------------------------------------------------------------------
+
+def _robust_row(robust, byz, er, f1, nonfinite=0.0):
+    return {
+        "robust": robust, "byz_frac": byz, "erasure": er,
+        "f1_mean": f1, "nonfinite_rounds": nonfinite,
+    }
+
+
+def _robust_json(
+    clean_f1=0.91,
+    mean_byz_f1=0.2,
+    trim_f1=0.9,
+    med_f1=0.9,
+    erased_f1=0.88,
+    nonfinite=0.0,
+    programs=3,
+) -> dict:
+    return {
+        "n_classes": 3,
+        "rows": [
+            _robust_row("mean", 0.0, 0.0, clean_f1),
+            _robust_row("mean", 0.0, 0.3, erased_f1, nonfinite=nonfinite),
+            _robust_row("mean", 0.25, 0.0, mean_byz_f1),
+            _robust_row("trimmed", 0.25, 0.0, trim_f1),
+            _robust_row("trimmed", 0.25, 0.3, erased_f1),
+            _robust_row("median", 0.25, 0.0, med_f1),
+        ],
+        "engine": {"sweep_compiled_programs": programs, "sweep_cells": 6},
+    }
+
+
+def test_robust_gate_passes_on_healthy_grid():
+    failures = check_robustness_bench.compare(_robust_json(), _robust_json())
+    assert failures == []
+
+
+def test_robust_gate_trips_when_robust_rule_drops():
+    failures = check_robustness_bench.compare(
+        _robust_json(trim_f1=0.5), _robust_json(), f1_tol=0.12
+    )
+    assert any("trimmed" in f and "dropped" in f for f in failures)
+    # ...both fresh-internal and vs the committed baseline.
+    failures = check_robustness_bench.compare(
+        _robust_json(med_f1=0.7), _robust_json(med_f1=0.9), f1_tol=0.12
+    )
+    assert any("median" in f for f in failures)
+
+
+def test_robust_gate_trips_when_mean_stops_collapsing():
+    """If the attack no longer hurts the plain mean, the benchmark proves
+    nothing — that's a failure, not a success."""
+    failures = check_robustness_bench.compare(
+        _robust_json(mean_byz_f1=0.85), _robust_json(), degrade_margin=0.25
+    )
+    assert any("no longer degrades" in f for f in failures)
+
+
+def test_robust_gate_trips_on_nonfinite_rounds():
+    failures = check_robustness_bench.compare(
+        _robust_json(nonfinite=2.0), _robust_json()
+    )
+    assert any("non-finite" in f for f in failures)
+
+
+def test_robust_gate_trips_on_erasure_cliff():
+    failures = check_robustness_bench.compare(
+        _robust_json(erased_f1=0.3), _robust_json(), erasure_tol=0.15
+    )
+    assert any("cliff" in f for f in failures)
+
+
+def test_robust_gate_trips_on_compile_fallback():
+    failures = check_robustness_bench.compare(
+        _robust_json(programs=6), _robust_json()
+    )
+    assert any("batching regressed" in f for f in failures)
+
+
+def test_robust_gate_fails_loudly_on_missing_row():
+    fresh = _robust_json()
+    fresh["rows"] = [r for r in fresh["rows"] if r["robust"] != "median"]
+    failures = check_robustness_bench.compare(fresh, _robust_json())
+    assert any("missing" in f for f in failures)
+    # No clean anchor row at all: nothing else is checkable.
+    failures = check_robustness_bench.compare(
+        {"rows": []}, _robust_json()
+    )
+    assert any("anchor" in f for f in failures)
 
 
 # ---------------------------------------------------------------------------

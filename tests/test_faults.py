@@ -1,0 +1,410 @@
+"""Tests for the fault-injection layer + Byzantine-robust aggregation.
+
+Covers the ISSUE-7 acceptance pins: the ``FaultConfig`` pytree contract
+(swept-leaf probabilities, static byz_mode, ``active`` predicate pinning),
+fault semantics (crash vs erasure vs Byzantine corruption), the robust
+aggregation operators (trimmed mean / median oracle properties +
+Pallas-interpret parity), the trim-0 + no-faults == weighted-mean
+equivalence in all four Engine families, graceful degradation (non-finite
+deltas can never NaN the global model), and the one-compiled-program
+robustness grid under ``Engine.sweep``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as eng_mod
+from repro.core import async_fl, faults as flt, hfl
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+from repro.kernels import ops as kops
+from repro.launch import experiment as exp
+from repro.models import autoencoder as ae
+
+N_SENSORS = 12
+N_FOG = 3
+
+
+def _make_ds(seed: int = 0):
+    cfg = SyntheticConfig(
+        n_sensors=N_SENSORS, train_len=48, val_len=24, test_len=48
+    )
+    return normalize(generate(jax.random.key(seed), cfg))
+
+
+def _small_cfg(**kw):
+    kw.setdefault("rounds", 2)
+    kw.setdefault("local_epochs", 1)
+    return exp.make_config(n_sensors=N_SENSORS, n_fog=N_FOG, **kw)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return _make_ds(0)
+
+
+@pytest.fixture(scope="module")
+def params0(ds):
+    return ae.init(jax.random.key(1), ds.train.shape[-1], (16, 8, 16))
+
+
+# ---------------------------------------------------------------------------
+# FaultConfig pytree contract.
+# ---------------------------------------------------------------------------
+
+def test_fault_config_activity_predicate_and_pinning():
+    off = flt.FaultConfig()
+    assert not off.is_active
+    on = flt.FaultConfig(erasure_prob=0.2)
+    assert on.is_active
+    # byz_mode alone activates the layer (byz_frac may be a tracer).
+    assert flt.FaultConfig(byz_mode="sign_flip").is_active
+    # Pinning lets a zero-fault cell share the active shape-class.
+    pinned = flt.FaultConfig(active=True)
+    assert pinned.is_active
+    assert jax.tree_util.tree_structure(pinned) == (
+        jax.tree_util.tree_structure(on)
+    )
+    # ...and active vs inactive are DIFFERENT shape-classes.
+    assert jax.tree_util.tree_structure(off) != (
+        jax.tree_util.tree_structure(on)
+    )
+
+
+def test_fault_config_roundtrip_and_replace_rederivation():
+    on = flt.FaultConfig(erasure_prob=0.3, byz_frac=0.2, byz_mode="gauss")
+    leaves, treedef = jax.tree_util.tree_flatten(on)
+    assert all(isinstance(x, (int, float)) for x in leaves)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.byz_mode == "gauss" and back.is_active
+    # replace() re-derives the predicate from the new values...
+    assert not on.replace(
+        erasure_prob=0.0, byz_frac=0.0, byz_mode="none"
+    ).is_active
+    # ...unless the caller re-pins it in the same call.
+    assert flt.FaultConfig(active=True).replace(
+        erasure_prob=0.0, active=True
+    ).is_active
+    # A pytree round-trip pins the derived value concrete.
+    rt = jax.tree_util.tree_unflatten(
+        *reversed(jax.tree_util.tree_flatten(flt.FaultConfig(active=True)))
+    )
+    assert rt.active is True
+    with pytest.raises(ValueError, match="byz_mode"):
+        flt.FaultConfig(byz_mode="teleport")
+
+
+def test_hfl_config_carries_faults_as_swept_leaves():
+    base = _small_cfg()
+    a = base.replace(faults=flt.FaultConfig(erasure_prob=0.1, active=True))
+    b = base.replace(faults=flt.FaultConfig(erasure_prob=0.4, active=True))
+    _, ta = jax.tree_util.tree_flatten(a)
+    _, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    stacked = eng_mod.Engine.stack_configs([a, b])
+    assert np.asarray(stacked.faults.erasure_prob).shape == (2,)
+    assert stacked.faults.is_active
+    # robust mode is STATIC: it changes the treedef.
+    _, tr = jax.tree_util.tree_flatten(a.replace(robust="trimmed"))
+    assert tr != ta
+
+
+# ---------------------------------------------------------------------------
+# Fault primitives.
+# ---------------------------------------------------------------------------
+
+def test_byzantine_mask_is_deterministic_prefix():
+    m = np.asarray(flt.byzantine_mask(10, 0.3))
+    np.testing.assert_array_equal(m[:3], True)
+    np.testing.assert_array_equal(m[3:], False)
+    assert not np.any(np.asarray(flt.byzantine_mask(10, 0.0)))
+    assert np.all(np.asarray(flt.byzantine_mask(10, 1.0)))
+    # Traceable fraction (swept leaf) under jit.
+    mt = jax.jit(lambda f: flt.byzantine_mask(10, f))(jnp.float32(0.3))
+    np.testing.assert_array_equal(np.asarray(mt), m)
+
+
+def test_corrupt_deltas_modes():
+    key = jax.random.key(0)
+    deltas = jnp.ones((6, 4))
+    cfg = flt.FaultConfig(byz_frac=0.5, byz_scale=3.0, byz_mode="sign_flip")
+    out = np.asarray(flt.corrupt_deltas(key, deltas, cfg))
+    np.testing.assert_allclose(out[:3], -3.0)        # attacked prefix
+    np.testing.assert_allclose(out[3:], 1.0)         # honest rows untouched
+    infl = np.asarray(flt.corrupt_deltas(
+        key, deltas, cfg.replace(byz_mode="inflate")
+    ))
+    np.testing.assert_allclose(infl[:3], 3.0)
+    g = np.asarray(flt.corrupt_deltas(
+        key, deltas, cfg.replace(byz_mode="gauss")
+    ))
+    np.testing.assert_allclose(g[3:], 1.0)
+    assert not np.allclose(g[:3], 1.0)
+    # mode "none" is the identity.
+    none = flt.corrupt_deltas(key, deltas, flt.FaultConfig(byz_frac=0.5))
+    np.testing.assert_array_equal(np.asarray(none), np.asarray(deltas))
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregation operators: oracle properties + kernel parity.
+# ---------------------------------------------------------------------------
+
+def _cluster(seed=0, n=12, d=40, n_fog=3):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    v = jax.random.normal(k1, (n, d))
+    fog_id = jnp.arange(n, dtype=jnp.int32) % n_fog
+    w = jax.random.uniform(k2, (n,)) + 0.5
+    return v, fog_id, w
+
+
+def test_robust_trim0_equals_weighted_mean():
+    v, fog_id, w = _cluster()
+    out, fw = kops.robust_aggregate(v, fog_id, w, N_FOG, 0.0, "trimmed")
+    w_fog = jnp.where(
+        fog_id[None, :] == jnp.arange(N_FOG)[:, None], w[None, :], 0.0
+    )
+    ref = (w_fog @ v) / jnp.maximum(w_fog.sum(-1), 1e-12)[:, None]
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(fw), np.asarray(w_fog.sum(-1)), rtol=1e-6
+    )
+
+
+def test_robust_rejects_outliers_mean_does_not():
+    # Unit weights: one outlier in a 4-member fog holds 25% of the mass,
+    # so beta=0.3 trims it entirely (the trim bound is by WEIGHT — a
+    # heavier adversary needs a wider trim).
+    v, fog_id, _ = _cluster(seed=3)
+    w = jnp.ones((v.shape[0],))
+    poisoned = v.at[0].set(1e4).at[1].set(-1e4)
+    mean_out, _ = kops.robust_aggregate(
+        poisoned, fog_id, w, N_FOG, 0.0, "trimmed"
+    )
+    trim_out, _ = kops.robust_aggregate(
+        poisoned, fog_id, w, N_FOG, 0.3, "trimmed"
+    )
+    med_out, _ = kops.robust_aggregate(
+        poisoned, fog_id, w, N_FOG, 0.0, "median"
+    )
+    assert float(jnp.max(jnp.abs(mean_out))) > 100.0
+    assert float(jnp.max(jnp.abs(trim_out))) < 10.0
+    assert float(jnp.max(jnp.abs(med_out))) < 10.0
+
+
+def test_weighted_median_small_case():
+    # One fog, three clients: weighted lower median sits on the middle
+    # value once its cumulative weight crosses W/2.
+    v = jnp.asarray([[1.0], [5.0], [9.0]])
+    fid = jnp.zeros((3,), jnp.int32)
+    out, _ = kops.robust_aggregate(
+        v, fid, jnp.asarray([1.0, 1.0, 1.0]), 1, 0.0, "median"
+    )
+    np.testing.assert_allclose(float(out[0, 0]), 5.0)
+    # A dominant weight drags the median onto its value.
+    out2, _ = kops.robust_aggregate(
+        v, fid, jnp.asarray([10.0, 1.0, 1.0]), 1, 0.0, "median"
+    )
+    np.testing.assert_allclose(float(out2[0, 0]), 1.0)
+
+
+def test_robust_empty_fog_and_bad_mode():
+    v, _, w = _cluster()
+    fog_id = jnp.zeros((v.shape[0],), jnp.int32)     # fog 1, 2 empty
+    out, fw = kops.robust_aggregate(v, fog_id, w, N_FOG, 0.2, "trimmed")
+    np.testing.assert_allclose(np.asarray(out[1:]), 0.0)
+    np.testing.assert_allclose(np.asarray(fw[1:]), 0.0)
+    with pytest.raises(ValueError, match="mode"):
+        kops.robust_aggregate(v, fog_id, w, N_FOG, 0.2, "krum")
+
+
+@pytest.mark.parametrize("mode", ["trimmed", "median"])
+@pytest.mark.parametrize("beta", [0.0, 0.2])
+def test_robust_pallas_interpret_matches_ref(mode, beta):
+    v, fog_id, w = _cluster(seed=7, n=14, d=300)     # multi-block padding
+    ref_out, ref_w = kops.robust_aggregate(
+        v, fog_id, w, N_FOG, beta, mode, use_pallas=False
+    )
+    pal_out, pal_w = kops.robust_aggregate(
+        v, fog_id, w, N_FOG, beta, mode, use_pallas=True, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(pal_out), np.asarray(ref_out), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(pal_w), np.asarray(ref_w), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# The equivalence pin: trim 0 + zero faults == weighted mean, per family.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["hfl-selective", "fedavg", "scaffold"])
+def test_trim0_no_faults_matches_mean_sync_families(method, ds):
+    key = jax.random.key(11)
+    cfg = _small_cfg(rounds=3)
+    m_mean = exp.trial_metrics(method, key, ds, cfg)
+    m_trim = exp.trial_metrics(
+        method, key, ds, cfg.replace(robust="trimmed", trim_frac=0.0)
+    )
+    for k in m_mean:
+        np.testing.assert_allclose(
+            np.asarray(m_trim[k]), np.asarray(m_mean[k]),
+            rtol=1e-4, atol=1e-6, err_msg=k,
+        )
+    assert float(jnp.sum(m_mean["nonfinite_rounds"])) == 0.0
+    assert float(jnp.sum(m_mean["erased_total"])) == 0.0
+
+
+def test_trim0_no_faults_matches_mean_async(ds):
+    key = jax.random.key(12)
+    base = _small_cfg(rounds=2)
+    acfg = async_fl.AsyncFLConfig(
+        base=base, n_events=8, buffer_k=4.0, fog_k=1.0, alpha=0.5
+    )
+    m_mean = exp.trial_metrics("hfl-async", key, ds, acfg)
+    m_trim = exp.trial_metrics(
+        "hfl-async", key, ds,
+        acfg.replace(base=base.replace(robust="trimmed", trim_frac=0.0)),
+    )
+    for k in m_mean:
+        np.testing.assert_allclose(
+            np.asarray(m_trim[k]), np.asarray(m_mean[k]),
+            rtol=1e-4, atol=1e-6, err_msg=k,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fault semantics through the round loops.
+# ---------------------------------------------------------------------------
+
+def test_erasure_charges_energy_but_drops_weight(ds, params0):
+    """A packet lost AFTER the SNR feasibility check still cost its uplink
+    energy and still counts as a participant — only its aggregation weight
+    (and hence the model update) vanishes."""
+    key = jax.random.key(21)
+    cfg = _small_cfg(rounds=3)
+    clean = cfg.replace(faults=flt.FaultConfig(active=True))
+    lossy = cfg.replace(faults=flt.FaultConfig(erasure_prob=0.7))
+    _, m0 = hfl.train(key, params0, ae.loss, ds, clean)
+    _, m1 = hfl.train(key, params0, ae.loss, ds, lossy)
+    # Same active set (same key split): identical sensor-uplink energy —
+    # the lost packets were transmitted — and identical participation.
+    # Fog-tier energy may only DROP (a fully-erased cluster holds no
+    # aggregate to forward).
+    np.testing.assert_allclose(
+        np.asarray(m1.e_s2f), np.asarray(m0.e_s2f), rtol=1e-6
+    )
+    assert np.all(
+        np.asarray(m1.e_total) <= np.asarray(m0.e_total) * (1 + 1e-6)
+    )
+    np.testing.assert_allclose(
+        np.asarray(m1.participation), np.asarray(m0.participation)
+    )
+    assert int(jnp.sum(m1.n_erased)) > 0
+    assert int(jnp.sum(m0.n_erased)) == 0
+    assert bool(jnp.all(m1.global_finite))
+
+
+def test_full_crash_holds_model(ds, params0):
+    """crash_prob=1 is a dead network: no energy spent, no model movement —
+    the zero-weight round handling from PR 5 must absorb it."""
+    cfg = _small_cfg(rounds=2).replace(
+        faults=flt.FaultConfig(crash_prob=1.0)
+    )
+    params, m = hfl.train(jax.random.key(3), params0, ae.loss, ds, cfg)
+    assert float(jnp.max(m.participation)) == 0.0
+    assert float(jnp.max(m.e_total)) == 0.0
+    for p, p0 in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(params0)
+    ):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+    assert bool(jnp.all(m.global_finite))
+
+
+def test_nonfinite_deltas_counted_and_zeroed(ds, params0):
+    """byz_scale=inf inflation turns attacked deltas non-finite: the guard
+    must count AND zero them, keeping the global model finite while honest
+    clients keep training."""
+    cfg = _small_cfg(rounds=3).replace(
+        faults=flt.FaultConfig(
+            byz_frac=0.3, byz_scale=float("inf"), byz_mode="inflate"
+        )
+    )
+    params, m = hfl.train(jax.random.key(4), params0, ae.loss, ds, cfg)
+    assert int(jnp.sum(m.n_nonfinite)) > 0
+    assert bool(jnp.all(m.global_finite))
+    for p in jax.tree_util.tree_leaves(params):
+        assert bool(jnp.all(jnp.isfinite(p)))
+
+
+def test_fault_inactive_is_bit_identical_to_legacy(ds, params0):
+    """The fault layer off (default) must not perturb the PRNG stream:
+    committed baselines stay bit-identical."""
+    key = jax.random.key(6)
+    cfg = _small_cfg(rounds=2)
+    p1, m1 = hfl.train(key, params0, ae.loss, ds, cfg)
+    p2, m2 = hfl.train(key, params0, ae.loss, ds, cfg)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m1.loss), np.asarray(m2.loss))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: the robustness grid is ONE compiled program.
+# ---------------------------------------------------------------------------
+
+def test_robustness_grid_compiles_one_program():
+    """attack-fraction x trim x erasure cells share byz_mode and robust
+    statics, so the whole grid (clean corner included, via the always-on
+    byz_mode="sign_flip" activity pin) runs as ONE compiled program, each
+    cell matching its own Engine.run."""
+    eng = eng_mod.Engine()
+    base = _small_cfg().replace(robust="trimmed")
+    cfgs = [
+        base.replace(
+            trim_frac=t,
+            faults=flt.FaultConfig(
+                erasure_prob=e, byz_frac=b, byz_scale=5.0,
+                byz_mode="sign_flip",
+            ),
+        )
+        for b in (0.0, 0.25)
+        for t in (0.0, 0.25)
+        for e in (0.0, 0.3)
+    ]
+    assert len(cfgs) == 8
+    sw = eng.sweep("hfl-selective", cfgs, (0,), _make_ds)
+    assert sw.n_classes == 1
+    assert sw.compiled_programs == 1
+    assert not np.any(np.asarray(sw["nonfinite_rounds"]))
+    for i in (0, 7):
+        r = eng.run("hfl-selective", cfgs[i], (0,), _make_ds)
+        np.testing.assert_allclose(
+            np.asarray(sw["losses"][i]), np.asarray(r.losses),
+            rtol=1e-4, atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(sw["f1"][i]), np.asarray(r.f1), atol=1e-3
+        )
+        np.testing.assert_allclose(
+            np.asarray(sw["erased_total"][i]), np.asarray(r["erased_total"])
+        )
+
+
+def test_robust_static_splits_shape_class():
+    """mean vs trimmed vs median are different programs — robust mode is a
+    static branch, not a swept knob."""
+    eng = eng_mod.Engine()
+    base = _small_cfg()
+    cfgs = [
+        base,
+        base.replace(robust="trimmed", trim_frac=0.2),
+        base.replace(robust="median"),
+    ]
+    sw = eng.sweep("hfl-nocoop", cfgs, (0,), _make_ds)
+    assert sw.n_classes == 3

@@ -158,6 +158,53 @@ def test_reservoir_empty_state_is_inf():
     assert np.all(np.isinf(np.asarray(cal.threshold(state))))
 
 
+# ---------------------------------------------------------------------------
+# Non-finite telemetry (graceful degradation, ISSUE 7).
+# ---------------------------------------------------------------------------
+
+def test_score_flags_nonfinite_errors_as_anomalous():
+    """NaN telemetry produces a NaN reconstruction error; ``err > tau`` is
+    False for NaN, so without the policy override corrupt rows would pass
+    as normal.  They must flag True on both the fused and legacy paths."""
+    params = _params()
+    x = jax.random.normal(jax.random.key(33), (5, 32))
+    x = x.at[1].set(jnp.nan).at[3, 0].set(jnp.inf)
+    for fused in (True, False):
+        res = serving_score_fn(
+            params, x, jnp.inf, use_pallas=False, fused=fused
+        )
+        flag = np.asarray(res.flag)
+        assert flag[1] and flag[3], f"fused={fused}"
+        # Finite rows keep the tau=inf verdict: not anomalous.
+        np.testing.assert_array_equal(flag[[0, 2, 4]], False)
+
+
+def test_calibrator_excludes_nonfinite_errors():
+    """Algorithm-R insertion skips NaN/Inf errors: they never enter a
+    reservoir or advance its count, so thresholds stay finite and match
+    the percentile of the finite subset (below capacity)."""
+    finite = jax.random.uniform(jax.random.key(2), (80,)) * 3.0
+    errs = jnp.concatenate(
+        [finite[:40], jnp.asarray([jnp.nan, jnp.inf, -jnp.inf]), finite[40:]]
+    )
+    c = StreamingCalibrator(capacity=256, percentile=99.0)
+    c.observe(errs)
+    assert c.seen == 80                      # the 3 corrupt ones never count
+    np.testing.assert_allclose(
+        float(c.global_tau), float(jnp.percentile(finite, 99.0)), rtol=1e-6
+    )
+    # Per-fog routing excludes on both the global and the fog row.
+    c2 = StreamingCalibrator(capacity=64, n_fog=2, percentile=50.0)
+    c2.observe(
+        jnp.asarray([1.0, jnp.nan, 3.0]), jnp.asarray([0, 0, 1], jnp.int32)
+    )
+    taus = np.asarray(c2.taus())
+    np.testing.assert_allclose(taus[0], 1.0)
+    np.testing.assert_allclose(taus[1], 3.0)
+    np.testing.assert_allclose(taus[2], 2.0)
+    np.testing.assert_array_equal(np.asarray(c2.state.count), [1, 1, 2])
+
+
 def _train_tiny(store=None, rounds=3, **kw):
     from repro.core import hfl
     from repro.launch import experiment as exp
