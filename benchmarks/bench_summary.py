@@ -16,12 +16,13 @@ import json
 import os
 import sys
 
-from benchmarks import check_kernel_micro, check_serve_bench
+from benchmarks import check_kernel_micro, check_load_bench, check_serve_bench
 
 # json name -> (table, row-key fields, tracked field) triples.
 TABLE_SPECS: dict[str, tuple] = {
     "kernel_micro": check_kernel_micro.CHECKS,
     "serve_bench": check_serve_bench.CHECKS,
+    "load_bench": check_load_bench.CHECKS,
     "async_bench": (
         ("rows", ("alpha", "buffer_frac"), "sim_s_per_merge"),
         ("rows", ("alpha", "buffer_frac"), "speedup_vs_sync"),

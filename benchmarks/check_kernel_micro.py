@@ -34,7 +34,7 @@ def _index(rows: list[dict], keys: tuple[str, ...]) -> dict:
 
 
 def compare(
-    fresh: dict, baseline: dict, threshold: float, checks=CHECKS
+    fresh: dict, baseline: dict, threshold: float, checks=CHECKS, unit="us"
 ) -> list[str]:
     failures = []
     for table, keys, field in checks:
@@ -52,8 +52,8 @@ def compare(
                 continue
             ratio = fresh_row[field] / max(base_row[field], 1e-9)
             line = (
-                f"{tag}: {base_row[field]:.0f}us -> {fresh_row[field]:.0f}us "
-                f"({ratio:.2f}x)"
+                f"{tag}: {base_row[field]:.2f}{unit} -> "
+                f"{fresh_row[field]:.2f}{unit} ({ratio:.2f}x)"
             )
             if ratio > threshold:
                 failures.append(line)

@@ -1,0 +1,186 @@
+"""Gate for the serving-load benchmark: latency/throughput trends plus
+exact structural pins.
+
+  python -m benchmarks.check_load_bench FRESH.json BASELINE.json
+
+Four kinds of check against ``experiments/bench/load_bench.json``:
+
+* latency trend — per (trace, config) replay row, ``e2e_p50_ms`` /
+  ``e2e_p99_ms`` must not regress by more than THRESHOLD (3x, same noisy-
+  runner allowance as the sibling gates); missing rows fail loudly.
+* throughput trend — ``samples_per_s`` gated in the INVERSE direction
+  (a >3x *drop* fails); reuses the same row index.
+* exact pins (immune to runner noise):
+  - every replay row's ``compiles_by_bucket`` is exactly one trace per
+    configured bucket and matches the baseline row — a retrace under
+    load (shape leak, cache split) shows up here;
+  - the tenancy section keeps one compiled program per bucket TOTAL
+    across tenants, and the per-tenant hot-swap stays isolated;
+  - every replay completes every submitted event (``completed ==
+    n_events`` — a dropped or duplicated request is a correctness bug,
+    not noise).
+* structure — on the bursty (mmpp) trace, the deadline+bucket policy
+  must actually beat fixed batching: ``adaptive_bucketed`` p99 below
+  ``fixed`` p99, computed WITHIN the fresh JSON so the check cannot be
+  washed out by cross-run drift.  Int8 flag-mismatch fraction stays
+  under INT8_MISMATCH_FRAC.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.check_kernel_micro import compare
+
+THRESHOLD = 3.0
+INT8_MISMATCH_FRAC = 0.02
+
+LATENCY_CHECKS = (
+    ("replays", ("trace", "config"), "e2e_p50_ms"),
+    ("replays", ("trace", "config"), "e2e_p99_ms"),
+)
+THROUGHPUT_CHECKS = (("replays", ("trace", "config"), "samples_per_s"),)
+# What bench_summary tracks for this json.
+CHECKS = LATENCY_CHECKS + THROUGHPUT_CHECKS
+
+
+def _index(rows, keys):
+    return {tuple(r[k] for k in keys): r for r in rows}
+
+
+def _norm_buckets(d: dict) -> dict:
+    """JSON round-trips int dict keys as strings; compare canonically."""
+    return {int(k): int(v) for k, v in (d or {}).items()}
+
+
+def compare_throughput(fresh: dict, baseline: dict, threshold: float) -> list[str]:
+    """Inverse-direction trend: throughput DROPS are regressions."""
+    failures = []
+    for table, keys, field in THROUGHPUT_CHECKS:
+        fresh_rows = _index(fresh.get(table, []), keys)
+        for row_key, base_row in _index(baseline.get(table, []), keys).items():
+            if field not in base_row:
+                continue
+            tag = f"{table}[{dict(zip(keys, row_key))}].{field}"
+            fresh_row = fresh_rows.get(row_key)
+            if fresh_row is None or field not in fresh_row:
+                failures.append(f"{tag}: missing from the fresh JSON")
+                continue
+            ratio = base_row[field] / max(fresh_row[field], 1e-9)
+            line = (
+                f"{tag}: {base_row[field]:.0f}/s -> {fresh_row[field]:.0f}/s "
+                f"({ratio:.2f}x slower)"
+            )
+            if ratio > threshold:
+                failures.append(line)
+            else:
+                print(f"ok   {line}")
+    return failures
+
+
+def check_exact(fresh: dict, baseline: dict) -> list[str]:
+    failures = []
+    base_rows = _index(baseline.get("replays", []), ("trace", "config"))
+    for row in fresh.get("replays", []):
+        tag = f"replays[{row['trace']}/{row['config']}]"
+        compiles = _norm_buckets(row.get("compiles_by_bucket"))
+        if any(v != 1 for v in compiles.values()) or not compiles:
+            failures.append(
+                f"{tag}: compiles_by_bucket {compiles} != one trace per bucket"
+            )
+        base = base_rows.get((row["trace"], row["config"]))
+        if base is not None and _norm_buckets(
+            base.get("compiles_by_bucket")
+        ) != compiles:
+            failures.append(
+                f"{tag}: compiles_by_bucket {compiles} != baseline "
+                f"{_norm_buckets(base.get('compiles_by_bucket'))}"
+            )
+        if row.get("completed") != row.get("n_events"):
+            failures.append(
+                f"{tag}: completed {row.get('completed')} != submitted "
+                f"{row.get('n_events')} events"
+            )
+    for row_key, base in base_rows.items():
+        if row_key not in _index(fresh.get("replays", []), ("trace", "config")):
+            failures.append(f"replays[{row_key}]: missing from the fresh JSON")
+    ten = fresh.get("tenancy", {})
+    t_compiles = _norm_buckets(ten.get("compiles_by_bucket"))
+    if any(v != 1 for v in t_compiles.values()) or not t_compiles:
+        failures.append(
+            f"tenancy: compiles_by_bucket {t_compiles} != one compiled "
+            "program per bucket across all tenants"
+        )
+    if not ten.get("swap_isolated", False):
+        failures.append(
+            f"tenancy: per-tenant hot-swap not isolated "
+            f"(loaded_step={ten.get('loaded_step')})"
+        )
+    return failures
+
+
+def check_structure(fresh: dict) -> list[str]:
+    """Fresh-internal invariants: the policies must earn their keep."""
+    failures = []
+    rows = _index(fresh.get("replays", []), ("trace", "config"))
+    fixed = rows.get(("mmpp", "fixed"))
+    bucketed = rows.get(("mmpp", "adaptive_bucketed"))
+    if fixed is None or bucketed is None:
+        failures.append("structure: mmpp fixed/adaptive_bucketed rows missing")
+    elif bucketed["e2e_p99_ms"] >= fixed["e2e_p99_ms"]:
+        failures.append(
+            "structure: adaptive_bucketed p99 "
+            f"{bucketed['e2e_p99_ms']:.1f}ms does not beat fixed p99 "
+            f"{fixed['e2e_p99_ms']:.1f}ms on the bursty trace"
+        )
+    else:
+        print(
+            f"ok   mmpp p99: adaptive_bucketed {bucketed['e2e_p99_ms']:.1f}ms"
+            f" < fixed {fixed['e2e_p99_ms']:.1f}ms"
+        )
+    parity = fresh.get("int8_parity", {})
+    frac = parity.get("flag_mismatch_frac")
+    if frac is None:
+        failures.append("structure: int8_parity section missing")
+    elif frac > INT8_MISMATCH_FRAC:
+        failures.append(
+            f"structure: int8 flag mismatch frac {frac:.4f} > "
+            f"{INT8_MISMATCH_FRAC}"
+        )
+    else:
+        print(f"ok   int8 flag mismatch frac {frac:.4f}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated load_bench.json")
+    ap.add_argument("baseline", help="committed baseline load_bench.json")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = compare(fresh, baseline, args.threshold, LATENCY_CHECKS, unit="ms")
+    failures += compare_throughput(fresh, baseline, args.threshold)
+    failures += check_exact(fresh, baseline)
+    failures += check_structure(fresh)
+    if failures:
+        print(f"LOAD BENCH GATE FAILED ({len(failures)} check(s)):")
+        for line in failures:
+            print(f"FAIL {line}")
+        print(
+            "If this PR intentionally changed the load benchmark, regenerate "
+            "the baseline: PYTHONPATH=src python -m benchmarks.run "
+            "--only load_bench"
+        )
+        return 1
+    print(f"load_bench within {args.threshold}x of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

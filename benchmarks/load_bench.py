@@ -1,0 +1,229 @@
+"""Serving-under-load benchmark: arrival-trace replay on a virtual clock.
+
+``benchmarks/serve_bench`` times the score *kernel* and smoke-tests the
+service; this module measures what a caller actually experiences under
+production arrival patterns — END-TO-END request latency (queue wait +
+batch formation + device time), replayed open-loop from deterministic
+``repro.loadgen`` traces:
+
+* ``poisson`` — steady telemetry at a constant aggregate rate;
+* ``mmpp``    — bursty on/off delivery (acoustic surfacing), the shape
+  that breaks fixed-size batching: leftovers below ``batch_rows`` sit
+  through every silence.
+
+Each trace replays against the serving configs under test:
+
+* ``fixed``             — single 1024-row bucket, flush only when full
+  (the legacy policy);
+* ``adaptive``          — same bucket + ``max_wait_s`` deadline flush;
+* ``adaptive_bucketed`` — 128/1024 row buckets, deadline flush, bucket
+  picked by queue depth;
+* ``adaptive_bucketed_int8`` — ditto with int8-quantised serving weights
+  (dequant-in-program).
+
+Programs are warmed per bucket BEFORE replay, so ``compiles_by_bucket``
+is exactly one per bucket (an exact CI pin, ``check_load_bench``) and
+the latency percentiles measure steady-state serving, not compilation.
+A ``tenancy`` section replays the Poisson trace across three tenants of
+one :class:`~repro.serving.MultiTenantService` — same pin: one compiled
+program per bucket TOTAL, plus an isolated per-tenant hot-swap check.
+The committed JSON (``experiments/bench/load_bench.json``) is the
+baseline for the ``check_load_bench`` trend + structure gate.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.checkpoint import CheckpointStore
+from repro.loadgen import (
+    VirtualClock,
+    gaussian_windows,
+    mmpp_trace,
+    poisson_trace,
+    replay,
+)
+from repro.models import autoencoder as ae
+from repro.serving import MultiTenantService, ScoringService, quantize_params
+from repro.serving.score import score, score_q8
+from repro.serving.service import ScorePrograms
+
+D = 32                    # paper Table II feature dim
+HIDDEN = (16, 8, 16)
+FLEET = 64
+N_FOG = 4
+ROWS = 16                 # telemetry rows per arrival event
+BUCKETS = (128, 1024)
+MAX_WAIT_S = 0.02
+
+# name -> (buckets, max_wait_s, weight_dtype)
+CONFIGS = {
+    "fixed": ((1024,), None, "f32"),
+    "adaptive": ((1024,), MAX_WAIT_S, "f32"),
+    "adaptive_bucketed": (BUCKETS, MAX_WAIT_S, "f32"),
+    "adaptive_bucketed_int8": (BUCKETS, MAX_WAIT_S, "int8"),
+}
+
+
+def _traces(scale: common.Scale) -> dict:
+    dur = 4.0 if scale.quick else 12.0
+    return {
+        # ~250 ev/s: deadline flushes stay under the small bucket.
+        "poisson": poisson_trace(
+            0, rate_hz=250.0, duration_s=dur, fleet=FLEET, n_fog=N_FOG,
+            rows=ROWS,
+        ),
+        # Bursts fill full 1024-row batches; silences strand leftovers.
+        "mmpp": mmpp_trace(
+            1, rate_on_hz=2000.0, mean_on_s=0.3, mean_off_s=0.5,
+            duration_s=dur, fleet=FLEET, n_fog=N_FOG, rows=ROWS,
+        ),
+    }
+
+
+def _warm(programs: ScorePrograms, params, buckets) -> None:
+    """Trace every bucket's program once, outside the measured replay."""
+    prepared = programs.prepare(params)
+    for b in buckets:
+        err, _ = programs.fn(b)(
+            prepared,
+            jnp.zeros((b, D), jnp.float32),
+            jnp.full((b,), jnp.inf, jnp.float32),
+        )
+        err.block_until_ready()
+
+
+def _replay_row(trace_name, trace, cfg_name, cfg, params, store) -> dict:
+    buckets, max_wait_s, weight_dtype = cfg
+    programs = ScorePrograms(weight_dtype=weight_dtype, use_pallas=False)
+    _warm(programs, params, buckets)
+    clock = VirtualClock()
+    svc = ScoringService(
+        store, params, buckets=buckets, max_wait_s=max_wait_s, tau=1.0,
+        weight_dtype=weight_dtype, clock=clock, programs=programs,
+    )
+    rep = replay(svc, trace, clock, d=D)
+    row = dict(trace=trace_name, config=cfg_name, **rep.summary())
+    row["weight_dtype"] = weight_dtype
+    return row
+
+
+def _int8_parity(params, trace) -> dict:
+    """Same telemetry through f32 and int8 score paths; mismatched flags
+    at a mid-distribution tau are counted (expected ~0: the quantisation
+    error is ~0.5/127 of each column's range)."""
+    windows = gaussian_windows(trace, D)
+    x = np.concatenate([windows(i) for i in range(64)])
+    qparams = quantize_params(params)
+    err32 = np.asarray(score(params, x, np.inf).error)
+    tau = float(np.median(err32))
+    r32 = score(params, x, tau)
+    r8 = score_q8(qparams, x, tau)
+    mism = int(np.sum(np.asarray(r32.flag) != np.asarray(r8.flag)))
+    rel = np.abs(np.asarray(r8.error) - err32) / (np.abs(err32) + 1e-9)
+    return {
+        "rows": int(x.shape[0]),
+        "tau": tau,
+        "flag_mismatches": mism,
+        "flag_mismatch_frac": mism / x.shape[0],
+        "max_rel_err": float(rel.max()),
+    }
+
+
+def _tenancy(trace, params, store_factory) -> dict:
+    """Three deployments on one MultiTenantService: shared compiled
+    programs (one per bucket TOTAL) and per-tenant isolated hot-swap."""
+    clock = VirtualClock()
+    mt = MultiTenantService(
+        params, buckets=BUCKETS, max_wait_s=MAX_WAIT_S, clock=clock,
+        use_pallas=False,
+    )
+    _warm(mt.programs, params, BUCKETS)
+    names = ("basin_a", "basin_b", "basin_c")
+    stores = {}
+    for name in names:
+        stores[name] = store_factory()
+        stores[name].publish(1, params)
+        mt.add_tenant(name, stores[name], tau=1.0)
+    rep = replay(
+        mt, trace, clock, d=D, tenant_of=lambda i: names[i % len(names)]
+    )
+    # Publish a new round for ONE tenant; only that tenant may swap.
+    stores["basin_b"].publish(
+        2, jax.tree_util.tree_map(lambda a: a * 0.9, params)
+    )
+    mt.poll()
+    loaded = {name: mt.tenant(name).loaded_step for name in names}
+    return {
+        "n_tenants": len(names),
+        "replay": rep.summary(),
+        "compiles_by_bucket": mt.compiles_by_bucket,
+        "per_tenant_requests": {
+            name: mt.tenant(name).stats.requests for name in names
+        },
+        "loaded_step": loaded,
+        "swap_isolated": (
+            loaded["basin_b"] == 2
+            and loaded["basin_a"] == 1
+            and loaded["basin_c"] == 1
+        ),
+    }
+
+
+def run(scale: common.Scale) -> dict:
+    params = ae.init(jax.random.key(0), D, HIDDEN)
+    traces = _traces(scale)
+
+    with tempfile.TemporaryDirectory(prefix="load_bench_") as root:
+        dirs = iter(range(64))
+
+        def store_factory():
+            d = tempfile.mkdtemp(prefix=f"t{next(dirs)}_", dir=root)
+            return CheckpointStore(d, keep=2)
+
+        store = store_factory()
+        store.publish(1, params)
+
+        replays = [
+            _replay_row(tn, tr, cn, cfg, params, store)
+            for tn, tr in traces.items()
+            for cn, cfg in CONFIGS.items()
+        ]
+        tenancy = _tenancy(traces["poisson"], params, store_factory)
+
+    return {
+        "traces": {name: tr.summary() for name, tr in traces.items()},
+        "replays": replays,
+        "int8_parity": _int8_parity(params, traces["poisson"]),
+        "tenancy": tenancy,
+    }
+
+
+def report(res: dict) -> str:
+    lines = ["load_bench (open-loop trace replay, e2e = queue + batch + device)"]
+    lines.append(
+        f"{'trace':>8} {'config':>22} {'events':>7} {'p50 ms':>8} "
+        f"{'p99 ms':>8} {'fill':>7} {'partial':>8} {'samples/s':>11}"
+    )
+    for r in res["replays"]:
+        lines.append(
+            f"{r['trace']:>8} {r['config']:>22} {r['n_events']:>7} "
+            f"{r['e2e_p50_ms']:>8.1f} {r['e2e_p99_ms']:>8.1f} "
+            f"{r['mean_fill']:>7.1f} {r['partial_flushes']:>8} "
+            f"{r['samples_per_s']:>11.0f}"
+        )
+    p = res["int8_parity"]
+    lines.append(
+        f"int8 parity: {p['flag_mismatches']}/{p['rows']} flag mismatches "
+        f"at tau={p['tau']:.3f}, max rel err {p['max_rel_err']:.2e}"
+    )
+    t = res["tenancy"]
+    lines.append(
+        f"tenancy: {t['n_tenants']} tenants, shared compiles "
+        f"{t['compiles_by_bucket']}, swap isolated: {t['swap_isolated']}"
+    )
+    return "\n".join(lines)

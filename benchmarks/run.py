@@ -25,6 +25,7 @@ MODULES = (
     "ablations",
     "kernel_micro",
     "serve_bench",
+    "load_bench",
     "roofline",
     "async_bench",
     "robustness_bench",

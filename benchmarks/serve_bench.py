@@ -123,7 +123,7 @@ def report(res: dict) -> str:
     s = res["service"]
     lines.append(
         f"service: {s['samples']} samples / {s['steps']} micro-batches, "
-        f"p50 {s['p50_ms']:.2f} ms p99 {s['p99_ms']:.2f} ms, "
+        f"device-step p50 {s['step_p50_ms']:.2f} ms p99 {s['step_p99_ms']:.2f} ms, "
         f"{s['samples_per_s']:.0f} samples/s, swaps={s['swaps']} "
         f"compiles={s['compiles']}"
     )

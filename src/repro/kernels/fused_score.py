@@ -52,6 +52,67 @@ def _fused_score_kernel(x_ref, tau_ref, *refs, n_layers: int):
     flag_ref[...] = (err[None, :] > tau_ref[...]).astype(jnp.float32)
 
 
+def _fused_score_q8_kernel(x_ref, tau_ref, *refs, n_layers: int):
+    """int8-weight variant: each layer ships (q int8, scale (1, d_out),
+    bias) and is dequantised per output channel IN VMEM right before its
+    matmul — HBM (and the resident weight blocks) only ever hold int8,
+    a 4x cut of the weight bytes that stay live across the row sweep."""
+    err_ref, flag_ref = refs[-2], refs[-1]
+    x = x_ref[...].astype(jnp.float32)            # (SCORE_ROWS, d_pad)
+    h = x
+    for li in range(n_layers):
+        q = refs[3 * li][...]                     # (d_in_pad, d_out_pad) i8
+        s = refs[3 * li + 1][...]                 # (1, d_out_pad) f32
+        b = refs[3 * li + 2][...]                 # (1, d_out_pad) f32
+        w = q.astype(jnp.float32) * s             # per-channel dequant
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b
+        if li < n_layers - 1:
+            h = jnp.tanh(h)
+    diff = x - h
+    err = jnp.sum(diff * diff, axis=-1)           # (SCORE_ROWS,)
+    err_ref[...] = err[None, :]
+    flag_ref[...] = (err[None, :] > tau_ref[...]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def score_blocks_q8(
+    x: jax.Array,                  # (R_pad, d_pad) f32, R_pad % SCORE_ROWS == 0
+    tau: jax.Array,                # (nb, SCORE_ROWS) f32 (+inf on padded rows)
+    qws: tuple[jax.Array, ...],    # padded int8 weights, (d_in_pad, d_out_pad)
+    sws: tuple[jax.Array, ...],    # padded scales, (1, d_out_pad) f32
+    bs: tuple[jax.Array, ...],     # padded biases, (1, d_out_pad) f32
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused score sweep with int8-resident weights (see the q8 kernel).
+
+    Same grid/layout contract as :func:`score_blocks`; zero-padded int8
+    weight rows/columns dequantise to exact zeros (0 * scale), so padding
+    stays exact."""
+    r_pad, d_pad = x.shape
+    assert r_pad % SCORE_ROWS == 0 and d_pad % LANES == 0, x.shape
+    nb = r_pad // SCORE_ROWS
+    assert tau.shape == (nb, SCORE_ROWS), tau.shape
+
+    x_spec = pl.BlockSpec((SCORE_ROWS, d_pad), lambda i: (i, 0))
+    row_spec = pl.BlockSpec((1, SCORE_ROWS), lambda i: (i, 0))
+    wb_specs = []
+    for q, s, b in zip(qws, sws, bs):
+        wb_specs.append(pl.BlockSpec(q.shape, lambda i: (0, 0)))
+        wb_specs.append(pl.BlockSpec(s.shape, lambda i: (0, 0)))
+        wb_specs.append(pl.BlockSpec(b.shape, lambda i: (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_fused_score_q8_kernel, n_layers=len(qws)),
+        grid=(nb,),
+        in_specs=[x_spec, row_spec, *wb_specs],
+        out_specs=[row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, SCORE_ROWS), jnp.float32),
+            jax.ShapeDtypeStruct((nb, SCORE_ROWS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, tau, *[a for qsb in zip(qws, sws, bs) for a in qsb])
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def score_blocks(
     x: jax.Array,                  # (R_pad, d_pad) f32, R_pad % SCORE_ROWS == 0

@@ -375,6 +375,53 @@ def fused_score(
     return err.reshape(-1)[:r], flag.reshape(-1)[:r] > 0.0
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def fused_score_q8(
+    x: jax.Array,        # (R, d) telemetry rows
+    qparams: Any,        # quantized AE params: list of {"qw", "sw", "b"}
+    tau: jax.Array,      # scalar or (R,) per-row thresholds
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """int8-serving-weight sibling of :func:`fused_score`.
+
+    ``qparams`` holds per-layer int8 weights with per-output-channel f32
+    scales (``serving/score.quantize_params``); dequantisation happens
+    inside the fused program (jnp oracle and Pallas kernel alike), so the
+    resident weight buffers stay int8.  Same padding contract as
+    :func:`fused_score` — int8 zero padding dequantises to exact zeros.
+    """
+    r, d = x.shape
+    qws = tuple(layer["qw"] for layer in qparams)
+    sws = tuple(layer["sw"] for layer in qparams)
+    bs = tuple(layer["b"] for layer in qparams)
+    tau_rows = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (r,))
+    if not use_pallas:
+        return _ref.fused_score_q8_ref(x, qws, sws, bs, tau_rows)
+
+    rows_pad = max(1, -(-r // _fs.SCORE_ROWS)) * _fs.SCORE_ROWS
+    dims = (d,) + tuple(q.shape[1] for q in qws)    # layer output dims
+    dims_pad = tuple(max(1, -(-dd // _fs.LANES)) * _fs.LANES for dd in dims)
+    x_pad = _pad2(x.astype(jnp.float32), rows_pad, dims_pad[0])
+    qws_pad = tuple(
+        _pad2(q, dims_pad[i], dims_pad[i + 1]) for i, q in enumerate(qws)
+    )
+    sws_pad = tuple(
+        _pad2(s.astype(jnp.float32).reshape(1, -1), 1, dims_pad[i + 1])
+        for i, s in enumerate(sws)
+    )
+    bs_pad = tuple(
+        _pad2(b.astype(jnp.float32)[None, :], 1, dims_pad[i + 1])
+        for i, b in enumerate(bs)
+    )
+    tau_pad = jnp.full((rows_pad,), jnp.inf, jnp.float32).at[:r].set(tau_rows)
+    err, flag = _fs.score_blocks_q8(
+        x_pad, tau_pad.reshape(-1, _fs.SCORE_ROWS), qws_pad, sws_pad, bs_pad,
+        interpret,
+    )
+    return err.reshape(-1)[:r], flag.reshape(-1)[:r] > 0.0
+
+
 def _ravel_deltas(dws, dbs, n):
     # ravel_pytree order for a list of {"b", "w"} dicts: per layer, bias
     # first (dict keys sort alphabetically), then the row-major weight.

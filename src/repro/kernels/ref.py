@@ -242,6 +242,24 @@ def fused_score_ref(
     return err, err > tau
 
 
+def fused_score_q8_ref(
+    x: jax.Array,                  # (R, d) telemetry rows
+    qws: tuple[jax.Array, ...],    # per-layer int8 weights, (d_in, d_out)
+    sws: tuple[jax.Array, ...],    # per-layer scales, (1, d_out) f32
+    bs: tuple[jax.Array, ...],     # per-layer f32 biases, (d_out,)
+    tau: jax.Array,                # (R,) per-row thresholds
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the int8-weight fused score kernel: per-output-channel
+    symmetric dequantisation (``w = q * scale``) INSIDE the program, then
+    exactly :func:`fused_score_ref`.  The f32 weights never exist outside
+    the compiled computation — the serving buffers stay int8."""
+    ws = tuple(
+        q.astype(jnp.float32) * s.astype(jnp.float32).reshape(1, -1)
+        for q, s in zip(qws, sws)
+    )
+    return fused_score_ref(x, ws, bs, tau)
+
+
 def local_train_ref(
     x: jax.Array,                 # (window, D) one client's resident window
     idx: jax.Array,               # (steps, bsz) int32 minibatch row indices

@@ -13,8 +13,16 @@ from repro.serving.calibrate import (  # noqa: F401
 )
 from repro.serving.score import (  # noqa: F401
     ScoreResult,
+    dequantize_params,
     fleet_tau,
+    quantize_params,
     score,
     score_fleet,
+    score_q8,
 )
-from repro.serving.service import ScoringService, ServiceStats  # noqa: F401
+from repro.serving.service import (  # noqa: F401
+    ScorePrograms,
+    ScoringService,
+    ServiceStats,
+)
+from repro.serving.tenancy import MultiTenantService  # noqa: F401

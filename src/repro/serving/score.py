@@ -79,6 +79,81 @@ def score(
     return ScoreResult(err.reshape(lead), flag.reshape(lead))
 
 
+def quantize_params(params: Any) -> Any:
+    """Per-layer, per-output-channel symmetric int8 weight quantisation.
+
+    Each layer ``{"w", "b"}`` becomes ``{"qw" int8, "sw" (1, d_out) f32,
+    "b" f32}`` with ``w ≈ qw * sw`` (``sw = amax(|w|, axis=0) / 127``);
+    biases stay f32 (they are a rounding error of the weight bytes).
+    Reuses the symmetric-amax scheme of ``kernels/quant8`` at per-column
+    granularity, which keeps the reconstruction-error shift within
+    ~0.5/127 of each column's dynamic range — tight enough that threshold
+    flags survive (parity-tested).  This is the opt-in
+    ``weight_dtype="int8"`` serving representation; dequantisation happens
+    inside the fused score program (:func:`score_q8`)."""
+    q = []
+    for layer in params:
+        w = jnp.asarray(layer["w"], jnp.float32)
+        scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        qw = jnp.clip(jnp.round(w / safe), -127, 127).astype(jnp.int8)
+        qw = jnp.where(scale > 0, qw, jnp.zeros_like(qw))
+        q.append({
+            "qw": qw,
+            "sw": scale.astype(jnp.float32),
+            "b": jnp.asarray(layer["b"], jnp.float32),
+        })
+    return q
+
+
+def dequantize_params(qparams: Any) -> Any:
+    """Materialise f32 ``{"w", "b"}`` layers from :func:`quantize_params`
+    output (the unfused/legacy pipeline and tests use this; the fused
+    paths dequantise in-program instead)."""
+    return [
+        {"w": layer["qw"].astype(jnp.float32) * layer["sw"].reshape(1, -1),
+         "b": layer["b"]}
+        for layer in qparams
+    ]
+
+
+def score_q8(
+    qparams: Any,
+    x: jax.Array,
+    tau: jax.Array | float,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    fused: bool = True,
+) -> ScoreResult:
+    """:func:`score` over int8-quantised serving weights.
+
+    ``qparams`` comes from :func:`quantize_params`; the fused paths
+    (oracle and Pallas) dequantise per output channel inside the score
+    program, so the weight buffers stay int8 end to end.  ``fused=False``
+    materialises f32 weights and runs the legacy three-program pipeline —
+    the equivalence baseline, exactly like the f32 path's opt-out."""
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if interpret is None:
+        interpret = not default_use_pallas()
+    lead = x.shape[:-1]
+    rows = x.reshape(-1, x.shape[-1])
+    tau_rows = jnp.broadcast_to(
+        jnp.asarray(tau, jnp.float32), lead
+    ).reshape(-1)
+    if fused:
+        err, flag = kops.fused_score_q8(
+            rows, qparams, tau_rows, use_pallas=use_pallas, interpret=interpret
+        )
+    else:
+        params = dequantize_params(qparams)
+        err = anomaly.reconstruction_errors(ae.apply, params, rows)
+        flag = anomaly.flag_anomalies(err, tau_rows)
+    flag = jnp.where(jnp.isfinite(err), flag, True)
+    return ScoreResult(err.reshape(lead), flag.reshape(lead))
+
+
 def fleet_tau(
     fog_tau: jax.Array,       # (n_fog,) per-fog thresholds
     fog_id: jax.Array,        # (fleet,) int32 fog assignment per sensor

@@ -12,6 +12,7 @@ from benchmarks import (
     bench_summary,
     check_async_bench,
     check_kernel_micro,
+    check_load_bench,
     check_robustness_bench,
     check_sweep_compile,
 )
@@ -241,6 +242,123 @@ def test_robust_gate_fails_loudly_on_missing_row():
         {"rows": []}, _robust_json()
     )
     assert any("anchor" in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# check_load_bench (latency/throughput trends + exact pins + structure)
+# ---------------------------------------------------------------------------
+
+def _load_row(trace, config, p50=10.0, p99=20.0, sps=1e6, buckets=(128, 1024),
+              completed=100):
+    return {
+        "trace": trace, "config": config, "n_events": 100,
+        "completed": completed, "e2e_p50_ms": p50, "e2e_p99_ms": p99,
+        "samples_per_s": sps,
+        # json round-trips int keys as strings: model that worst case.
+        "compiles_by_bucket": {str(b): 1 for b in buckets},
+    }
+
+
+def _load_json(
+    fixed_p99=400.0,
+    bucketed_p99=20.0,
+    bucketed_sps=1e6,
+    compiles=1,
+    completed=100,
+    mismatch_frac=0.001,
+    swap_isolated=True,
+) -> dict:
+    rows = [
+        _load_row("mmpp", "fixed", p99=fixed_p99, buckets=(1024,)),
+        _load_row("mmpp", "adaptive_bucketed", p99=bucketed_p99,
+                  sps=bucketed_sps, completed=completed),
+    ]
+    rows[1]["compiles_by_bucket"] = {"128": compiles, "1024": compiles}
+    return {
+        "replays": rows,
+        "int8_parity": {"flag_mismatch_frac": mismatch_frac},
+        "tenancy": {
+            "compiles_by_bucket": {"128": 1, "1024": 1},
+            "swap_isolated": swap_isolated,
+            "loaded_step": {"a": 1, "b": 2},
+        },
+    }
+
+
+def test_load_gate_passes_on_healthy_json(capsys):
+    base = _load_json()
+    failures = check_load_bench.compare(
+        base, base, 3.0, check_load_bench.LATENCY_CHECKS, unit="ms"
+    )
+    failures += check_load_bench.compare_throughput(base, base, 3.0)
+    failures += check_load_bench.check_exact(base, base)
+    failures += check_load_bench.check_structure(base)
+    assert failures == []
+
+
+def test_load_gate_trips_on_latency_regression():
+    failures = check_load_bench.compare(
+        _load_json(bucketed_p99=90.0), _load_json(), 3.0,
+        check_load_bench.LATENCY_CHECKS,
+    )
+    assert any("e2e_p99_ms" in f for f in failures)
+
+
+def test_load_gate_trips_on_throughput_drop_inverse_direction():
+    """samples_per_s gates the INVERSE ratio: a drop fails, a gain never."""
+    failures = check_load_bench.compare_throughput(
+        _load_json(bucketed_sps=1e5), _load_json(bucketed_sps=1e6), 3.0
+    )
+    assert any("samples_per_s" in f for f in failures)
+    assert check_load_bench.compare_throughput(
+        _load_json(bucketed_sps=1e7), _load_json(bucketed_sps=1e6), 3.0
+    ) == []
+
+
+def test_load_gate_fails_loudly_on_missing_row():
+    fresh = _load_json()
+    fresh["replays"] = fresh["replays"][:1]    # dropped adaptive_bucketed
+    failures = check_load_bench.compare(
+        fresh, _load_json(), 3.0, check_load_bench.LATENCY_CHECKS
+    )
+    assert any("missing" in f for f in failures)
+    failures = check_load_bench.check_exact(fresh, _load_json())
+    assert any("missing" in f for f in failures)
+
+
+def test_load_gate_trips_on_retrace_and_dropped_requests():
+    failures = check_load_bench.check_exact(
+        _load_json(compiles=2), _load_json()
+    )
+    assert any("compiles_by_bucket" in f for f in failures)
+    failures = check_load_bench.check_exact(
+        _load_json(completed=99), _load_json(completed=99)
+    )
+    assert any("completed" in f for f in failures)
+
+
+def test_load_gate_structure_checks():
+    # Adaptive batching failing to beat fixed p99 on the bursty trace is a
+    # failure even when every trend ratio looks fine.
+    failures = check_load_bench.check_structure(
+        _load_json(fixed_p99=15.0, bucketed_p99=20.0)
+    )
+    assert any("does not beat" in f for f in failures)
+    failures = check_load_bench.check_structure(_load_json(mismatch_frac=0.5))
+    assert any("int8" in f for f in failures)
+    failures = check_load_bench.check_structure({"replays": []})
+    assert any("missing" in f for f in failures)
+
+
+def test_load_gate_trips_on_tenancy_violations():
+    bad = _load_json()
+    bad["tenancy"]["compiles_by_bucket"] = {"128": 2, "1024": 1}
+    failures = check_load_bench.check_exact(bad, _load_json())
+    assert any("per bucket" in f for f in failures)
+    failures = check_load_bench.check_exact(
+        _load_json(swap_isolated=False), _load_json()
+    )
+    assert any("hot-swap" in f for f in failures)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,179 @@
+"""Tests for the load-generation subsystem (repro.loadgen, ISSUE 8).
+
+Trace generators: determinism (same seed/args -> identical arrays),
+sortedness, horizon clipping, fog routing (``sensor % n_fog``), realised
+rates near the configured ones, MMPP silences and diurnal modulation
+actually present.  Harness: virtual-clock semantics, open-loop replay
+completing every event with true e2e latency recorded, and the
+structural point of the whole subsystem — deadline batching beating
+fixed batching at the tail on a bursty trace.
+"""
+import numpy as np
+import pytest
+
+from repro.loadgen import (
+    VirtualClock,
+    diurnal_trace,
+    gaussian_windows,
+    mmpp_trace,
+    poisson_trace,
+    replay,
+)
+
+
+def _poisson(seed=0, **kw):
+    args = dict(rate_hz=200.0, duration_s=2.0, fleet=16, n_fog=4, rows=8)
+    args.update(kw)
+    return poisson_trace(seed, **args)
+
+
+def _mmpp(seed=1, **kw):
+    args = dict(rate_on_hz=1500.0, mean_on_s=0.2, mean_off_s=0.6,
+                duration_s=3.0, fleet=16, n_fog=4, rows=8)
+    args.update(kw)
+    return mmpp_trace(seed, **args)
+
+
+# ---------------------------------------------------------------------------
+# trace generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker", [_poisson, _mmpp])
+def test_traces_are_deterministic_and_seed_sensitive(maker):
+    a, b, c = maker(seed=3), maker(seed=3), maker(seed=4)
+    np.testing.assert_array_equal(a.t, b.t)
+    np.testing.assert_array_equal(a.sensor, b.sensor)
+    np.testing.assert_array_equal(a.fog, b.fog)
+    assert a.t.shape != c.t.shape or not np.array_equal(a.t, c.t)
+
+
+@pytest.mark.parametrize("maker", [_poisson, _mmpp])
+def test_trace_invariants(maker):
+    tr = maker()
+    assert np.all(np.diff(tr.t) >= 0), "arrivals must be time-sorted"
+    assert tr.t[0] >= 0 and tr.t[-1] < tr.duration_s
+    assert np.all((tr.sensor >= 0) & (tr.sensor < tr.meta["fleet"]))
+    np.testing.assert_array_equal(tr.fog, tr.sensor % tr.meta["n_fog"])
+    assert tr.total_rows == tr.n_events * tr.rows
+    s = tr.summary()
+    assert s["n_events"] == len(tr) and s["kind"] == tr.kind
+
+
+def test_poisson_realised_rate_near_configured():
+    tr = _poisson(rate_hz=500.0, duration_s=8.0)
+    # Poisson count has sd sqrt(n) ~ 63 on n=4000: 10% is a loose 6-sigma.
+    assert abs(tr.mean_rate_hz() - 500.0) / 500.0 < 0.10
+
+
+def test_mmpp_has_real_silences():
+    """rate_off=0 must produce inter-arrival gaps on the order of the off
+    sojourn — the burstiness fixed-size batching chokes on."""
+    tr = _mmpp()
+    gaps = np.diff(tr.t)
+    assert gaps.max() > 0.2, "no silence in an on/off trace"
+    # And bursts are dense: median gap is the on-state spacing.
+    assert np.median(gaps) < 0.005
+    assert tr.meta["bursts"] >= 1
+
+
+def test_diurnal_modulation_present():
+    tr = diurnal_trace(
+        5, base_rate_hz=50.0, peak_rate_hz=500.0, period_s=2.0,
+        duration_s=2.0, fleet=8, n_fog=2,
+    )
+    # sin peaks in the first half-period, troughs in the second.
+    first = int(np.sum(tr.t < 1.0))
+    second = tr.n_events - first
+    assert first > 2 * second
+
+
+def test_trace_argument_validation():
+    with pytest.raises(ValueError):
+        _poisson(rate_hz=0.0)
+    with pytest.raises(ValueError):
+        _mmpp(mean_off_s=0.0)
+    with pytest.raises(ValueError):
+        diurnal_trace(0, base_rate_hz=10.0, peak_rate_hz=5.0, period_s=1.0,
+                      duration_s=1.0, fleet=4, n_fog=2)
+
+
+def test_gaussian_windows_deterministic_per_event():
+    tr = _poisson()
+    w = gaussian_windows(tr, d=12, seed=7)
+    np.testing.assert_array_equal(w(3), w(3))
+    assert w(3).shape == (tr.rows, 12) and w(3).dtype == np.float32
+    assert not np.array_equal(w(3), w(4))
+
+
+# ---------------------------------------------------------------------------
+# virtual clock + replay harness
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_semantics():
+    c = VirtualClock()
+    assert c() == 0.0
+    c.advance(0.5)
+    c.advance_to(0.3)          # never rewinds
+    assert c() == 0.5
+    c.advance_to(1.0)
+    assert c() == 1.0
+
+
+def _service(store_dir, clock, **kw):
+    import jax
+
+    from repro.checkpoint import CheckpointStore
+    from repro.models import autoencoder as ae
+    from repro.serving import ScoringService
+
+    params = ae.init(jax.random.key(0), 12, (8, 4, 8))
+    store = CheckpointStore(str(store_dir))
+    store.publish(1, params)
+    return ScoringService(store, params, tau=1.0, clock=clock, **kw)
+
+
+def test_replay_completes_every_event_with_e2e_latency(tmp_path):
+    tr = _poisson(rate_hz=300.0, duration_s=1.0)
+    clock = VirtualClock()
+    svc = _service(tmp_path, clock, buckets=(64, 256), max_wait_s=0.05)
+    rep = replay(svc, tr, clock, d=12)
+    assert rep.completed == rep.n_events == tr.n_events
+    assert rep.samples == tr.total_rows
+    assert rep.e2e_latency_s.shape == (tr.n_events,)
+    assert np.all(rep.e2e_latency_s >= 0)
+    # Deadline policy: no completed request waited forever.
+    assert rep.e2e_latency_s.max() < 1.0
+    assert rep.virtual_s >= tr.t[-1]
+    s = rep.summary()
+    assert s["e2e_p99_ms"] >= s["e2e_p50_ms"] > 0
+    assert set(s["compiles_by_bucket"]) <= {64, 256}
+
+
+def test_replay_adaptive_beats_fixed_tail_on_bursty_trace(tmp_path):
+    """The tentpole claim, in miniature: on an on/off trace, deadline
+    flushing bounds the tail while fixed batching strands burst leftovers
+    through every silence."""
+    tr = _mmpp(duration_s=2.0)
+    clock_f = VirtualClock()
+    fixed = _service(tmp_path / "f", clock_f, batch_rows=256)
+    rep_f = replay(fixed, tr, clock_f, d=12)
+    clock_a = VirtualClock()
+    adaptive = _service(
+        tmp_path / "a", clock_a, buckets=(64, 256), max_wait_s=0.02
+    )
+    rep_a = replay(adaptive, tr, clock_a, d=12)
+    assert rep_f.completed == rep_a.completed == tr.n_events
+    p99_f = np.percentile(rep_f.e2e_latency_s, 99.0)
+    p99_a = np.percentile(rep_a.e2e_latency_s, 99.0)
+    assert p99_a < p99_f, (p99_a, p99_f)
+    # And the adaptive config paid for it with partial flushes.
+    assert rep_a.partial_flushes > 0
+
+
+def test_replay_without_drain_leaves_leftovers_queued(tmp_path):
+    tr = _poisson(rate_hz=100.0, duration_s=0.5)
+    clock = VirtualClock()
+    svc = _service(tmp_path, clock, batch_rows=1 << 14)  # never fills
+    rep = replay(svc, tr, clock, d=12, drain=False)
+    assert rep.completed == 0
+    assert svc.pending_rows() == tr.total_rows
