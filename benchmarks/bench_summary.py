@@ -32,10 +32,15 @@ TABLE_SPECS: dict[str, tuple] = {
         ("rows", ("robust", "byz_frac", "erasure"), "f1_mean"),
         ("rows", ("robust", "byz_frac", "erasure"), "nonfinite_rounds"),
     ),
+    "drift_bench": (
+        ("rows", ("cell",), "f1_mean"),
+        ("rows", ("cell",), "participation"),
+    ),
 }
 
 # jsons whose ``engine`` block (sweep compile accounting) is summarised.
-ENGINE_JSONS = ("fig6_energy", "ablations", "async_bench", "robustness_bench")
+ENGINE_JSONS = ("fig6_energy", "ablations", "async_bench", "robustness_bench",
+                "drift_bench")
 
 
 def _load(path: str) -> dict | None:

@@ -1,0 +1,190 @@
+"""Trend gate for the dynamic-world benchmark (sibling of
+``check_robustness_bench``).
+
+  python -m benchmarks.check_drift_bench FRESH.json BASELINE.json
+
+Contracts, all on the committed ``drift_bench.json`` quantities:
+
+* frozen association degrades: under drift the ``frozen`` cell must shed
+  at least ``--part-margin`` participation vs the ``static`` anchor —
+  stale assignments must demonstrably stop covering the moving fleet;
+* re-association holds: the ``reassoc`` cell stays within ``--part-tol``
+  participation of the anchor AND within ``--f1-tol`` F1 of it (and every
+  drift cell keeps F1 at the anchor level — drift must not corrupt the
+  model, only the cohort);
+* adaptive attack collapses the mean: ``adaptive-mean`` sits at least
+  ``--degrade-margin`` F1 below the ``clean-mean`` anchor;
+* robust rules survive the adaptive attack: ``adaptive-trimmed`` and
+  ``adaptive-median`` stay within ``--f1-tol`` of ``clean-mean``;
+* graceful degradation: zero non-finite global-model rounds anywhere;
+* one program per shape-class: ``sweep_compiled_programs <= n_classes``
+  (the drift trio must co-batch via the ``active=True`` pin).
+
+A vanished row fails loudly, exactly like the other gates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+F1_TOL = 0.12
+DEGRADE_MARGIN = 0.30
+PART_MARGIN = 0.08
+PART_TOL = 0.06
+
+
+def _rows(res: dict) -> dict:
+    return {r["cell"]: r for r in res.get("rows", [])}
+
+
+def compare(
+    fresh: dict,
+    baseline: dict,
+    f1_tol: float = F1_TOL,
+    degrade_margin: float = DEGRADE_MARGIN,
+    part_margin: float = PART_MARGIN,
+    part_tol: float = PART_TOL,
+) -> list[str]:
+    failures = []
+    fresh_rows, base_rows = _rows(fresh), _rows(baseline)
+
+    for cell in base_rows:
+        if cell not in fresh_rows:
+            failures.append(f"rows[{cell}]: missing from the fresh JSON")
+
+    static = fresh_rows.get("static")
+    clean = fresh_rows.get("clean-mean")
+    if static is None or clean is None:
+        failures.append(
+            "rows[static] / rows[clean-mean]: anchor row missing — "
+            "nothing to compare against"
+        )
+        return failures
+
+    # Zero NaN rounds everywhere (graceful degradation).
+    for cell, row in sorted(fresh_rows.items()):
+        if row.get("nonfinite_rounds", 0.0) != 0.0:
+            failures.append(
+                f"rows[{cell}]: {row['nonfinite_rounds']:g} non-finite "
+                "global-model round(s)"
+            )
+
+    # --- drift grid: participation carries the degradation story.
+    frozen = fresh_rows.get("frozen")
+    reassoc = fresh_rows.get("reassoc")
+    if frozen is not None:
+        line = (f"rows[frozen].participation: {frozen['participation']:.3f} "
+                f"vs static {static['participation']:.3f}")
+        if static["participation"] - frozen["participation"] < part_margin:
+            failures.append(
+                f"{line} (frozen association no longer degrades by "
+                f"{part_margin} — the drift scenario demonstrates nothing)"
+            )
+        else:
+            print(f"ok   {line} (collapsed, as the benchmark requires)")
+    if reassoc is not None:
+        line = (f"rows[reassoc].participation: "
+                f"{reassoc['participation']:.3f} vs static "
+                f"{static['participation']:.3f}")
+        if static["participation"] - reassoc["participation"] > part_tol:
+            failures.append(f"{line} (re-association lost > {part_tol})")
+        else:
+            print(f"ok   {line}")
+    for cell in ("static", "frozen", "reassoc"):
+        row = fresh_rows.get(cell)
+        if row is None:
+            continue
+        line = (f"rows[{cell}].f1_mean: {row['f1_mean']:.3f} vs static "
+                f"{static['f1_mean']:.3f}")
+        if static["f1_mean"] - row["f1_mean"] > f1_tol:
+            failures.append(f"{line} (dropped > {f1_tol})")
+        elif cell != "static":
+            print(f"ok   {line}")
+
+    # --- attack grid: F1 carries the story (corruption moves the model).
+    attacked_mean = fresh_rows.get("adaptive-mean")
+    if attacked_mean is not None:
+        line = (f"rows[adaptive-mean].f1_mean: "
+                f"{attacked_mean['f1_mean']:.3f} vs clean "
+                f"{clean['f1_mean']:.3f}")
+        if clean["f1_mean"] - attacked_mean["f1_mean"] < degrade_margin:
+            failures.append(
+                f"{line} (adaptive attack no longer collapses the mean by "
+                f"{degrade_margin})"
+            )
+        else:
+            print(f"ok   {line} (collapsed, as the benchmark requires)")
+    for cell in ("adaptive-trimmed", "adaptive-median"):
+        row = fresh_rows.get(cell)
+        if row is None:
+            continue
+        line = (f"rows[{cell}].f1_mean: {row['f1_mean']:.3f} vs clean "
+                f"{clean['f1_mean']:.3f}")
+        if clean["f1_mean"] - row["f1_mean"] > f1_tol:
+            failures.append(f"{line} (dropped > {f1_tol})")
+        else:
+            print(f"ok   {line}")
+
+    # --- vs the committed baseline: anchors and robust cells must not
+    # drift down (the attacked mean collapsing harder is not a regression).
+    for cell, row in sorted(fresh_rows.items()):
+        base_row = base_rows.get(cell)
+        if base_row is None or cell == "adaptive-mean":
+            continue
+        line = (f"rows[{cell}].f1_mean: baseline "
+                f"{base_row['f1_mean']:.3f} -> {row['f1_mean']:.3f}")
+        if base_row["f1_mean"] - row["f1_mean"] > f1_tol:
+            failures.append(f"{line} (dropped > {f1_tol})")
+        else:
+            print(f"ok   {line}")
+
+    # --- one compiled program per shape-class.
+    eng = fresh.get("engine") or {}
+    n_classes = fresh.get("n_classes")
+    if eng and n_classes:
+        compiled = eng.get("sweep_compiled_programs")
+        cells = eng.get("sweep_cells")
+        line = (f"engine: {compiled} compiled program(s) for {cells} cells, "
+                f"{n_classes} shape-classes")
+        if compiled is None or compiled > n_classes:
+            failures.append(f"{line} (config-axis batching regressed)")
+        else:
+            print(f"ok   {line}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated drift_bench.json")
+    ap.add_argument("baseline", help="committed baseline drift_bench.json")
+    ap.add_argument("--f1-tol", type=float, default=F1_TOL)
+    ap.add_argument("--degrade-margin", type=float, default=DEGRADE_MARGIN)
+    ap.add_argument("--part-margin", type=float, default=PART_MARGIN)
+    ap.add_argument("--part-tol", type=float, default=PART_TOL)
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(
+        fresh, baseline, args.f1_tol, args.degrade_margin,
+        args.part_margin, args.part_tol,
+    )
+    if failures:
+        print("DRIFT REGRESSION:")
+        for line in failures:
+            print(f"FAIL {line}")
+        print(
+            "If this PR intentionally changed the drift model, the "
+            "re-association cadence semantics, or the adaptive attack, "
+            "regenerate the baseline: "
+            "PYTHONPATH=src python -m benchmarks.run --only drift_bench"
+        )
+        return 1
+    print("drift_bench within tolerance of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

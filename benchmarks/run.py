@@ -29,6 +29,7 @@ MODULES = (
     "roofline",
     "async_bench",
     "robustness_bench",
+    "drift_bench",
 )
 
 

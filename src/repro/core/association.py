@@ -69,3 +69,53 @@ def nearest_feasible_fog(
         fog_gateway_dist_m=d_fg,
         fog_gateway_feasible=ch.feasible(d_fg, cparams),
     )
+
+
+def assigned_fog_association(
+    dep: Deployment,
+    cparams: ch.ChannelParams,
+    fog_id: jax.Array,       # (N,) int32 — frozen assignment
+    assigned: jax.Array,     # (N,) bool — had a feasible fog at assignment
+) -> FogAssociation:
+    """Stale assignment, live physics (drift layer, Sec. III-A mobility).
+
+    Recomputes distances, SNR feasibility, cluster sizes and fog-gateway
+    links from the CURRENT geometry against a FROZEN sensor->fog
+    assignment: a sensor whose assigned fog drifted out of range drops
+    out until the next re-association refresh.  When ``fog_id`` /
+    ``assigned`` come fresh from :func:`nearest_feasible_fog` on the same
+    deployment, the result is bit-identical to it (the per-pair distance
+    uses the same ``sqrt(sum(sq) + 1e-12)`` ops as
+    ``ch.pairwise_distances``), which is what makes neutral drift cells
+    pin against the legacy path.
+    """
+    diff = dep.sensor_pos - dep.fog_pos[fog_id]
+    d = jnp.sqrt(jnp.sum(jnp.square(diff), axis=-1) + 1e-12)
+    participates = assigned & ch.feasible(d, cparams)
+
+    n_fog = dep.fog_pos.shape[0]
+    one_hot = jax.nn.one_hot(fog_id, n_fog, dtype=jnp.int32) * participates[
+        :, None
+    ].astype(jnp.int32)
+    cluster_size = jnp.sum(one_hot, axis=0)
+
+    d_fg = jnp.linalg.norm(dep.fog_pos - dep.gateway_pos[None, :], axis=-1)
+    return FogAssociation(
+        fog_id=fog_id,
+        participates=participates,
+        dist_m=d,
+        cluster_size=cluster_size,
+        fog_gateway_dist_m=d_fg,
+        fog_gateway_feasible=ch.feasible(d_fg, cparams),
+    )
+
+
+def assigned_flat_association(
+    dep: Deployment, cparams: ch.ChannelParams, assigned: jax.Array
+) -> FlatAssociation:
+    """Flat-FL sibling of :func:`assigned_fog_association`: frozen round
+    membership, live gateway distance + feasibility."""
+    d = jnp.linalg.norm(dep.sensor_pos - dep.gateway_pos[None, :], axis=-1)
+    return FlatAssociation(
+        participates=assigned & ch.feasible(d, cparams), dist_m=d
+    )

@@ -210,6 +210,11 @@ class AsyncState(NamedTuple):
     cli_sum: jax.Array        # (N, d_or_0) — weighted arrival sums
     cli_w: jax.Array          # (N,) — accumulated arrival weight
     cli_fog: jax.Array        # (N,) int32 — fog of the latest arrival
+    # Dynamic-world carry (zeros when drift/adaptive attack are off):
+    assoc_fog: jax.Array      # (N,) int32 — frozen sensor->fog assignment
+    assoc_ok: jax.Array       # (N,) bool — feasible at assignment time
+    tick: jax.Array           # () int32 — fog-tick counter
+    prev_delta: jax.Array     # (d,) last global delta (adaptive colluders)
 
 
 def init_state(
@@ -249,6 +254,10 @@ def init_state(
         ),
         cli_w=jnp.zeros((n,)),
         cli_fog=jnp.zeros((n,), jnp.int32),
+        assoc_fog=jnp.zeros((n,), jnp.int32),
+        assoc_ok=jnp.zeros((n,), bool),
+        tick=jnp.int32(0),
+        prev_delta=jnp.zeros((d,), flat.dtype),
     )
 
 
@@ -268,6 +277,9 @@ def make_event_fn(
         )
     fl = cfg.faults
     fault_on = fl.is_active       # STATIC: off => exact legacy event
+    dr = cfg.drift
+    drift_on = dr.is_active       # STATIC: off => exact legacy event
+    adaptive = fault_on and fl.byz_mode == "adaptive"
 
     def event_fn(state: AsyncState, _) -> tuple[AsyncState, AsyncEventMetrics]:
         if fault_on:
@@ -279,9 +291,29 @@ def make_event_fn(
         dep = state.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
+        if drift_on:
+            dep = topo.current_advection_step(
+                dep, cfg.deployment, dr.sensor_current_m_s
+            )
 
         # --- association: who could launch / deliver this tick -----------
-        fa = assoc.nearest_feasible_fog(dep, cfg.channel)
+        if drift_on:
+            # Re-association cadence counts fog ticks (the async round
+            # analogue); tick 0 always refreshes.
+            t_f = state.tick.astype(jnp.float32)
+            cadence = jnp.maximum(
+                jnp.asarray(dr.reassoc_every, jnp.float32), 1.0
+            )
+            refresh = jnp.mod(t_f, cadence) < 0.5
+            fresh = assoc.nearest_feasible_fog(dep, cfg.channel)
+            assoc_fog = jnp.where(refresh, fresh.fog_id, state.assoc_fog)
+            assoc_ok = jnp.where(refresh, fresh.participates, state.assoc_ok)
+            fa = assoc.assigned_fog_association(
+                dep, cfg.channel, assoc_fog, assoc_ok
+            )
+        else:
+            assoc_fog, assoc_ok = state.assoc_fog, state.assoc_ok
+            fa = assoc.nearest_feasible_fog(dep, cfg.channel)
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
         if fault_on:
@@ -303,11 +335,16 @@ def make_event_fn(
         # client masking of the synchronous loops.
         launch = active & ~state.busy
         launch_f = launch.astype(jnp.float32)
-        deltas, losses = clients_fn(state.params, ds.train, keys)
+        train = ds.train
+        if drift_on:
+            train = train * (1.0 + dr.covariate_shift * t_f)
+        deltas, losses = clients_fn(state.params, train, keys)
         if fault_on:
             # Byzantine corruption hits the raw delta before compression —
             # the attacker controls what leaves the sensor.
-            deltas = flt.corrupt_deltas(k_byz, deltas, fl)
+            deltas = flt.corrupt_deltas(
+                k_byz, deltas, fl, prev_delta=state.prev_delta
+            )
         n_nonfinite = jnp.sum(
             (launch & flt.nonfinite_rows(deltas)).astype(jnp.int32)
         )
@@ -557,6 +594,15 @@ def make_event_fn(
             cli_sum=cli_sum,
             cli_w=cli_w,
             cli_fog=cli_fog,
+            assoc_fog=assoc_fog,
+            assoc_ok=assoc_ok,
+            tick=state.tick + 1,
+            # Adaptive colluders observe the realised global movement,
+            # which only happens on merge ticks.
+            prev_delta=(
+                jnp.where(merge, new_flat - flat0, state.prev_delta)
+                if adaptive else state.prev_delta
+            ),
         )
         return new_state, metrics
 

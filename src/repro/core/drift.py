@@ -1,0 +1,112 @@
+"""Dynamic-world knobs: mid-training drift + periodic re-association
+(ROADMAP scenario diversity: time-varying topology and distribution
+shift).
+
+:class:`DriftConfig` is a registered pytree mirroring
+:class:`repro.core.faults.FaultConfig`: the rates and the re-association
+cadence are traceable sweep LEAVES, so ``Engine.sweep`` grids drift
+cells exactly like the physics knobs, and the static aux datum is the
+derived ``active`` on/off predicate, pinned through flatten/unflatten so
+round loops can branch Python-side while the rates themselves are
+tracers.  Pinning ``active=True`` on a zero-rate cell lets a drift grid
+with a static corner co-batch into ONE shape-class.
+
+Semantics (threaded through the round scans of ``core/hfl.py``,
+``core/flat_fl.py`` and ``core/async_fl.py``):
+
+* **Sensor current advection** — a deterministic depth-sheared
+  horizontal current (``topology.current_advection_step``) moves the
+  SENSORS each round/tick; the fogs keep their Gauss-Markov walk
+  (``fog_mobility``).  Deterministic on purpose: the drift layer adds NO
+  extra PRNG splits, so drift-off numerics are trivially bit-identical
+  to the legacy path (the PR 7 fault-off discipline).
+* **Periodic re-association** — the sensor->fog assignment is CARRIED in
+  the round state and refreshed from the live geometry only every
+  ``reassoc_every`` rounds (``1`` = recompute every round, the legacy
+  behaviour; ``inf`` = frozen after round 0).  Between refreshes the
+  stale assignment meets the LIVE physics: distances, SNR feasibility,
+  Eq. 18 energy and Eq. 21 latency are recomputed from current positions
+  against the frozen fog id — a sensor whose assigned fog drifted out of
+  range silently drops out.  That is the collapse mode periodic
+  re-association exists to fix, and what ``benchmarks/drift_bench.py``
+  measures.
+* **Covariate shift** — client training inputs are scaled by
+  ``1 + covariate_shift * round`` inside the loop, a deterministic
+  distribution-shift schedule (generation-time schedules live in
+  ``data/synthetic.py``; this one moves the world mid-training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+def _concrete(x: Any) -> bool:
+    return isinstance(x, (int, float))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Dynamic-world knobs.  All three rates are pytree LEAVES
+    (traceable/stackable); the derived ``active`` predicate is static
+    aux data."""
+
+    sensor_current_m_s: float | Any = 0.0  # horizontal advection speed
+    reassoc_every: float | Any = 1.0       # re-association cadence (rounds)
+    covariate_shift: float | Any = 0.0     # per-round input-scale drift
+    active: bool | None = None             # static on/off (None = derive)
+
+    def __post_init__(self) -> None:
+        if _concrete(self.sensor_current_m_s) and self.sensor_current_m_s < 0:
+            raise ValueError(
+                "sensor_current_m_s must be >= 0, got "
+                f"{self.sensor_current_m_s!r}"
+            )
+        if _concrete(self.reassoc_every) and self.reassoc_every < 1:
+            raise ValueError(
+                f"reassoc_every must be >= 1 round, got {self.reassoc_every!r}"
+            )
+
+    def replace(self, **kw: Any) -> "DriftConfig":
+        # Changing a rate leaf re-derives the static predicate unless the
+        # caller pins it explicitly (FaultConfig.replace pattern).
+        if "active" not in kw and any(
+            f in kw for f in _DRIFT_LEAF_FIELDS
+        ):
+            kw["active"] = None
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def is_active(self) -> bool:
+        """STATIC drift-layer switch.  A pinned value wins; otherwise any
+        non-concrete (traced) rate, a nonzero rate, or a non-unit
+        re-association cadence turns the layer on.  When False, round
+        loops take the exact legacy path — same key splits, zero extra
+        ops."""
+        if self.active is not None:
+            return self.active
+        rates = (self.sensor_current_m_s, self.covariate_shift)
+        if any((not _concrete(r)) or r != 0.0 for r in rates):
+            return True
+        k = self.reassoc_every
+        return (not _concrete(k)) or k != 1.0
+
+
+_DRIFT_LEAF_FIELDS = ("sensor_current_m_s", "reassoc_every", "covariate_shift")
+
+
+def _drift_flatten(c: DriftConfig):
+    return (
+        tuple(getattr(c, f) for f in _DRIFT_LEAF_FIELDS),
+        (c.is_active,),
+    )
+
+
+def _drift_unflatten(aux, children) -> DriftConfig:
+    kw = dict(zip(_DRIFT_LEAF_FIELDS, children))
+    return DriftConfig(active=aux[0], **kw)
+
+
+jax.tree_util.register_pytree_node(DriftConfig, _drift_flatten, _drift_unflatten)

@@ -28,6 +28,16 @@ Semantics (threaded through all four round-loop families):
   not the fog decoded the frame) and the client's error-feedback buffer
   still advances (the sender cannot know); only the aggregation weight
   vanishes.  Erasures are surfaced per round as ``n_erased``.
+* **Adaptive collusion** — ``byz_mode="adaptive"`` is an
+  a-little-is-enough style moving adversary: the colluders observe the
+  PREVIOUS round's global delta (carried in the round state) and all
+  submit the same crafted update ``mu - byz_scale * sigma * dirn``,
+  where ``mu``/``sigma`` are the honest batch statistics and ``dirn``
+  opposes the model's previous movement.  With ``byz_scale`` around 3
+  the crafted point hugs the trimmed-mean band edge: a trim fraction
+  covering ``byz_frac`` cuts the colluder clump, while the plain mean
+  takes a compounding push and collapses — the contract
+  ``benchmarks/check_drift_bench.py`` gates.
 """
 from __future__ import annotations
 
@@ -37,7 +47,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-BYZ_MODES = ("none", "sign_flip", "gauss", "inflate")
+BYZ_MODES = ("none", "sign_flip", "gauss", "inflate", "adaptive")
 
 
 def _concrete(x: Any) -> bool:
@@ -62,6 +72,15 @@ class FaultConfig:
             raise ValueError(
                 f"byz_mode must be one of {BYZ_MODES}, got {self.byz_mode!r}"
             )
+        # Range checks only on CONCRETE values: traced/stacked sweep
+        # leaves pass through (``__post_init__`` re-runs on every pytree
+        # unflatten, including inside jit).
+        for name in ("erasure_prob", "crash_prob", "byz_frac"):
+            v = getattr(self, name)
+            if _concrete(v) and not 0.0 <= v <= 1.0:
+                raise ValueError(
+                    f"{name} must be a probability in [0, 1], got {v!r}"
+                )
 
     def replace(self, **kw: Any) -> "FaultConfig":
         # Changing a probability leaf re-derives the static predicate
@@ -121,11 +140,15 @@ def corrupt_deltas(
     key: jax.Array,
     deltas: jax.Array,          # (N, d) raw flat client updates
     cfg: FaultConfig,
+    prev_delta: jax.Array | None = None,   # (d,) last global delta
 ) -> jax.Array:
     """Inject the configured Byzantine behaviour into the delta stream
     (BEFORE compression — the attacker controls what leaves the sensor).
 
     ``byz_mode`` branches statically; the mask/scale are traceable.
+    ``prev_delta`` feeds the ``adaptive`` colluders; round loops carry it
+    in their state (zeros before the first merge, where ``sign(mu)`` is
+    the fallback direction).
     """
     if cfg.byz_mode == "none":
         return deltas
@@ -135,6 +158,15 @@ def corrupt_deltas(
         attacked = -scale * deltas
     elif cfg.byz_mode == "gauss":
         attacked = scale * jax.random.normal(key, deltas.shape, deltas.dtype)
+    elif cfg.byz_mode == "adaptive":
+        if prev_delta is None:
+            prev_delta = jnp.zeros(deltas.shape[-1], deltas.dtype)
+        mu = jnp.mean(deltas, axis=0)
+        sigma = jnp.std(deltas, axis=0)
+        dirn = jnp.where(prev_delta == 0.0, jnp.sign(mu), jnp.sign(prev_delta))
+        attacked = jnp.broadcast_to(
+            mu - scale * sigma * dirn, deltas.shape
+        )
     else:  # inflate
         attacked = scale * deltas
     return jnp.where(mask[:, None], attacked, deltas)

@@ -65,11 +65,18 @@ def make_flat_round_fn(
         )
     fl = cfg.faults
     fault_on = fl.is_active       # STATIC: off => exact legacy round
+    dr = cfg.drift
+    drift_on = dr.is_active       # STATIC: off => exact legacy round
+    adaptive = fault_on and fl.byz_mode == "adaptive"
     if client_mesh is not None and (fault_on or cfg.robust != "mean"):
         raise ValueError(
             "client-sharded rounds do not support fault injection or "
             "robust aggregation (the per-client reconstructions never "
             "leave their shard)"
+        )
+    if client_mesh is not None and drift_on:
+        raise ValueError(
+            "client-sharded rounds do not support the drift layer yet"
         )
     if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
         raise ValueError(
@@ -87,8 +94,25 @@ def make_flat_round_fn(
         dep = state.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
+        if drift_on:
+            dep = topo.current_advection_step(
+                dep, cfg.deployment, dr.sensor_current_m_s
+            )
 
-        fa = assoc.flat_association(dep, cfg.channel)
+        if drift_on:
+            # Frozen round membership, live gateway physics (see
+            # hfl.make_round_fn — identical cadence logic).
+            t_f = state.t.astype(jnp.float32)
+            cadence = jnp.maximum(
+                jnp.asarray(dr.reassoc_every, jnp.float32), 1.0
+            )
+            refresh = jnp.mod(t_f, cadence) < 0.5
+            fresh = assoc.flat_association(dep, cfg.channel)
+            assoc_ok = jnp.where(refresh, fresh.participates, state.assoc_ok)
+            fa = assoc.assigned_flat_association(dep, cfg.channel, assoc_ok)
+        else:
+            assoc_ok = state.assoc_ok
+            fa = assoc.flat_association(dep, cfg.channel)
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
         if fault_on:
@@ -100,6 +124,9 @@ def make_flat_round_fn(
         d = flat0.shape[0]
         n = ds.train.shape[0]
         keys = jax.random.split(k_train, n)
+        train = ds.train
+        if drift_on:
+            train = train * (1.0 + dr.covariate_shift * t_f)
 
         active_f = active.astype(jnp.float32)
         # Erasure after feasibility: energy charged, EF advanced, weight 0.
@@ -112,9 +139,11 @@ def make_flat_round_fn(
         gateway_id = jnp.zeros((ds.train.shape[0],), jnp.int32)
 
         if client_mesh is None:
-            deltas, losses = clients_fn(state.params, ds.train, keys)
+            deltas, losses = clients_fn(state.params, train, keys)
             if fault_on:
-                deltas = flt.corrupt_deltas(k_byz, deltas, fl)
+                deltas = flt.corrupt_deltas(
+                    k_byz, deltas, fl, prev_delta=state.prev_delta
+                )
             n_nonfinite = jnp.sum(
                 (delivered & flt.nonfinite_rows(deltas)).astype(jnp.int32)
             )
@@ -141,7 +170,7 @@ def make_flat_round_fn(
                 out_specs=(P(), P(), P("data"), P("data")),
             )
             fog_delta, _, new_err, losses = sharded(
-                state.params, ds.train, keys, state.err, weights, gateway_id
+                state.params, train, keys, state.err, weights, gateway_id
             )
             n_nonfinite = jnp.int32(0)
         new_err = jnp.where(active[:, None], new_err, state.err)
@@ -184,7 +213,14 @@ def make_flat_round_fn(
             n_erased=jnp.sum(erased.astype(jnp.int32)),
             global_finite=jnp.all(jnp.isfinite(flat0 + incr)),
         )
-        return HFLState(new_params, new_err, battery, dep, key, server), metrics
+        prev_delta = incr if adaptive else state.prev_delta
+        return (
+            HFLState(
+                new_params, new_err, battery, dep, key, server,
+                state.assoc_fog, assoc_ok, state.t + 1, prev_delta,
+            ),
+            metrics,
+        )
 
     return round_fn
 
@@ -240,6 +276,9 @@ def train_scaffold(
     fl_cfg = cfg.faults
     fault_on = fl_cfg.is_active
     fault_path = fault_on or cfg.robust != "mean"
+    dr = cfg.drift
+    drift_on = dr.is_active
+    adaptive = fault_on and fl_cfg.byz_mode == "adaptive"
 
     n = ds.train.shape[0]
     state = ScaffoldTrainState(
@@ -258,13 +297,31 @@ def train_scaffold(
         dep = st.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
-        fa = assoc.flat_association(dep, cfg.channel)
+        if drift_on:
+            dep = topo.current_advection_step(
+                dep, cfg.deployment, dr.sensor_current_m_s
+            )
+        if drift_on:
+            t_f = st.t.astype(jnp.float32)
+            cadence = jnp.maximum(
+                jnp.asarray(dr.reassoc_every, jnp.float32), 1.0
+            )
+            refresh = jnp.mod(t_f, cadence) < 0.5
+            fresh = assoc.flat_association(dep, cfg.channel)
+            assoc_ok = jnp.where(refresh, fresh.participates, st.assoc_ok)
+            fa = assoc.assigned_flat_association(dep, cfg.channel, assoc_ok)
+        else:
+            assoc_ok = st.assoc_ok
+            fa = assoc.flat_association(dep, cfg.channel)
         active = fa.participates & (st.battery > cfg.energy.e_min_j)
         if fault_on:
             active = active & ~flt.draw_crash(k_crash, n, fl_cfg.crash_prob)
         active_f = active.astype(jnp.float32)
 
         keys = jax.random.split(k_train, n)
+        train = ds.train
+        if drift_on:
+            train = train * (1.0 + dr.covariate_shift * t_f)
 
         def client_step(data, k, c_i):
             batches = multi_epoch_batches(
@@ -278,7 +335,7 @@ def train_scaffold(
             return delta, new_ci, dc, loss
 
         deltas, new_ci, dcs, losses = jax.vmap(client_step)(
-            ds.train, keys, s.ctrl.c_local
+            train, keys, s.ctrl.c_local
         )
         if fault_on:
             erased = active & flt.draw_erasure(k_erase, n, fl_cfg.erasure_prob)
@@ -291,7 +348,9 @@ def train_scaffold(
         if fault_path:
             flat_deltas = jax.vmap(lambda t: ravel_pytree(t)[0])(deltas)
             if fault_on:
-                flat_deltas = flt.corrupt_deltas(k_byz, flat_deltas, fl_cfg)
+                flat_deltas = flt.corrupt_deltas(
+                    k_byz, flat_deltas, fl_cfg, prev_delta=st.prev_delta
+                )
             finite = ~flt.nonfinite_rows(flat_deltas)
             n_nonfinite = jnp.sum((delivered & ~finite).astype(jnp.int32))
             w_del = weights * finite.astype(jnp.float32)
@@ -354,9 +413,15 @@ def train_scaffold(
                 jnp.isfinite(ravel_pytree(new_params)[0])
             ),
         )
+        # Adaptive colluders observe the realised global movement (the
+        # flat mean delta; only computed on the fault path).
+        prev_delta = mean_flat if adaptive else st.prev_delta
         return (
             ScaffoldTrainState(
-                HFLState(new_params, st.err, battery, dep, key, st.server),
+                HFLState(
+                    new_params, st.err, battery, dep, key, st.server,
+                    st.assoc_fog, assoc_ok, st.t + 1, prev_delta,
+                ),
                 scf.ScaffoldState(new_cg, new_cl),
             ),
             metrics,

@@ -42,6 +42,7 @@ from repro.core import association as assoc
 from repro.core import channel as ch
 from repro.core import compression as comp
 from repro.core import cooperation as coop
+from repro.core import drift as drf
 from repro.core import energy as en
 from repro.core import faults as flt
 from repro.core import topology as topo
@@ -74,6 +75,16 @@ class HFLConfig:
     packet erasure (see :mod:`repro.core.faults`); when it is statically
     inactive and ``robust == "mean"`` the round loop is bit-identical to
     the legacy path (same PRNG splits).
+
+    Dynamic world: ``drift`` (see :mod:`repro.core.drift`) advects the
+    sensors in a deterministic current inside the round scan, freezes the
+    sensor->fog assignment between ``reassoc_every``-round re-association
+    refreshes (stale assignment, live physics), and applies a per-round
+    covariate-shift schedule to the client training windows.  The layer
+    is deterministic — it consumes no PRNG keys — so with
+    ``drift.is_active`` False the round is bit-identical to the legacy
+    path, and a neutral-active cell (zero rates, unit cadence) pins
+    bit-identical too.
     """
 
     rule: coop.CoopRule = coop.CoopRule.SELECTIVE
@@ -95,6 +106,22 @@ class HFLConfig:
     robust: str = "mean"             # fog reduce: mean | trimmed | median
     trim_frac: float | Any = 0.0     # weight fraction cut per end (trimmed)
     faults: flt.FaultConfig = flt.FaultConfig()
+    drift: drf.DriftConfig = drf.DriftConfig()
+
+    def __post_init__(self) -> None:
+        if self.robust not in ("mean", "trimmed", "median"):
+            raise ValueError(
+                f"robust must be 'mean', 'trimmed' or 'median', got "
+                f"{self.robust!r}"
+            )
+        # Concrete values only: trim_frac is a sweep leaf, so traced /
+        # stacked values pass (``__post_init__`` re-runs on unflatten).
+        tf = self.trim_frac
+        if isinstance(tf, (int, float)) and not 0.0 <= tf < 0.5:
+            raise ValueError(
+                "trim_frac cuts a weight fraction from EACH end and must "
+                f"be in [0, 0.5), got {tf!r}"
+            )
 
     def replace(self, **kw: Any) -> "HFLConfig":
         return dataclasses.replace(self, **kw)
@@ -102,7 +129,7 @@ class HFLConfig:
 
 _HFL_LEAF_FIELDS = (
     "lr", "prox_mu", "server_lr", "compute_rate_flops",
-    "compressor", "channel", "energy", "trim_frac", "faults",
+    "compressor", "channel", "energy", "trim_frac", "faults", "drift",
 )
 _HFL_AUX_FIELDS = (
     "rule", "rounds", "local_epochs", "batch_size", "server_opt",
@@ -151,6 +178,12 @@ class HFLState(NamedTuple):
     dep: topo.Deployment
     key: jax.Array
     server: srv.ServerOptState  # gateway optimiser state (FedAdam)
+    # Dynamic-world carry (zeros when drift/adaptive attack are off; the
+    # drift layer refreshes the assignment at round 0 before first use):
+    assoc_fog: jax.Array      # (N,) int32 — frozen sensor->fog assignment
+    assoc_ok: jax.Array       # (N,) bool — feasible at assignment time
+    t: jax.Array              # () int32 — round counter
+    prev_delta: jax.Array     # (d,) last global delta (adaptive colluders)
 
 
 def init_state(
@@ -167,6 +200,10 @@ def init_state(
         dep=dep,
         key=kr,
         server=srv.init_state(flat.shape[0]),
+        assoc_fog=jnp.zeros((n,), jnp.int32),
+        assoc_ok=jnp.zeros((n,), bool),
+        t=jnp.int32(0),
+        prev_delta=jnp.zeros((flat.shape[0],), flat.dtype),
     )
 
 
@@ -271,11 +308,18 @@ def make_round_fn(
         )
     fl = cfg.faults
     fault_on = fl.is_active       # STATIC: off => exact legacy round
+    dr = cfg.drift
+    drift_on = dr.is_active       # STATIC: off => exact legacy round
+    adaptive = fault_on and fl.byz_mode == "adaptive"
     if client_mesh is not None and (fault_on or cfg.robust != "mean"):
         raise ValueError(
             "client-sharded rounds do not support fault injection or "
             "robust aggregation (the per-client reconstructions never "
             "leave their shard)"
+        )
+    if client_mesh is not None and drift_on:
+        raise ValueError(
+            "client-sharded rounds do not support the drift layer yet"
         )
     if client_mesh is not None and ds.train.shape[0] % client_mesh.size != 0:
         raise ValueError(
@@ -293,9 +337,31 @@ def make_round_fn(
         dep = state.dep
         if cfg.fog_mobility:
             dep = topo.gauss_markov_step(k_mob, dep, cfg.deployment)
+        if drift_on:
+            dep = topo.current_advection_step(
+                dep, cfg.deployment, dr.sensor_current_m_s
+            )
 
         # --- 1. association + cooperation decisions (lines 1-7) ----------
-        fa = assoc.nearest_feasible_fog(dep, cfg.channel)
+        if drift_on:
+            # Stale assignment, live physics: refresh the carried
+            # sensor->fog assignment every ``reassoc_every`` rounds (round
+            # 0 always refreshes), then recompute distances / feasibility /
+            # clusters from CURRENT geometry against the frozen fog id.
+            t_f = state.t.astype(jnp.float32)
+            cadence = jnp.maximum(
+                jnp.asarray(dr.reassoc_every, jnp.float32), 1.0
+            )
+            refresh = jnp.mod(t_f, cadence) < 0.5
+            fresh = assoc.nearest_feasible_fog(dep, cfg.channel)
+            assoc_fog = jnp.where(refresh, fresh.fog_id, state.assoc_fog)
+            assoc_ok = jnp.where(refresh, fresh.participates, state.assoc_ok)
+            fa = assoc.assigned_fog_association(
+                dep, cfg.channel, assoc_fog, assoc_ok
+            )
+        else:
+            assoc_fog, assoc_ok = state.assoc_fog, state.assoc_ok
+            fa = assoc.nearest_feasible_fog(dep, cfg.channel)
         alive = state.battery > cfg.energy.e_min_j
         active = fa.participates & alive
         if fault_on:
@@ -319,6 +385,12 @@ def make_round_fn(
         d = flat0.shape[0]
         n = ds.train.shape[0]
         keys = jax.random.split(k_train, n)
+        train = ds.train
+        if drift_on:
+            # Deterministic covariate-shift schedule: the telemetry scale
+            # drifts a fraction per round (zero shift multiplies by 1.0,
+            # which is bit-exact).
+            train = train * (1.0 + dr.covariate_shift * t_f)
 
         active_f = active.astype(jnp.float32)
         # Erasure strikes AFTER the SNR feasibility gate: the packet was
@@ -333,9 +405,11 @@ def make_round_fn(
         weights = ds.n_samples * delivered.astype(jnp.float32)
 
         if client_mesh is None:
-            deltas, losses = clients_fn(state.params, ds.train, keys)
+            deltas, losses = clients_fn(state.params, train, keys)
             if fault_on:
-                deltas = flt.corrupt_deltas(k_byz, deltas, fl)
+                deltas = flt.corrupt_deltas(
+                    k_byz, deltas, fl, prev_delta=state.prev_delta
+                )
             n_nonfinite = jnp.sum(
                 (delivered & flt.nonfinite_rows(deltas)).astype(jnp.int32)
             )
@@ -364,7 +438,7 @@ def make_round_fn(
                 out_specs=(P(), P(), P("data"), P("data")),
             )
             fog_delta, fog_weight, new_err, losses = sharded(
-                state.params, ds.train, keys, state.err, weights, fa.fog_id
+                state.params, train, keys, state.err, weights, fa.fog_id
             )
             # Sharded deltas never leave their shard: the isfinite guard
             # inside compress_and_accumulate still protects, only the
@@ -437,8 +511,14 @@ def make_round_fn(
             n_erased=jnp.sum(erased.astype(jnp.int32)),
             global_finite=jnp.all(jnp.isfinite(new_flat)),
         )
+        # Adaptive colluders observe the realised global movement; other
+        # modes leave the carried delta untouched (identical graph).
+        prev_delta = new_flat - flat0 if adaptive else state.prev_delta
         return (
-            HFLState(new_params, new_err, battery, dep, key, server),
+            HFLState(
+                new_params, new_err, battery, dep, key, server,
+                assoc_fog, assoc_ok, state.t + 1, prev_delta,
+            ),
             metrics,
         )
 

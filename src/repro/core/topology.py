@@ -103,3 +103,36 @@ def gauss_markov_step(
     pos = jnp.clip(pos, lo, hi)  # guard pathological double-reflection
     vel = jnp.where(over_hi | under_lo, -vel, vel)
     return Deployment(dep.sensor_pos, pos, vel, dep.gateway_pos)
+
+
+def current_advection_step(
+    dep: Deployment, params: DeploymentParams, speed_m_s: float | jax.Array
+) -> Deployment:
+    """Advect SENSORS one round interval in a depth-sheared ocean current.
+
+    The current is horizontal and deterministic — direction rotates with
+    depth (a crude thermocline shear: ``(cos, sin)(2 pi z / depth_m)``)
+    so co-located sensors at different depths separate over time.
+    Determinism is load-bearing: the drift layer must not consume PRNG
+    keys, keeping drift-off round numerics bit-identical to the legacy
+    path.  ``speed_m_s`` is traceable (a ``DriftConfig`` sweep leaf).
+    Positions reflect into the sensor stratum exactly like the fog walk.
+    """
+    s = jnp.asarray(speed_m_s, jnp.float32)
+    z = dep.sensor_pos[:, 2]
+    phase = 2.0 * jnp.pi * z / params.depth_m
+    vel = jnp.stack(
+        [s * jnp.cos(phase), s * jnp.sin(phase), jnp.zeros_like(z)], axis=-1
+    )
+    pos = dep.sensor_pos + vel * params.round_interval_s
+
+    lo = jnp.array([0.0, 0.0, params.sensor_depth[0]], jnp.float32)
+    hi = jnp.array(
+        [params.lx_m, params.ly_m, params.sensor_depth[1]], jnp.float32
+    )
+    over_hi = pos > hi
+    under_lo = pos < lo
+    pos = jnp.where(over_hi, 2.0 * hi - pos, pos)
+    pos = jnp.where(under_lo, 2.0 * lo - pos, pos)
+    pos = jnp.clip(pos, lo, hi)
+    return Deployment(pos, dep.fog_pos, dep.fog_vel, dep.gateway_pos)

@@ -12,6 +12,16 @@ Anomalies injected into test windows (labels returned):
   - spike: additive heavy-tailed burst on a feature subset,
   - drift: slow additive ramp,
   - stuck: a feature subset frozen at a constant.
+
+Distribution-shift schedules (dynamic world, PR 9): ``covariate_shift``
+adds a linear mean ramp across the WHOLE per-sensor series (train -> val
+-> test), so models trained on the early window score a drifted test
+window; ``label_shift`` confines the anomaly segments to the late
+``1 - label_shift`` fraction of the test window, a prevalence schedule.
+Both default to 0.0, which generates bit-identical data to the legacy
+path (same PRNG draws, same arithmetic).  The IN-TRAINING covariate
+schedule (world moving between federated rounds) lives in
+``core/drift.DriftConfig`` instead.
 """
 from __future__ import annotations
 
@@ -35,6 +45,15 @@ class SyntheticConfig:
     anomaly_rate: float = 0.15     # fraction of anomalous test points
     noise_std: float = 0.05
     anomaly_scale: float = 1.5
+    # Distribution-shift schedules (0.0 = bit-identical legacy data):
+    covariate_shift: float = 0.0   # mean ramp magnitude over the series
+    label_shift: float = 0.0       # in [0, 1): anomalies pushed this late
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.label_shift < 1.0:
+            raise ValueError(
+                f"label_shift must be in [0, 1), got {self.label_shift!r}"
+            )
 
 
 class SensorDataset(NamedTuple):
@@ -65,15 +84,24 @@ def _latent_process(key: jax.Array, length: int, dim: int) -> jax.Array:
 
 
 def _inject_anomalies(
-    key: jax.Array, x: jax.Array, rate: float, scale: float
+    key: jax.Array, x: jax.Array, rate: float, scale: float,
+    label_shift: float = 0.0,
 ) -> tuple[jax.Array, jax.Array]:
-    """Inject segment anomalies; returns (x', labels)."""
+    """Inject segment anomalies; returns (x', labels).
+
+    ``label_shift`` in [0, 1) confines segment starts to the late
+    ``1 - label_shift`` fraction of the window (a prevalence-timing
+    schedule); 0.0 reproduces the legacy draws bit-for-bit.
+    """
     length, d = x.shape
     kseg, ktype, kfeat, kmag = jax.random.split(key, 4)
     # ~3 segments whose total expected length matches `rate`.
     n_seg = 3
     seg_len = max(1, int(rate * length / n_seg))
-    starts = jax.random.randint(kseg, (n_seg,), 0, max(1, length - seg_len))
+    min_start = int(label_shift * max(1, length - seg_len))
+    starts = jax.random.randint(
+        kseg, (n_seg,), min_start, max(min_start + 1, length - seg_len)
+    )
     pos = jnp.arange(length)
     label = jnp.zeros((length,), bool)
     for s in range(n_seg):
@@ -116,10 +144,17 @@ def generate(key: jax.Array, cfg: SyntheticConfig) -> SensorDataset:
         x = latent @ obs_map + cfg.noise_std * jax.random.normal(
             kn, (total, cfg.feature_dim)
         )
+        if cfg.covariate_shift:
+            # Linear mean ramp over the whole series: the world the test
+            # window sees is not the world the train window saw.
+            ramp = jnp.linspace(0.0, 1.0, total, dtype=x.dtype)[:, None]
+            x = x + cfg.covariate_shift * ramp
         train = x[: cfg.train_len]
         val = x[cfg.train_len : cfg.train_len + cfg.val_len]
         test = x[cfg.train_len + cfg.val_len :]
-        test, label = _inject_anomalies(ka, test, cfg.anomaly_rate, cfg.anomaly_scale)
+        test, label = _inject_anomalies(
+            ka, test, cfg.anomaly_rate, cfg.anomaly_scale, cfg.label_shift
+        )
         return train, val, test, label
 
     keys = jax.random.split(k_sensors, cfg.n_sensors)

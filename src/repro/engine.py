@@ -81,6 +81,7 @@ import jax.numpy as jnp
 
 from repro.core import async_fl, hfl
 from repro.core import compression as comp
+from repro.core import drift as drf
 from repro.core import faults as flt
 from repro.data.synthetic import SensorDataset
 from repro.launch import experiment as exp
@@ -521,6 +522,7 @@ class Engine:
             local_solver=LocalTrainConfig(),
             compressor=comp.CompressorConfig(),
             faults=flt.FaultConfig(),
+            drift=drf.DriftConfig(),
             trim_frac=0.0,
             robust="mean",
         )

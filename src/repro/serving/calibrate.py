@@ -14,9 +14,21 @@ the one-shot calibration is the ``count <= capacity`` special case.
 Beyond that the reservoir is a uniform sample and the threshold converges
 to the stream percentile at the usual O(1/sqrt(capacity)) rate.
 
+Drift survival (dynamic world, PR 9): a plain uniform reservoir weights
+the whole history equally, so after a distribution shift the threshold
+re-tracks at O(count) — effectively never for a long-lived service.  The
+optional ``horizon`` caps the effective count in the replacement draw:
+each new value replaces a uniform slot with probability at least
+``capacity / (horizon + 1)``, turning the reservoir into an
+exponentially-decayed sample concentrated on roughly the last ``horizon``
+observations.  ``horizon=None`` (the default sentinel) reproduces the
+legacy uniform behaviour bit-for-bit.
+
 Everything is functional and jittable (`init` / `update` / `threshold`);
 :class:`StreamingCalibrator` is the small stateful wrapper the service
-loop uses.
+loop uses — it also maintains the host-side PSI drift signal
+(:meth:`StreamingCalibrator.psi`) that ``ScoringService`` surfaces in
+``ServiceStats``.
 """
 from __future__ import annotations
 
@@ -24,6 +36,12 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# "Uniform forever" sentinel for ``horizon``: large enough that
+# min(count, LEGACY_HORIZON) == count for any reachable count, small
+# enough that +1 arithmetic never overflows int32.
+LEGACY_HORIZON = 2**30
 
 
 class ReservoirState(NamedTuple):
@@ -33,20 +51,28 @@ class ReservoirState(NamedTuple):
     buffer: jax.Array   # (n_fog + 1, capacity) f32
     count: jax.Array    # (n_fog + 1,) int32 — total errors observed
     key: jax.Array      # PRNG state for the replacement draws
+    horizon: jax.Array  # () int32 — decay horizon (LEGACY_HORIZON = uniform)
 
 
-def init(key: jax.Array, capacity: int, n_fog: int = 0) -> ReservoirState:
+def init(
+    key: jax.Array, capacity: int, n_fog: int = 0,
+    horizon: int | None = None,
+) -> ReservoirState:
     groups = n_fog + 1
     return ReservoirState(
         buffer=jnp.zeros((groups, capacity), jnp.float32),
         count=jnp.zeros((groups,), jnp.int32),
         key=key,
+        horizon=jnp.int32(LEGACY_HORIZON if horizon is None else horizon),
     )
 
 
-def _row_update(buffer, count, g, v, k, ok):
+def _row_update(buffer, count, g, v, k, ok, horizon):
     """Algorithm R step for group ``g``: slot ``count[g]`` while filling,
-    then replace a uniform slot with probability capacity/(count+1).
+    then replace a uniform slot with probability capacity/(count+1) — with
+    the count capped at ``horizon``, so a finite horizon keeps the
+    replacement probability bounded below and the reservoir decays toward
+    the recent window instead of freezing on ancient history.
 
     ``ok`` gates the whole step: a rejected value (non-finite error) draws
     its PRNG slot but touches neither the buffer nor the count, so the
@@ -54,7 +80,8 @@ def _row_update(buffer, count, g, v, k, ok):
     """
     cap = buffer.shape[1]
     c = count[g]
-    j = jax.random.randint(k, (), 0, jnp.maximum(c + 1, 1))
+    c_eff = jnp.minimum(c, horizon)
+    j = jax.random.randint(k, (), 0, jnp.maximum(c_eff + 1, 1))
     pos = jnp.where(c < cap, c, j)
     keep = (pos < cap) & ok
     pos_c = jnp.minimum(pos, cap - 1)
@@ -92,15 +119,19 @@ def update(
         e, f = ev
         key, k1, k2 = jax.random.split(key, 3)
         ok = jnp.isfinite(e)
-        buffer, count = _row_update(buffer, count, g_global, e, k1, ok)
+        buffer, count = _row_update(
+            buffer, count, g_global, e, k1, ok, state.horizon
+        )
         if fog_id is not None:
-            buffer, count = _row_update(buffer, count, f, e, k2, ok)
+            buffer, count = _row_update(
+                buffer, count, f, e, k2, ok, state.horizon
+            )
         return (buffer, count, key), None
 
     (buffer, count, key), _ = jax.lax.scan(
         one, (state.buffer, state.count, state.key), (errors, fid)
     )
-    return ReservoirState(buffer, count, key)
+    return ReservoirState(buffer, count, key, state.horizon)
 
 
 @jax.jit
@@ -135,6 +166,14 @@ class StreamingCalibrator:
     ``observe`` feeds validation errors (optionally fog-routed); ``taus``
     returns the (n_fog + 1,) thresholds with the global one last, and the
     ``global_tau`` / ``fog_taus`` accessors split that for callers.
+
+    ``horizon`` enables the decayed reservoir mode (see module docstring);
+    ``psi`` is a host-side population-stability-index drift signal: the
+    first ``psi_window`` finite errors freeze a reference histogram
+    (deciles by default), the latest ``psi_window`` errors form the
+    comparison window, and ``sum((p - q) ln(p / q))`` over the bins scores
+    the shift.  The usual reading: < 0.1 stable, 0.1-0.25 moderate drift,
+    > 0.25 the thresholds' world has moved.
     """
 
     def __init__(
@@ -143,13 +182,47 @@ class StreamingCalibrator:
         n_fog: int = 0,
         percentile: float = 99.0,
         seed: int = 0,
+        horizon: int | None = None,
+        psi_window: int = 512,
+        psi_bins: int = 10,
     ):
         self.percentile = float(percentile)
         self.n_fog = int(n_fog)
-        self.state = init(jax.random.key(seed), capacity, n_fog)
+        self.state = init(jax.random.key(seed), capacity, n_fog, horizon)
+        self.psi_window = int(psi_window)
+        self.psi_bins = int(psi_bins)
+        self._ref: np.ndarray | None = None     # frozen reference sample
+        self._ref_edges: np.ndarray | None = None
+        self._recent: np.ndarray = np.zeros((0,), np.float32)
 
     def observe(self, errors: jax.Array, fog_id: jax.Array | None = None) -> None:
         self.state = update(self.state, errors, fog_id)
+        e = np.asarray(errors, np.float32).reshape(-1)
+        e = e[np.isfinite(e)]
+        if e.size == 0:
+            return
+        self._recent = np.concatenate([self._recent, e])[-self.psi_window:]
+        if self._ref is None and self._recent.size >= self.psi_window:
+            self._ref = self._recent.copy()
+            qs = np.linspace(0.0, 100.0, self.psi_bins + 1)[1:-1]
+            self._ref_edges = np.percentile(self._ref, qs)
+
+    def psi(self) -> float:
+        """Population stability index of the recent-error histogram vs the
+        frozen reference (0.0 until both windows exist)."""
+        if self._ref_edges is None or self._recent.size < self.psi_window:
+            return 0.0
+        ref_hist = np.histogram(self._ref, bins=np.r_[
+            -np.inf, self._ref_edges, np.inf
+        ])[0]
+        cur_hist = np.histogram(self._recent, bins=np.r_[
+            -np.inf, self._ref_edges, np.inf
+        ])[0]
+        eps = 1e-4
+        p = ref_hist / max(ref_hist.sum(), 1) + eps
+        q = cur_hist / max(cur_hist.sum(), 1) + eps
+        p, q = p / p.sum(), q / q.sum()
+        return float(np.sum((p - q) * np.log(p / q)))
 
     def taus(self) -> jax.Array:
         return threshold(self.state, self.percentile)

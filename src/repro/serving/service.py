@@ -115,6 +115,8 @@ class ServiceStats:
     steps: int = 0            # micro-batches executed
     swaps: int = 0            # hot-swaps applied after the initial load
     partial_flushes: int = 0  # batches flushed below the chosen bucket fill
+    dropped: int = 0          # submissions rejected by the max_queue cap
+    psi: float = 0.0          # calibration drift signal (last ingest)
     busy_s: float = 0.0       # cumulative scoring wall time (all steps)
     # Trace counts per row bucket — shared with (and written by) the
     # ScorePrograms cache, so under multi-tenancy every tenant sees the
@@ -170,6 +172,8 @@ class ServiceStats:
             "e2e_p50_ms": self.e2e_latency(50.0) * 1e3,
             "e2e_p99_ms": self.e2e_latency(99.0) * 1e3,
             "samples_per_s": self.samples_per_s(),
+            "dropped": self.dropped,
+            "psi": self.psi,
         }
 
 
@@ -218,6 +222,7 @@ class ScoringService:
         poll_every: int = 1,
         poll_interval_s: float | None = None,
         max_wait_s: float | None = None,
+        max_queue: int | None = None,
         weight_dtype: str = "f32",
         clock: Callable[[], float] = time.monotonic,
         programs: ScorePrograms | None = None,
@@ -239,6 +244,9 @@ class ScoringService:
             None if poll_interval_s is None else float(poll_interval_s)
         )
         self.max_wait_s = None if max_wait_s is None else float(max_wait_s)
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.max_queue = None if max_queue is None else int(max_queue)
         self._clock = clock
         if programs is None:
             programs = ScorePrograms(
@@ -318,12 +326,23 @@ class ScoringService:
     # request queue / micro-batching
     # ------------------------------------------------------------------
 
-    def submit(self, x: Any, fog: int | None = None) -> int:
+    def submit(self, x: Any, fog: int | None = None) -> int | None:
         """Queue telemetry of shape (..., d); returns a request id whose
-        result :func:`drain` delivers with the leading shape restored."""
+        result :func:`drain` delivers with the leading shape restored.
+
+        With ``max_queue`` set, submissions arriving while that many
+        requests are already queued are REJECTED — admission control, so
+        sustained overload sheds load at the door instead of growing the
+        queue (and its memory, and every queued request's latency) without
+        bound.  A rejected submit returns ``None`` and bumps
+        ``stats.dropped``; nothing else changes.
+        """
         arr = np.asarray(x, np.float32)
         if arr.shape[-1] != self.d:
             raise ValueError(f"expected feature dim {self.d}, got {arr.shape}")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.stats.dropped += 1
+            return None
         lead = arr.shape[:-1]
         rid = self._next_rid
         self._next_rid += 1
@@ -499,4 +518,6 @@ class ScoringService:
             errs.append(np.asarray(err)[: chunk.shape[0]])
         err = jnp.asarray(np.concatenate(errs))
         self.calibrator.observe(err, fid)
+        # Surface the calibrator's drift signal where operators look.
+        self.stats.psi = self.calibrator.psi()
         return err

@@ -11,6 +11,7 @@ import pytest
 from benchmarks import (
     bench_summary,
     check_async_bench,
+    check_drift_bench,
     check_kernel_micro,
     check_load_bench,
     check_robustness_bench,
@@ -241,6 +242,113 @@ def test_robust_gate_fails_loudly_on_missing_row():
     failures = check_robustness_bench.compare(
         {"rows": []}, _robust_json()
     )
+    assert any("anchor" in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# check_drift_bench.compare
+# ---------------------------------------------------------------------------
+
+def _drift_row(cell, f1, part, nonfinite=0.0):
+    return {
+        "cell": cell, "f1_mean": f1, "participation": part,
+        "nonfinite_rounds": nonfinite,
+    }
+
+
+def _drift_json(
+    static_part=0.89,
+    frozen_part=0.71,
+    reassoc_part=0.85,
+    reassoc_f1=0.84,
+    mean_byz_f1=0.23,
+    trim_f1=0.84,
+    nonfinite=0.0,
+    programs=4,
+) -> dict:
+    return {
+        "n_classes": 4,
+        "rows": [
+            _drift_row("static", 0.84, static_part),
+            _drift_row("frozen", 0.84, frozen_part, nonfinite=nonfinite),
+            _drift_row("reassoc", reassoc_f1, reassoc_part),
+            _drift_row("clean-mean", 0.84, 1.0),
+            _drift_row("adaptive-mean", mean_byz_f1, 1.0),
+            _drift_row("adaptive-trimmed", trim_f1, 1.0),
+            _drift_row("adaptive-median", 0.84, 1.0),
+        ],
+        "engine": {"sweep_compiled_programs": programs, "sweep_cells": 7},
+    }
+
+
+def test_drift_gate_passes_on_healthy_grid():
+    failures = check_drift_bench.compare(_drift_json(), _drift_json())
+    assert failures == []
+
+
+def test_drift_gate_trips_when_frozen_stops_degrading():
+    """If stale association no longer sheds participation under drift,
+    the scenario demonstrates nothing — that's a failure."""
+    failures = check_drift_bench.compare(
+        _drift_json(frozen_part=0.88), _drift_json(), part_margin=0.08
+    )
+    assert any("no longer degrades" in f for f in failures)
+
+
+def test_drift_gate_trips_when_reassoc_loses_participation():
+    failures = check_drift_bench.compare(
+        _drift_json(reassoc_part=0.7), _drift_json(), part_tol=0.06
+    )
+    assert any("re-association lost" in f for f in failures)
+
+
+def test_drift_gate_trips_when_drift_corrupts_f1():
+    failures = check_drift_bench.compare(
+        _drift_json(reassoc_f1=0.6), _drift_json(reassoc_f1=0.6), f1_tol=0.12
+    )
+    assert any("reassoc" in f and "dropped" in f for f in failures)
+
+
+def test_drift_gate_trips_when_adaptive_mean_stops_collapsing():
+    failures = check_drift_bench.compare(
+        _drift_json(mean_byz_f1=0.8), _drift_json(), degrade_margin=0.30
+    )
+    assert any("no longer collapses" in f for f in failures)
+
+
+def test_drift_gate_trips_when_robust_rule_drops():
+    # ...fresh-internal (vs the clean anchor) and vs the committed baseline.
+    failures = check_drift_bench.compare(
+        _drift_json(trim_f1=0.5), _drift_json(trim_f1=0.5), f1_tol=0.12
+    )
+    assert any("adaptive-trimmed" in f for f in failures)
+    failures = check_drift_bench.compare(
+        _drift_json(reassoc_f1=0.75), _drift_json(reassoc_f1=0.9), f1_tol=0.12
+    )
+    assert any("baseline" in f for f in failures)
+
+
+def test_drift_gate_trips_on_nonfinite_rounds():
+    failures = check_drift_bench.compare(
+        _drift_json(nonfinite=1.0), _drift_json()
+    )
+    assert any("non-finite" in f for f in failures)
+
+
+def test_drift_gate_trips_on_compile_fallback():
+    failures = check_drift_bench.compare(
+        _drift_json(programs=7), _drift_json()
+    )
+    assert any("batching regressed" in f for f in failures)
+
+
+def test_drift_gate_fails_loudly_on_missing_row():
+    fresh = _drift_json()
+    fresh["rows"] = [r for r in fresh["rows"] if r["cell"] != "frozen"]
+    failures = check_drift_bench.compare(fresh, _drift_json())
+    assert any("missing" in f for f in failures)
+    # No anchors at all: nothing else is checkable.
+    failures = check_drift_bench.compare({"rows": []}, _drift_json())
     assert any("anchor" in f for f in failures)
 
 

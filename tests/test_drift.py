@@ -1,0 +1,405 @@
+"""Tests for the dynamic-world layer (ISSUE 9 tentpole).
+
+Covers: the ``DriftConfig`` pytree contract (traceable rate leaves,
+static derived ``active`` predicate, pinning), the drift-off /
+neutral-active bit-identity pins for all four round families, the
+``reassoc_every=inf`` static-world no-op pin, the frozen-vs-reassoc
+participation behaviour under a strong current, the one-compiled-program
+drift grid under ``Engine.sweep``, the generation-time shift schedules
+in ``data/synthetic``, and the serving-side drift survival pieces
+(decayed reservoir + PSI signal) in ``serving/calibrate``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as eng_mod
+from repro.core import async_fl, drift as drf, flat_fl, hfl
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+from repro.launch import experiment as exp
+from repro.models import autoencoder as ae
+from repro.serving import calibrate as cal
+
+N_SENSORS = 12
+N_FOG = 3
+
+
+def _make_ds(seed: int = 0):
+    cfg = SyntheticConfig(
+        n_sensors=N_SENSORS, train_len=48, val_len=24, test_len=48
+    )
+    return normalize(generate(jax.random.key(seed), cfg))
+
+
+def _small_cfg(**kw):
+    kw.setdefault("rounds", 3)
+    kw.setdefault("local_epochs", 1)
+    return exp.make_config(n_sensors=N_SENSORS, n_fog=N_FOG, **kw)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return _make_ds(0)
+
+
+@pytest.fixture(scope="module")
+def params0(ds):
+    return ae.init(jax.random.key(1), ds.train.shape[-1], (16, 8, 16))
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# DriftConfig pytree contract (mirrors the FaultConfig contract).
+# ---------------------------------------------------------------------------
+
+def test_drift_config_activity_predicate_and_pinning():
+    off = drf.DriftConfig()
+    assert not off.is_active
+    assert drf.DriftConfig(sensor_current_m_s=1.0).is_active
+    assert drf.DriftConfig(covariate_shift=0.01).is_active
+    # A non-unit cadence alone activates the layer (frozen association
+    # is itself a dynamic-world behaviour).
+    assert drf.DriftConfig(reassoc_every=4.0).is_active
+    # Pinning lets a zero-rate cell share the active shape-class.
+    pinned = drf.DriftConfig(active=True)
+    assert pinned.is_active
+    assert jax.tree_util.tree_structure(pinned) == (
+        jax.tree_util.tree_structure(drf.DriftConfig(sensor_current_m_s=2.0))
+    )
+    assert jax.tree_util.tree_structure(off) != (
+        jax.tree_util.tree_structure(pinned)
+    )
+
+
+def test_drift_config_roundtrip_replace_and_validation():
+    on = drf.DriftConfig(sensor_current_m_s=2.0, reassoc_every=3.0)
+    leaves, treedef = jax.tree_util.tree_flatten(on)
+    assert all(isinstance(x, (int, float)) for x in leaves)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.is_active and back.reassoc_every == 3.0
+    # replace() re-derives the predicate from the new rates...
+    assert not on.replace(sensor_current_m_s=0.0, reassoc_every=1.0).is_active
+    # ...unless re-pinned in the same call.
+    assert drf.DriftConfig(active=True).replace(
+        sensor_current_m_s=0.0, active=True
+    ).is_active
+    with pytest.raises(ValueError, match="sensor_current_m_s"):
+        drf.DriftConfig(sensor_current_m_s=-1.0)
+    with pytest.raises(ValueError, match="reassoc_every"):
+        drf.DriftConfig(reassoc_every=0.5)
+
+
+def test_hfl_config_carries_drift_as_swept_leaves():
+    base = _small_cfg()
+    a = base.replace(drift=drf.DriftConfig(sensor_current_m_s=1.0, active=True))
+    b = base.replace(drift=drf.DriftConfig(sensor_current_m_s=3.0, active=True))
+    _, ta = jax.tree_util.tree_flatten(a)
+    _, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    stacked = eng_mod.Engine.stack_configs([a, b])
+    assert np.asarray(stacked.drift.sensor_current_m_s).shape == (2,)
+    assert stacked.drift.is_active
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity pins: drift off == neutral-active == legacy, all families.
+# ---------------------------------------------------------------------------
+
+def _run_family(family, key, params0, ds, cfg):
+    if family == "hfl":
+        return hfl.train(key, params0, ae.loss, ds, cfg)
+    if family == "flat":
+        return flat_fl.train_flat(key, params0, ae.loss, ds, cfg)
+    if family == "scaffold":
+        return flat_fl.train_scaffold(key, params0, ae.loss, ds, cfg)
+    acfg = async_fl.AsyncFLConfig(base=cfg, n_events=6)
+    return async_fl.train(key, params0, ae.loss, ds, acfg)
+
+
+FAMILIES = ("hfl", "flat", "scaffold", "async")
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_neutral_active_drift_is_bit_identical(family, ds, params0):
+    """active=True with zero rates and unit cadence takes the drift code
+    path but must reproduce the drift-off run BITWISE — params and every
+    metric (the shape-class pinning correctness pin)."""
+    key = jax.random.key(5)
+    cfg = _small_cfg()
+    p_off, m_off = _run_family(family, key, params0, ds, cfg)
+    p_on, m_on = _run_family(
+        family, key, params0, ds, cfg.replace(drift=drf.DriftConfig(active=True))
+    )
+    _assert_trees_equal(p_off, p_on)
+    _assert_trees_equal(m_off, m_on)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_drift_changes_metrics_when_on(family, ds, params0):
+    key = jax.random.key(5)
+    cfg = _small_cfg()
+    _, m_off = _run_family(family, key, params0, ds, cfg)
+    _, m_on = _run_family(
+        family, key, params0, ds,
+        cfg.replace(drift=drf.DriftConfig(
+            sensor_current_m_s=5.0, reassoc_every=2.0
+        )),
+    )
+    la = jax.tree_util.tree_leaves(m_off)
+    lb = jax.tree_util.tree_leaves(m_on)
+    assert any(
+        not np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb)
+    )
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_reassoc_alone_is_noop_in_static_world(family, ds, params0):
+    """reassoc_every=inf freezes the round-0 association; with fog
+    mobility off and zero drift rates the geometry never moves, so the
+    frozen assignment equals the per-round recompute BITWISE."""
+    key = jax.random.key(6)
+    cfg = _small_cfg(fog_mobility=False)
+    p_off, m_off = _run_family(family, key, params0, ds, cfg)
+    p_frozen, m_frozen = _run_family(
+        family, key, params0, ds,
+        cfg.replace(drift=drf.DriftConfig(reassoc_every=float("inf"))),
+    )
+    _assert_trees_equal(p_off, p_frozen)
+    _assert_trees_equal(m_off, m_frozen)
+
+
+def test_covariate_shift_schedule_changes_training(ds, params0):
+    key = jax.random.key(7)
+    cfg = _small_cfg()
+    _, m_off = _run_family("hfl", key, params0, ds, cfg)
+    _, m_on = _run_family(
+        "hfl", key, params0, ds,
+        cfg.replace(drift=drf.DriftConfig(covariate_shift=0.1)),
+    )
+    assert not np.array_equal(np.asarray(m_off.loss), np.asarray(m_on.loss))
+    # Geometry-only metrics stay identical: the shift moves data, not nodes.
+    np.testing.assert_array_equal(
+        np.asarray(m_off.participation), np.asarray(m_on.participation)
+    )
+
+
+def test_drift_rejects_client_mesh(ds):
+    cfg = _small_cfg().replace(
+        drift=drf.DriftConfig(sensor_current_m_s=1.0)
+    )
+    with pytest.raises(ValueError, match="client-sharded"):
+        hfl.make_round_fn(ae.loss, ds, cfg, client_mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# Frozen vs re-associated behaviour under a strong current.
+# ---------------------------------------------------------------------------
+
+def test_frozen_association_sheds_participation_reassoc_recovers(
+    ds, params0
+):
+    key = jax.random.key(8)
+    cfg = _small_cfg(rounds=6)
+    cur = 20.0  # ~1.2 km/round in a 2 km box: stale links die fast
+    _, m_static = _run_family(
+        "hfl", key, params0, ds,
+        cfg.replace(drift=drf.DriftConfig(active=True)),
+    )
+    _, m_frozen = _run_family(
+        "hfl", key, params0, ds,
+        cfg.replace(drift=drf.DriftConfig(
+            sensor_current_m_s=cur, reassoc_every=float("inf")
+        )),
+    )
+    _, m_reassoc = _run_family(
+        "hfl", key, params0, ds,
+        cfg.replace(drift=drf.DriftConfig(
+            sensor_current_m_s=cur, reassoc_every=1.0
+        )),
+    )
+    p_static = float(jnp.mean(m_static.participation))
+    p_frozen = float(jnp.mean(m_frozen.participation))
+    p_reassoc = float(jnp.mean(m_reassoc.participation))
+    assert p_frozen < p_static            # stale assignment drops clients
+    assert p_reassoc > p_frozen           # re-association recovers them
+    # Round 0 always refreshes: frozen matches the fresh association there.
+    np.testing.assert_array_equal(
+        np.asarray(m_frozen.participation[0]),
+        np.asarray(m_reassoc.participation[0]),
+    )
+
+
+def test_cadence_one_equals_per_round_reassociation(ds, params0):
+    """reassoc_every=1 recomputes every round — bitwise the same as the
+    legacy live association even while sensors drift."""
+    key = jax.random.key(9)
+    cfg = _small_cfg()
+    drift = drf.DriftConfig(sensor_current_m_s=4.0, reassoc_every=1.0)
+    p1, m1 = _run_family("hfl", key, params0, ds, cfg.replace(drift=drift))
+    p2, m2 = _run_family("hfl", key, params0, ds, cfg.replace(drift=drift))
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(m1, m2)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: drift grid is ONE compiled program.
+# ---------------------------------------------------------------------------
+
+def test_drift_grid_compiles_one_program():
+    eng = eng_mod.Engine()
+    base = _small_cfg()
+    cfgs = [
+        base.replace(drift=drf.DriftConfig(active=True)),
+        base.replace(drift=drf.DriftConfig(
+            sensor_current_m_s=3.0, reassoc_every=float("inf"))),
+        base.replace(drift=drf.DriftConfig(
+            sensor_current_m_s=3.0, reassoc_every=2.0)),
+        base.replace(drift=drf.DriftConfig(
+            sensor_current_m_s=1.0, covariate_shift=0.05)),
+    ]
+    sw = eng.sweep("hfl-selective", cfgs, (0,), _make_ds)
+    assert sw.n_classes == 1
+    assert sw.compiled_programs == 1
+    assert not np.any(np.asarray(sw["nonfinite_rounds"]))
+    # Each batched cell matches its own sequential Engine.run.
+    for i in (0, 2):
+        r = eng.run("hfl-selective", cfgs[i], (0,), _make_ds)
+        np.testing.assert_allclose(
+            np.asarray(sw["losses"][i]), np.asarray(r.losses),
+            rtol=1e-4, atol=1e-6,
+        )
+
+
+def test_drift_on_off_are_different_shape_classes():
+    eng = eng_mod.Engine()
+    base = _small_cfg()
+    sw = eng.sweep(
+        "hfl-selective",
+        [base, base.replace(drift=drf.DriftConfig(sensor_current_m_s=2.0))],
+        (0,), _make_ds,
+    )
+    assert sw.n_classes == 2
+
+
+# ---------------------------------------------------------------------------
+# Generation-time shift schedules (data/synthetic).
+# ---------------------------------------------------------------------------
+
+def test_synthetic_zero_shift_is_bit_identical():
+    base = SyntheticConfig(n_sensors=6, train_len=32, val_len=16, test_len=32)
+    withz = SyntheticConfig(
+        n_sensors=6, train_len=32, val_len=16, test_len=32,
+        covariate_shift=0.0, label_shift=0.0,
+    )
+    a = generate(jax.random.key(3), base)
+    b = generate(jax.random.key(3), withz)
+    _assert_trees_equal(a, b)
+
+
+def test_synthetic_covariate_shift_ramps_the_series():
+    cfg = SyntheticConfig(
+        n_sensors=6, train_len=64, val_len=16, test_len=32,
+        covariate_shift=5.0,
+    )
+    base = generate(jax.random.key(4), cfg.__class__(
+        n_sensors=6, train_len=64, val_len=16, test_len=32))
+    shifted = generate(jax.random.key(4), cfg)
+    # The ramp is monotone over the whole series: the test window sits
+    # higher above its unshifted twin than the train window does.
+    d_train = float(jnp.mean(shifted.train - base.train))
+    d_test = float(jnp.mean(shifted.test - base.test))
+    assert d_test > d_train > 0.0
+
+
+def test_synthetic_label_shift_pushes_anomalies_late():
+    mk = lambda ls: SyntheticConfig(  # noqa: E731
+        n_sensors=16, train_len=32, val_len=16, test_len=64,
+        label_shift=ls,
+    )
+    early = generate(jax.random.key(5), mk(0.0))
+    late = generate(jax.random.key(5), mk(0.8))
+    t = jnp.arange(64, dtype=jnp.float32)[None, :]
+
+    def mean_pos(labels):
+        w = labels.astype(jnp.float32)
+        return float(jnp.sum(t * w) / jnp.maximum(jnp.sum(w), 1.0))
+
+    assert mean_pos(late.test_label) > mean_pos(early.test_label)
+    # All anomalous points live in the late 1 - label_shift fraction
+    # (segment starts are confined there; allow segment length overhang).
+    first_anom = int(jnp.argmax(jnp.any(late.test_label, axis=0)))
+    assert first_anom >= int(0.8 * (64 - 64 // 3)) - 1
+
+
+def test_synthetic_label_shift_validated():
+    with pytest.raises(ValueError, match="label_shift"):
+        SyntheticConfig(label_shift=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving-side drift survival: decayed reservoir + PSI.
+# ---------------------------------------------------------------------------
+
+def test_reservoir_default_horizon_is_bit_identical_legacy():
+    """horizon=None keeps the exact uniform Algorithm R draws (the
+    sentinel caps nothing reachable)."""
+    key = jax.random.key(10)
+    errs = jax.random.uniform(jax.random.key(11), (300,))
+    s_none = cal.update(cal.init(key, capacity=64), errs)
+    s_sent = cal.update(
+        cal.init(key, capacity=64, horizon=cal.LEGACY_HORIZON), errs
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s_none.buffer), np.asarray(s_sent.buffer)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s_none.count), np.asarray(s_sent.count)
+    )
+
+
+def test_decayed_reservoir_tracks_distribution_shift():
+    """After a mean shift, the finite-horizon threshold lands near the
+    NEW p99 while the uniform reservoir stays anchored on history."""
+    rng = np.random.default_rng(0)
+    uni = cal.StreamingCalibrator(capacity=256, seed=0)
+    dec = cal.StreamingCalibrator(capacity=256, seed=0, horizon=512)
+    for mu in (0.0, 5.0):
+        for _ in range(20):
+            e = jnp.asarray(rng.normal(mu, 1.0, 128).astype(np.float32))
+            uni.observe(e)
+            dec.observe(e)
+    new_p99 = 5.0 + 2.33
+    assert abs(float(dec.global_tau) - new_p99) < (
+        abs(float(uni.global_tau) - new_p99)
+    )
+    assert float(dec.global_tau) > 6.5
+
+
+def test_psi_flags_distribution_shift():
+    rng = np.random.default_rng(1)
+    c = cal.StreamingCalibrator(capacity=128, seed=0, psi_window=512)
+    # Before the reference window fills: no signal.
+    c.observe(jnp.asarray(rng.normal(0, 1, 100).astype(np.float32)))
+    assert c.psi() == 0.0
+    # Stationary stream: PSI stays below the 'stable' reading.
+    for _ in range(5):
+        c.observe(jnp.asarray(rng.normal(0, 1, 512).astype(np.float32)))
+    assert c.psi() < 0.1
+    # Shifted stream: PSI crosses the 'drifted' reading.
+    for _ in range(3):
+        c.observe(jnp.asarray(rng.normal(3, 1, 512).astype(np.float32)))
+    assert c.psi() > 0.25
+
+
+def test_psi_ignores_nonfinite_errors():
+    c = cal.StreamingCalibrator(capacity=64, seed=0, psi_window=32)
+    c.observe(jnp.asarray([np.nan, np.inf, 1.0, 2.0], np.float32))
+    assert c._recent.size == 2

@@ -408,3 +408,111 @@ def test_robust_static_splits_shape_class():
     ]
     sw = eng.sweep("hfl-nocoop", cfgs, (0,), _make_ds)
     assert sw.n_classes == 3
+
+
+# ---------------------------------------------------------------------------
+# Validation (ISSUE 9 satellite): out-of-range knobs fail loudly.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field", ["erasure_prob", "crash_prob", "byz_frac"])
+@pytest.mark.parametrize("bad", [-0.1, 1.5])
+def test_fault_config_rejects_out_of_range_probs(field, bad):
+    with pytest.raises(ValueError, match=field):
+        flt.FaultConfig(**{field: bad})
+    # ...including via replace() on a valid config.
+    with pytest.raises(ValueError, match=field):
+        flt.FaultConfig().replace(**{field: bad})
+
+
+def test_fault_config_accepts_boundaries_and_tracers():
+    flt.FaultConfig(erasure_prob=0.0, crash_prob=1.0, byz_frac=1.0)
+    # Traced/stacked leaves must pass the concrete-only check (unflatten
+    # runs __post_init__ inside jit and under Engine.stack_configs).
+    jax.jit(lambda c: c.erasure_prob)(flt.FaultConfig(erasure_prob=0.5))
+
+
+@pytest.mark.parametrize("bad", [-0.1, 0.5, 0.7])
+def test_hfl_config_rejects_bad_trim_frac(bad):
+    with pytest.raises(ValueError, match="trim_frac"):
+        _small_cfg(robust="trimmed", trim_frac=bad)
+
+
+def test_hfl_config_rejects_unknown_robust():
+    with pytest.raises(ValueError, match="robust"):
+        _small_cfg(robust="krum")
+
+
+# ---------------------------------------------------------------------------
+# Adaptive (colluding) Byzantine mode — ISSUE 9 tentpole part 3.
+# ---------------------------------------------------------------------------
+
+def test_adaptive_mode_is_valid_and_activates():
+    cfg = flt.FaultConfig(byz_mode="adaptive")
+    assert cfg.is_active
+    rt = jax.tree_util.tree_unflatten(
+        *reversed(jax.tree_util.tree_flatten(cfg))
+    )
+    assert rt.byz_mode == "adaptive"
+
+
+def test_adaptive_colluders_submit_identical_crafted_update():
+    key = jax.random.key(0)
+    deltas = jax.random.normal(jax.random.key(1), (8, 6))
+    cfg = flt.FaultConfig(byz_frac=0.25, byz_scale=3.0, byz_mode="adaptive")
+    out = flt.corrupt_deltas(key, deltas, cfg, prev_delta=jnp.ones(6))
+    mask = np.asarray(flt.byzantine_mask(8, 0.25))
+    assert mask.sum() == 2
+    atk = np.asarray(out)[mask]
+    # Collusion: every Byzantine row is the SAME crafted vector...
+    np.testing.assert_array_equal(atk[0], atk[1])
+    # ...and honest rows pass through untouched.
+    np.testing.assert_array_equal(np.asarray(out)[~mask],
+                                  np.asarray(deltas)[~mask])
+    # The craft: mu - scale * sigma * sign(prev_delta).
+    mu = np.asarray(jnp.mean(deltas, 0))
+    sd = np.asarray(jnp.std(deltas, 0))
+    np.testing.assert_allclose(atk[0], mu - 3.0 * sd, rtol=1e-5)
+
+
+def test_adaptive_direction_follows_prev_delta_sign():
+    deltas = jnp.ones((4, 3))
+    cfg = flt.FaultConfig(byz_frac=0.5, byz_scale=2.0, byz_mode="adaptive")
+    # sigma = 0 here, so the attack reduces to mu regardless of direction;
+    # use heterogeneous deltas instead.
+    deltas = deltas.at[0].set(3.0)
+    prev = jnp.array([1.0, -1.0, 0.0])
+    out = np.asarray(
+        flt.corrupt_deltas(jax.random.key(0), deltas, cfg, prev_delta=prev)
+    )
+    mu = np.asarray(jnp.mean(deltas, 0))
+    sd = np.asarray(jnp.std(deltas, 0))
+    # dirn: sign(prev) where prev != 0, else sign(mu) (mu > 0 here).
+    expect = mu - 2.0 * sd * np.array([1.0, -1.0, 1.0])
+    np.testing.assert_allclose(out[0], expect, rtol=1e-5)
+
+
+def test_adaptive_without_prev_delta_falls_back_to_mean_sign():
+    deltas = jax.random.normal(jax.random.key(2), (6, 4))
+    cfg = flt.FaultConfig(byz_frac=0.5, byz_scale=1.0, byz_mode="adaptive")
+    out = np.asarray(flt.corrupt_deltas(jax.random.key(0), deltas, cfg))
+    mu = np.asarray(jnp.mean(deltas, 0))
+    sd = np.asarray(jnp.std(deltas, 0))
+    np.testing.assert_allclose(out[0], mu - sd * np.sign(mu), rtol=1e-5)
+
+
+def test_adaptive_hugs_trimmed_band_at_small_scale():
+    """The z=3 craft sits inside the honest spread: with trim_frac above
+    the Byzantine weight share the trimmed mean stays within the honest
+    min/max envelope per coordinate."""
+    deltas = jax.random.normal(jax.random.key(3), (12, 5))
+    cfg = flt.FaultConfig(byz_frac=0.25, byz_scale=3.0, byz_mode="adaptive")
+    out = flt.corrupt_deltas(jax.random.key(0), deltas, cfg,
+                             prev_delta=jnp.ones(5))
+    fog_id = jnp.zeros(12, jnp.int32)
+    tm, _ = kops.robust_aggregate(
+        out, fog_id, jnp.ones(12), n_fog=1, trim_frac=0.3, mode="trimmed"
+    )
+    tm = np.asarray(tm)[0]
+    honest = np.asarray(deltas)[3:]
+    assert (tm >= honest.min(0) - 1e-5).all()
+    assert (tm <= honest.max(0) + 1e-5).all()

@@ -544,3 +544,66 @@ def test_random_interleavings_property(tmp_path_factory, ops_seq):
         tmp_path_factory.mktemp("interleave"), ops_seq
     )
     _check_interleaving(svc, expected, results)
+
+
+# ---------------------------------------------------------------------------
+# max_queue admission control (ISSUE 9 satellite): overload sheds load at
+# the door instead of growing the deque without bound.
+# ---------------------------------------------------------------------------
+
+def test_max_queue_validated(tmp_path):
+    with pytest.raises(ValueError, match="max_queue"):
+        _svc(tmp_path, VirtualClock(), max_queue=0)
+
+
+def test_submit_drops_over_cap_and_counts(tmp_path):
+    clock = VirtualClock()
+    svc = _svc(tmp_path, clock, buckets=(64,), max_queue=2)
+    r1 = svc.submit(_rows(4))
+    r2 = svc.submit(_rows(4))
+    assert r1 is not None and r2 is not None
+    # Queue full, nothing flushable (bucket 64, no deadline): reject.
+    assert svc.submit(_rows(4)) is None
+    assert svc.submit(_rows(4)) is None
+    assert svc.stats.dropped == 2
+    assert svc.stats.requests == 2             # rejected != admitted
+    assert svc.pending_rows() == 8             # queue unchanged by drops
+    # Admitted requests still complete exactly once.
+    res = svc.drain()
+    assert sorted(res) == [r1, r2]
+    # ...and a post-flush submit is admitted again.
+    assert svc.submit(_rows(4)) is not None
+    assert svc.stats.summary()["dropped"] == 2
+
+
+def test_no_cap_keeps_legacy_unbounded_queue(tmp_path):
+    clock = VirtualClock()
+    svc = _svc(tmp_path, clock, buckets=(64,))
+    rids = [svc.submit(_rows(1)) for _ in range(50)]
+    assert all(r is not None for r in rids)
+    assert svc.stats.dropped == 0
+
+
+def test_loadgen_overload_trace_sheds_and_completes(tmp_path):
+    """An overload trace against a capped service: drops happen, the
+    queue stays bounded, every ADMITTED request completes exactly once,
+    and the replay report only counts completions."""
+    from repro.loadgen import harness, poisson_trace
+
+    clock = VirtualClock()
+    cap = 4
+    # Bucket far above what the trace delivers and a deadline beyond its
+    # horizon: nothing flushes mid-trace, so the queue fills to the cap
+    # and every later arrival is shed at the door.
+    svc = _svc(
+        tmp_path, clock, buckets=(512,), max_wait_s=100.0, max_queue=cap,
+    )
+    trace = poisson_trace(
+        0, rate_hz=20.0, duration_s=4.0, fleet=8, n_fog=2, rows=4
+    )
+    report = harness.replay(svc, trace, clock, d=D)
+    assert svc.stats.requests == cap
+    assert svc.stats.dropped == trace.n_events - cap
+    assert report.completed == svc.stats.requests
+    assert len(svc.drain()) == 0               # nothing stranded
+    assert svc.pending_rows() == 0

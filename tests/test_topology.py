@@ -61,3 +61,124 @@ def test_deployment_is_pytree(small_deployment):
     assert len(leaves) == 4
     dep2 = jax.tree_util.tree_map(lambda x: x + 0.0, dep)
     assert isinstance(dep2, topo.Deployment)
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Markov statistics (ISSUE 9 satellite: the walk was exported but
+# never statistically tested).
+# ---------------------------------------------------------------------------
+
+def _gm_velocity_trace(dep, params, steps: int, seed: int = 7):
+    key = jax.random.key(seed)
+    vels = []
+    for _ in range(steps):
+        key, k = jax.random.split(key)
+        dep = topo.gauss_markov_step(k, dep, params)
+        vels.append(np.asarray(dep.fog_vel))
+    return dep, np.stack(vels)  # (T, M, 3)
+
+
+def test_gauss_markov_speed_stays_bounded(small_deployment):
+    """The stationary per-component std is sigma = fog_speed_m_s; with
+    zero mean velocity the speed should live within a few sigma of
+    sqrt(3) * sigma and never run away over a long trace."""
+    dep, params = small_deployment
+    _, vels = _gm_velocity_trace(dep, params, steps=200)
+    speeds = np.linalg.norm(vels, axis=-1)  # (T, M)
+    sigma = params.fog_speed_m_s
+    # 6-sigma bound on the per-component Gaussian => generous speed cap.
+    assert speeds.max() < 6.0 * np.sqrt(3.0) * sigma
+    # ...and the empirical per-component std matches sigma within 20%.
+    emp = vels[50:].std()  # post burn-in, pooled over (T, M, 3)
+    assert 0.8 * sigma < emp < 1.2 * sigma
+
+
+def test_gauss_markov_alpha_memory_honoured(small_deployment):
+    """Lag-1 autocorrelation of each velocity component ~= gm_alpha; the
+    reflection flip makes the position-limited walk slightly less
+    correlated, so compare with a loose band and against a low-alpha
+    control."""
+    dep, params = small_deployment
+    hi = params.replace(gm_alpha=0.9)
+    lo = params.replace(gm_alpha=0.1)
+
+    def lag1(params_):
+        _, vels = _gm_velocity_trace(dep, params_, steps=300)
+        v = vels[50:].reshape(vels[50:].shape[0], -1)  # (T, M*3)
+        a, b = v[:-1], v[1:]
+        num = ((a - a.mean(0)) * (b - b.mean(0))).sum()
+        den = np.sqrt(((a - a.mean(0)) ** 2).sum() * ((b - b.mean(0)) ** 2).sum())
+        return num / den
+
+    r_hi, r_lo = lag1(hi), lag1(lo)
+    assert r_hi > r_lo + 0.3          # memory factor orders the processes
+    assert r_hi > 0.6                 # alpha=0.9 keeps strong memory
+    assert abs(r_lo) < 0.35           # alpha=0.1 is near-white
+
+
+def test_gauss_markov_reflection_no_escape_aggressive(small_deployment):
+    """A walk fast enough to overshoot the volume every step must still
+    stay inside lx_m x ly_m x fog_depth (reflection + clip guard)."""
+    dep, params = small_deployment
+    fast = params.replace(fog_speed_m_s=50.0)  # ~3 km/step vs 2 km box
+    key = jax.random.key(11)
+    for _ in range(100):
+        key, k = jax.random.split(key)
+        dep = topo.gauss_markov_step(k, dep, fast)
+        assert _in_stratum(dep.fog_pos, fast, fast.fog_depth)
+
+
+# ---------------------------------------------------------------------------
+# Sensor current advection (dynamic world, PR 9).
+# ---------------------------------------------------------------------------
+
+def test_advection_moves_sensors_not_fogs(small_deployment):
+    dep, params = small_deployment
+    dep2 = topo.current_advection_step(dep, params, 2.0)
+    assert not bool(jnp.all(dep2.sensor_pos == dep.sensor_pos))
+    assert bool(jnp.all(dep2.fog_pos == dep.fog_pos))
+    assert bool(jnp.all(dep2.fog_vel == dep.fog_vel))
+    # The current is horizontal: depth must be untouched.
+    assert bool(jnp.all(dep2.sensor_pos[:, 2] == dep.sensor_pos[:, 2]))
+
+
+def test_advection_zero_speed_is_identity(small_deployment):
+    dep, params = small_deployment
+    dep2 = topo.current_advection_step(dep, params, 0.0)
+    assert bool(jnp.all(dep2.sensor_pos == dep.sensor_pos))
+
+
+def test_advection_deterministic_and_speed_scaled(small_deployment):
+    dep, params = small_deployment
+    a = topo.current_advection_step(dep, params, 1.5)
+    b = topo.current_advection_step(dep, params, 1.5)
+    assert bool(jnp.all(a.sensor_pos == b.sensor_pos))  # no PRNG consumed
+    disp = jnp.linalg.norm(
+        (a.sensor_pos - dep.sensor_pos)[:, :2], axis=-1
+    )
+    # Interior sensors move exactly speed * interval; reflection can only
+    # shorten the net displacement.
+    expect = 1.5 * params.round_interval_s
+    assert float(jnp.max(disp)) <= expect + 1e-3
+    assert float(jnp.median(disp)) > 0.5 * expect
+
+
+def test_advection_stays_in_sensor_stratum(small_deployment):
+    dep, params = small_deployment
+    for _ in range(60):
+        dep = topo.current_advection_step(dep, params, 25.0)
+        assert _in_stratum(dep.sensor_pos, params, params.sensor_depth)
+
+
+def test_advection_traceable_speed(small_deployment):
+    """speed is a DriftConfig sweep leaf: the step must jit with a traced
+    scalar operand."""
+    dep, params = small_deployment
+    stepped = jax.jit(
+        lambda s: topo.current_advection_step(dep, params, s)
+    )(jnp.asarray(3.0))
+    ref = topo.current_advection_step(dep, params, 3.0)
+    np.testing.assert_allclose(
+        np.asarray(stepped.sensor_pos), np.asarray(ref.sensor_pos),
+        rtol=1e-5, atol=1e-4,
+    )
