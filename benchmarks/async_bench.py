@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.core import async_fl
 from repro.launch import experiment as exp
+from repro.loadgen import traces
 
 # (staleness exponent, merge buffer as a fraction of the fleet) cells.
 CELLS = ((0.0, 0.5), (0.5, 0.25), (1.0, 0.25))
@@ -87,6 +88,7 @@ def run(scale: common.Scale) -> dict:
         rows.append(dict(
             alpha=alpha,
             buffer_frac=frac,
+            arrival="physics",
             n_events=cfgs[i].n_events,
             f1_mean=f1m, f1_std=f1sd,
             sim_time_s=sim_time,
@@ -95,6 +97,47 @@ def run(scale: common.Scale) -> dict:
             sim_s_per_merge=s_per_merge,
             speedup_vs_sync=sync_row["sim_s_per_round"] / max(s_per_merge, 1e-9),
         ))
+
+    # --- trace-replay cell (PR 10): an MMPP ``ArrivalTrace`` replaces the
+    # synthetic (Eq.-21 latency-model) arrival clock.  Per-client
+    # launch->arrival delay = that sensor's mean inter-event gap in the
+    # trace, fed through the ``arrival_delay_s`` leaf — a (N,) array
+    # switches ``core/async_fl`` to replayed delays.  The leaf's shape
+    # differs from the scalar cells', so it compiles as its own cell
+    # rather than joining the staleness sweep.
+    trace = traces.mmpp_trace(
+        1047, rate_on_hz=0.5 * n, mean_on_s=10.0, mean_off_s=20.0,
+        duration_s=120.0, fleet=n, n_fog=max(4, n // 6),
+    )
+    counts = jnp.zeros((n,), jnp.float32).at[
+        jnp.asarray(trace.sensor)
+    ].add(1.0)
+    delays = jnp.float32(trace.duration_s) / jnp.maximum(counts, 1.0)
+    alpha_mm, frac_mm = CELLS[1]
+    mm_cfg = cfgs[1].replace(arrival_delay_s=delays)
+    mm = eng.run("hfl-async", mm_cfg, scale.seeds, ds_fn,
+                 label="async:mmpp-replay")
+    mm_time = float(jnp.mean(mm["sim_time_s"]))
+    mm_merges = float(jnp.mean(mm["merges"]))
+    mm_s_per_merge = mm_time / max(mm_merges, 1.0)
+    rows.append(dict(
+        alpha=alpha_mm,
+        buffer_frac=frac_mm,
+        arrival="mmpp",
+        n_events=mm_cfg.n_events,
+        f1_mean=mm.seed_mean_std("f1")[0],
+        f1_std=mm.seed_mean_std("f1")[1],
+        sim_time_s=mm_time,
+        merges=mm_merges,
+        staleness_mean=float(jnp.mean(mm["staleness"])),
+        sim_s_per_merge=mm_s_per_merge,
+        speedup_vs_sync=sync_row["sim_s_per_round"] / max(mm_s_per_merge, 1e-9),
+        trace=dict(
+            kind=trace.kind, n_events=int(trace.n_events),
+            mean_rate_hz=float(trace.mean_rate_hz()),
+            duration_s=float(trace.duration_s),
+        ),
+    ))
     return {
         "n_sensors": n,
         "seeds": list(scale.seeds),
@@ -120,6 +163,7 @@ def report(res: dict) -> str:
             f"{r['alpha']:>6g} {r['buffer_frac']:>5g} "
             f"{r['sim_s_per_merge']:>8.2f} {r['speedup_vs_sync']:>7.2f}x "
             f"{r['staleness_mean']:>6.2f} {r['f1_mean']:.3f}±{r['f1_std']:.3f}"
+            + (f"  [{r['arrival']}]" if r.get("arrival") else "")
         )
     eng = res.get("engine")
     if eng:

@@ -24,9 +24,13 @@ TABLE_SPECS: dict[str, tuple] = {
     "serve_bench": check_serve_bench.CHECKS,
     "load_bench": check_load_bench.CHECKS,
     "async_bench": (
-        ("rows", ("alpha", "buffer_frac"), "sim_s_per_merge"),
-        ("rows", ("alpha", "buffer_frac"), "speedup_vs_sync"),
-        ("rows", ("alpha", "buffer_frac"), "f1_mean"),
+        ("rows", ("alpha", "buffer_frac", "arrival"), "sim_s_per_merge"),
+        ("rows", ("alpha", "buffer_frac", "arrival"), "speedup_vs_sync"),
+        ("rows", ("alpha", "buffer_frac", "arrival"), "f1_mean"),
+    ),
+    "scale_bench": (
+        ("rows", ("n", "chunk"), "temp_bytes"),
+        ("rows", ("n", "chunk"), "wall_s"),
     ),
     "robustness_bench": (
         ("rows", ("robust", "byz_frac", "erasure"), "f1_mean"),
@@ -40,7 +44,7 @@ TABLE_SPECS: dict[str, tuple] = {
 
 # jsons whose ``engine`` block (sweep compile accounting) is summarised.
 ENGINE_JSONS = ("fig6_energy", "ablations", "async_bench", "robustness_bench",
-                "drift_bench")
+                "drift_bench", "table3_scalability")
 
 
 def _load(path: str) -> dict | None:
@@ -65,13 +69,15 @@ def delta_rows(fresh_dir: str, baseline_dir: str) -> list[tuple]:
         if fresh is None or base is None:
             continue
         for table, keys, field in checks:
+            # .get: legacy rows may predate a key field (e.g. the async
+            # ``arrival`` tag) — they key consistently on None.
             fresh_idx = {
-                tuple(r[k] for k in keys): r for r in fresh.get(table, [])
+                tuple(r.get(k) for k in keys): r for r in fresh.get(table, [])
             }
             for brow in base.get(table, []):
                 if field not in brow:
                     continue
-                row_key = tuple(brow[k] for k in keys)
+                row_key = tuple(brow.get(k) for k in keys)
                 row_tag = ",".join(
                     f"{k}={_fmt(v)}" for k, v in zip(keys, row_key)
                 )

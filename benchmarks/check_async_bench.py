@@ -28,7 +28,9 @@ F1_TOL = 0.08
 
 
 def _row_key(row: dict) -> tuple:
-    return (row["alpha"], row["buffer_frac"])
+    # "physics" = the Eq.-21 latency-model clock; "mmpp" = the PR-10
+    # trace-replay cell whose arrivals come from a loadgen ArrivalTrace.
+    return (row["alpha"], row["buffer_frac"], row.get("arrival", "physics"))
 
 
 def compare(
@@ -65,7 +67,7 @@ def compare(
     fresh_rows = {_row_key(r): r for r in fresh.get("rows", [])}
     for base_row in baseline.get("rows", []):
         key = _row_key(base_row)
-        tag = f"rows[alpha={key[0]:g},buf={key[1]:g}]"
+        tag = f"rows[alpha={key[0]:g},buf={key[1]:g},{key[2]}]"
         fresh_row = fresh_rows.get(key)
         if fresh_row is None:
             failures.append(f"{tag}: missing from the fresh JSON")

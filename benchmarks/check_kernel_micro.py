@@ -25,6 +25,7 @@ THRESHOLD = 3.0
 CHECKS = (
     ("rows", ("n",), "us_ref"),
     ("agg_rows", ("n_clients", "d"), "us_fused_ref"),
+    ("agg_rows", ("n_clients", "d"), "us_wire_ref"),
     ("local_train_rows", ("n_clients", "window"), "us_fused_ref"),
 )
 

@@ -1,0 +1,147 @@
+"""Memory + wall-clock gate for the fleet-axis scale bench (PR 10).
+
+  python -m benchmarks.check_scale_bench FRESH.json BASELINE.json
+
+Sibling of ``check_kernel_micro`` / ``check_sweep_compile``, protecting the
+client-chunked delta path's scaling contract:
+
+* **Chunk pin** (fresh JSON alone, no baseline needed): the chunked
+  N=10k cell's peak temp memory must stay below ``CHUNK_PIN`` (50%) of the
+  dense N=2k cell's — the PR's headline acceptance criterion.  A refactor
+  that silently rematerialises full-fleet intermediates inside the scan
+  trips this even with an up-to-date baseline.
+* **Flatness** (fresh JSON alone): across the chunked cells the temp
+  high-water mark must not spread by more than ``FLAT_TOL`` — the whole
+  point of chunking is that the footprint follows ``chunk``, not N.
+* **Memory trend** (vs baseline): per-cell ``temp_bytes`` must not exceed
+  the committed baseline by more than ``MEM_TOL`` (compiler-version
+  headroom; the quantity is otherwise deterministic).
+* **Wall-clock trend** (vs baseline): per-cell ``wall_s`` within the
+  ``WALL_TOL`` (3x) runner-noise allowance used by the other timing gates.
+* A vanished cell fails loudly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+CHUNK_PIN = 0.5    # chunked-10k temp vs dense-2k temp
+FLAT_TOL = 1.25    # max/min spread across chunked cells
+MEM_TOL = 1.10     # fresh vs baseline temp_bytes
+WALL_TOL = 3.0     # fresh vs baseline wall_s
+
+
+def _key(row: dict) -> tuple:
+    return (row["n"], row["chunk"])
+
+
+def compare(
+    fresh: dict,
+    baseline: dict | None,
+    *,
+    chunk_pin: float = CHUNK_PIN,
+    flat_tol: float = FLAT_TOL,
+    mem_tol: float = MEM_TOL,
+    wall_tol: float = WALL_TOL,
+) -> list[str]:
+    failures = []
+    rows = {_key(r): r for r in fresh.get("rows", [])}
+
+    # --- chunk pin: chunked 10k < chunk_pin * dense 2k ---------------------
+    dense = next((r for r in rows.values() if r["chunk"] is None), None)
+    chunked = [r for r in rows.values() if r["chunk"] is not None]
+    big = next((r for r in chunked if r["n"] >= 10_000), None)
+    if dense is None or big is None:
+        failures.append(
+            "chunk-pin: fresh JSON lacks the dense reference cell and/or a "
+            "chunked cell with n >= 10000"
+        )
+    else:
+        ratio = big["temp_bytes"] / max(dense["temp_bytes"], 1)
+        line = (
+            f"chunk-pin: chunked n={big['n']} temp "
+            f"{big['temp_bytes'] / 1e6:.1f}MB vs dense n={dense['n']} "
+            f"{dense['temp_bytes'] / 1e6:.1f}MB ({ratio:.2f}x)"
+        )
+        if ratio >= chunk_pin:
+            failures.append(f"{line}: must stay below {chunk_pin}x")
+        else:
+            print(f"ok   {line}")
+
+    # --- flatness: chunked temp follows chunk, not N -----------------------
+    if len(chunked) >= 2:
+        temps = [r["temp_bytes"] for r in chunked]
+        spread = max(temps) / max(min(temps), 1)
+        line = (
+            f"flatness: chunked temp spread over n="
+            f"{sorted(r['n'] for r in chunked)} is {spread:.2f}x"
+        )
+        if spread > flat_tol:
+            failures.append(f"{line}: exceeds {flat_tol}x — footprint is "
+                            "growing with the fleet again")
+        else:
+            print(f"ok   {line}")
+
+    # --- trends vs the committed baseline ----------------------------------
+    for base_row in (baseline or {}).get("rows", []):
+        key = _key(base_row)
+        tag = f"rows[n={key[0]},chunk={key[1]}]"
+        fresh_row = rows.get(key)
+        if fresh_row is None:
+            failures.append(f"{tag}: missing from the fresh JSON")
+            continue
+        mem_ratio = fresh_row["temp_bytes"] / max(base_row["temp_bytes"], 1)
+        mem_line = (
+            f"{tag}.temp_bytes: {base_row['temp_bytes'] / 1e6:.1f}MB -> "
+            f"{fresh_row['temp_bytes'] / 1e6:.1f}MB ({mem_ratio:.2f}x)"
+        )
+        if mem_ratio > mem_tol:
+            failures.append(f"{mem_line}: memory regression > {mem_tol}x")
+        else:
+            print(f"ok   {mem_line}")
+        wall_ratio = fresh_row["wall_s"] / max(base_row["wall_s"], 1e-9)
+        wall_line = (
+            f"{tag}.wall_s: {base_row['wall_s']:.2f} -> "
+            f"{fresh_row['wall_s']:.2f} ({wall_ratio:.2f}x)"
+        )
+        if wall_ratio > wall_tol:
+            failures.append(f"{wall_line}: wall-clock regression > "
+                            f"{wall_tol}x")
+        else:
+            print(f"ok   {wall_line}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated scale_bench.json")
+    ap.add_argument("baseline", help="committed baseline scale_bench.json")
+    ap.add_argument("--chunk-pin", type=float, default=CHUNK_PIN)
+    ap.add_argument("--mem-tol", type=float, default=MEM_TOL)
+    ap.add_argument("--wall-tol", type=float, default=WALL_TOL)
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(
+        fresh, baseline, chunk_pin=args.chunk_pin,
+        mem_tol=args.mem_tol, wall_tol=args.wall_tol,
+    )
+    if failures:
+        print("SCALE BENCH REGRESSION:")
+        for line in failures:
+            print(f"FAIL {line}")
+        print(
+            "If this PR intentionally changed the delta path's memory "
+            "behaviour, regenerate the baseline: PYTHONPATH=src python -m "
+            "benchmarks.run --only scale_bench"
+        )
+        return 1
+    print("scale_bench within tolerance of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -131,13 +131,33 @@ def run(scale: common.Scale) -> dict:
         fused = lambda D, E, F, W: ops.compress_aggregate(  # noqa: E731
             D, E, F, W, n_fog, K_FRAC, use_pallas=False
         )
+        # Sparse-wire twin (PR 10): emit (idx, int8, scale) and
+        # scatter-accumulate it — no dense per-client reconstruction.
+        wire = lambda D, E, F, W: ops.compress_aggregate_wire(  # noqa: E731
+            D, E, F, W, n_fog, K_FRAC, use_pallas=False
+        )
         unfused = _unfused_baseline(n_fog)
         best = _paired_time((("fused", fused), ("unfused", unfused)), args)
         us_fused, us_unfused = best["fused"], best["unfused"]
+        us_wire = _paired_time((("wire", wire), ("fused", fused)), args)["wire"]
+
+        def _temp_bytes(fn):
+            """Peak device memory of the compiled program's INTERMEDIATES
+            (``memory_analysis().temp_size_in_bytes``) — the column the
+            wire format exists to shrink."""
+            compiled = jax.jit(fn).lower(*args).compile()
+            return int(compiled.memory_analysis().temp_size_in_bytes)
+
         agg_rows.append(
             dict(n_clients=n_clients, d=d, elems=n_clients * d, n_fog=n_fog,
                  us_fused_ref=us_fused, us_unfused_ref=us_unfused,
-                 speedup=us_unfused / us_fused)
+                 us_wire_ref=us_wire,
+                 speedup=us_unfused / us_fused,
+                 temp_fused_bytes=_temp_bytes(fused),
+                 temp_wire_bytes=_temp_bytes(wire),
+                 temp_unfused_bytes=_temp_bytes(
+                     lambda D, E, F, W: unfused(D, E, F, W)
+                 ))
         )
 
     lt_rows = []
@@ -180,16 +200,22 @@ def report(res: dict) -> str:
             f"{r['payload_bits'] / r['dense_bits']:>7.3f} "
             f"{r['payload_bits']:>10.0f}"
         )
-    lines.append("fused compress-and-aggregate vs unfused compress->segment-sum"
-                 " (jnp ref path)")
+    lines.append("fused compress-and-aggregate vs sparse-wire vs unfused"
+                 " compress->segment-sum (jnp ref path; temp = compiled peak"
+                 " intermediate memory)")
     lines.append(
-        f"{'NxD':>14} {'elems':>9} {'fused us':>10} {'unfused us':>11} {'speedup':>8}"
+        f"{'NxD':>14} {'elems':>9} {'fused us':>10} {'wire us':>9} "
+        f"{'unfused us':>11} {'speedup':>8} {'tmp f MB':>9} {'tmp w MB':>9} "
+        f"{'tmp u MB':>9}"
     )
     for r in res["agg_rows"]:
         lines.append(
             f"{r['n_clients']:>5}x{r['d']:<8} {r['elems']:>9} "
-            f"{r['us_fused_ref']:>10.0f} {r['us_unfused_ref']:>11.0f} "
-            f"{r['speedup']:>8.2f}"
+            f"{r['us_fused_ref']:>10.0f} {r.get('us_wire_ref', 0):>9.0f} "
+            f"{r['us_unfused_ref']:>11.0f} {r['speedup']:>8.2f} "
+            f"{r.get('temp_fused_bytes', 0) / 1e6:>9.2f} "
+            f"{r.get('temp_wire_bytes', 0) / 1e6:>9.2f} "
+            f"{r.get('temp_unfused_bytes', 0) / 1e6:>9.2f}"
         )
     lines.append("fused local-train (resident window) vs per-client scan over"
                  " a gathered batch stream (jnp ref path)")

@@ -30,6 +30,7 @@ MODULES = (
     "async_bench",
     "robustness_bench",
     "drift_bench",
+    "scale_bench",
 )
 
 

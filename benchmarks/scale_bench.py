@@ -1,0 +1,21 @@
+"""Fleet-axis scale bench (PR 10): the Table III module's scale tier as its
+own runner entry, so ``experiments/bench/scale_bench.json`` gets the
+wall-clock + peak-device-memory high-water marks per (N, client_chunk) cell
+and ``benchmarks/check_scale_bench.py`` can gate them in CI.
+
+The measurement itself lives next to the Table III scalability study
+(:func:`benchmarks.table3_scalability.run_scale`): both walk the fleet axis,
+this one past the paper's N=200 toward 10^4-10^6 sensors.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks import table3_scalability as t3
+
+
+def run(scale: common.Scale) -> dict:
+    return t3.run_scale(scale)
+
+
+def report(res: dict) -> str:
+    return t3.report_scale(res)

@@ -24,12 +24,16 @@ def run(scale: common.Scale) -> dict:
     for n in (50, 100, 150, 200):
         m_fog = max(5, n // 10)
         # --- full-scale energy / participation audit (paper T=20) ---------
-        # One compiled program per (N, method) cell, all seeds batched.
+        # ONE compiled program per N: the four methods ride a lax.switch
+        # branch index through ``Engine.sweep`` (method is a swept operand,
+        # like the payload size), instead of one audit program per
+        # (N, method) cell.  ``check_sweep_compile`` gates the count.
         audit_cfg = exp.make_config(n_sensors=n, n_fog=m_fog, rounds=20)
-        audits = {
-            meth: eng.audit(meth, audit_cfg, (0, 1, 2), label=f"n={n}:audit")
-            for meth in METHODS
-        }
+        sw = eng.sweep(
+            METHODS, [audit_cfg] * len(METHODS), (0, 1, 2),
+            family="audit", label=f"n={n}:audit",
+        )
+        audits = {meth: sw.cell(i) for i, meth in enumerate(METHODS)}
         # --- F1 from training at budgeted scale ---------------------------
         n_train = scale.train_n[n]
         train_cfg = exp.make_config(
@@ -67,6 +71,108 @@ def run(scale: common.Scale) -> dict:
                 )
             )
     return {"rows": rows, "engine": common.engine_snapshot(eng.take_log())}
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale tier (PR 10): wall-clock + peak-device-memory high-water marks
+# of the client-phase delta path (fused compress + fog accumulate) as N grows
+# toward 10^4-10^6 sensors, dense vs client-chunked.  Saved as its own JSON
+# (``scale_bench.json`` via ``benchmarks/scale_bench.py``) and gated by
+# ``benchmarks/check_scale_bench.py``.
+# ---------------------------------------------------------------------------
+
+SCALE_D = 1352        # paper model size (flat autoencoder params)
+SCALE_N_FOG = 16
+SCALE_CHUNK = 512
+
+
+def scale_cells(quick: bool) -> tuple[tuple[int, int | None], ...]:
+    """(N, client_chunk) cells.  The dense N=2k cell is the memory
+    reference; the chunked tier grows N with the footprint pinned."""
+    cells = [
+        (2_000, None),
+        (2_000, SCALE_CHUNK),
+        (10_000, SCALE_CHUNK),
+        (50_000, SCALE_CHUNK),
+    ]
+    if not quick:
+        cells.append((200_000, SCALE_CHUNK))
+    return tuple(cells)
+
+
+def run_scale(scale: common.Scale) -> dict:
+    """Measure the delta path exactly as the round loops run it.
+
+    Per cell: jit-lower-compile ``aggregation.compress_and_accumulate``
+    under the engine-resolved blockwise compressor, read the compiled
+    program's ``memory_analysis()`` — ``temp_size_in_bytes`` is the
+    peak-device-memory high-water mark of the path's INTERMEDIATES
+    (arguments and outputs are round state, recorded separately, and scale
+    with N by definition) — then time the real execution (min over reps).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import aggregation as agg
+    from repro.engine import Engine
+
+    cc = Engine().resolve_compressor(exp.make_config(50, 5, rounds=1).compressor)
+    rows = []
+    for n, chunk in scale_cells(scale.quick):
+        k1, k2 = jax.random.split(jax.random.key(n))
+        deltas = jax.random.normal(k1, (n, SCALE_D), jnp.float32)
+        err = 0.1 * jax.random.normal(k2, (n, SCALE_D), jnp.float32)
+        fog_id = jnp.arange(n, dtype=jnp.int32) % SCALE_N_FOG
+        w = jnp.ones((n,), jnp.float32)
+
+        def fn(de, er, fi, ww, chunk=chunk):
+            return agg.compress_and_accumulate(
+                de, er, fi, ww, SCALE_N_FOG, cc, chunk=chunk
+            )
+
+        t0 = time.time()
+        compiled = jax.jit(fn).lower(deltas, err, fog_id, w).compile()
+        compile_s = time.time() - t0
+        ma = compiled.memory_analysis()
+        walls = []
+        for _ in range(2 if n <= 10_000 else 1):
+            t0 = time.time()
+            out = compiled(deltas, err, fog_id, w)
+            jax.tree_util.tree_map(jax.block_until_ready, out)
+            walls.append(time.time() - t0)
+        rows.append(dict(
+            n=n, chunk=chunk, d=SCALE_D, n_fog=SCALE_N_FOG,
+            temp_bytes=int(ma.temp_size_in_bytes),
+            argument_bytes=int(ma.argument_size_in_bytes),
+            output_bytes=int(ma.output_size_in_bytes),
+            wall_s=min(walls), compile_s=compile_s,
+        ))
+    return {
+        "rows": rows,
+        "meta": dict(
+            memory_metric="compiled memory_analysis().temp_size_in_bytes",
+            compressor="engine-resolved blockwise (oracle on CPU)",
+            quick=scale.quick,
+        ),
+    }
+
+
+def report_scale(res: dict) -> str:
+    lines = [
+        "scale_bench (delta-path wall-clock + peak temp memory vs fleet N;"
+        " chunked cells pin the high-water mark to O(chunk * d))",
+        f"{'N':>7} {'chunk':>6} {'temp MB':>8} {'args MB':>8} {'out MB':>7}"
+        f" {'wall s':>7}",
+    ]
+    for r in res["rows"]:
+        lines.append(
+            f"{r['n']:>7} {str(r['chunk'] or 'dense'):>6} "
+            f"{r['temp_bytes'] / 1e6:8.1f} {r['argument_bytes'] / 1e6:8.1f} "
+            f"{r['output_bytes'] / 1e6:7.1f} {r['wall_s']:7.2f}"
+        )
+    return "\n".join(lines)
 
 
 def report(res: dict) -> str:

@@ -53,6 +53,115 @@ def fog_aggregate(
     return _tree_map(agg, updates), fog_weight
 
 
+def _chunk_starts(n: int, chunk: int) -> tuple[jax.Array, jax.Array]:
+    """(clamped, nominal) chunk-start indices covering a client axis of n.
+
+    Instead of zero-padding N up to a chunk multiple (two full-size input
+    copies), the last chunk is CLAMPED to start at ``n - chunk`` and
+    re-reads up to ``chunk - 1`` rows of its predecessor.  Re-reading is
+    safe because every per-row output (reconstruction, EF update) is a
+    deterministic function of that row alone — overlap rows recompute
+    bit-identically — while per-fog sums mask the overlap rows' weights to
+    zero via the nominal starts.  Requires ``chunk < n`` (the dispatch
+    guarantees it).
+    """
+    n_chunks = -(-n // chunk)
+    nominal = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    return jnp.minimum(nominal, n - chunk), nominal
+
+
+def _wire_k_frac(d: int, cfg: comp.CompressorConfig):
+    """Concrete per-block keep fraction if the sparse wire is usable.
+
+    The wire is shape-bearing (k slots per block), so it needs a concrete
+    ``rho_s``; config-axis sweeps trace it and must keep the dense oracle.
+    Returns a float, or None when the config doesn't qualify.
+    """
+    if not (
+        cfg.enabled and cfg.is_sparse and cfg.fused
+        and cfg.mode == "blockwise"
+    ):
+        return None
+    k_frac = comp.blockwise_k_frac(d, cfg.rho_s)
+    if not isinstance(k_frac, (int, float)):
+        return None
+    comp.validate_blockwise_bits(cfg.quant_bits)
+    return k_frac
+
+
+def _chunked_compress_and_accumulate(
+    deltas, err, fog_id, weights, n_fog: int, cfg, chunk: int
+):
+    """``lax.scan`` over client chunks carrying the (n_fog, d) buffers.
+
+    Each scan step compresses and accumulates one chunk of clients, so the
+    transient footprint (blocked tiles, masks, wire slots) is O(chunk * d)
+    instead of O(N * d) — the peak high-water mark scales with the chunk
+    knob, not the fleet.  EF state is still (N, d) round state: it is
+    emitted chunk-at-a-time as stacked scan outputs.
+
+    Inside each chunk, a concrete-``rho_s`` fused blockwise config takes
+    the sparse wire (emit + scatter-accumulate, no dense per-chunk
+    reconstruction); anything else falls back to the dense per-chunk path
+    (still chunk-bounded).  Chunks are addressed with clamped
+    ``dynamic_slice`` starts (:func:`_chunk_starts`) and the EF output is
+    written in place into a carried (N, d) buffer, so neither padded input
+    copies nor a stacked scan-output staging buffer ever materialise.
+    Float summation order differs from the unchunked pass, which is why
+    the equivalence pins are bitwise only at ``chunk >= N`` (where this
+    function is never entered).
+    """
+    n, d = deltas.shape
+    starts, nominal = _chunk_starts(n, chunk)
+    k_frac = _wire_k_frac(d, cfg)
+
+    def body(carry, x):
+        fog_sum, fog_weight, err_out = carry
+        start, nom = x
+        dc = jax.lax.dynamic_slice_in_dim(deltas, start, chunk)
+        ec = jax.lax.dynamic_slice_in_dim(err, start, chunk)
+        fc = jax.lax.dynamic_slice_in_dim(fog_id, start, chunk)
+        wc = jax.lax.dynamic_slice_in_dim(weights, start, chunk)
+        # Rows the clamped last chunk re-reads were already accumulated;
+        # zero their weight so the fog sums count every client once.
+        fresh = start + jnp.arange(chunk, dtype=jnp.int32) >= nom
+        wc = wc * fresh.astype(wc.dtype)
+        if k_frac is not None:
+            # Same graceful-degradation guard as the unchunked path.
+            finite = jnp.all(jnp.isfinite(dc), axis=-1) & jnp.all(
+                jnp.isfinite(ec), axis=-1
+            )
+            dc = jnp.where(finite[:, None], dc, 0.0)
+            ec = jnp.where(finite[:, None], ec, 0.0)
+            wc = wc * finite.astype(wc.dtype)
+            part_w = jax.ops.segment_sum(wc, fc, num_segments=n_fog)
+            part, new_err_c = kops.compress_aggregate_wire(
+                dc, ec, fc, wc, n_fog, k_frac,
+                quantize=cfg.quant_bits < 32,
+                use_pallas=cfg.use_pallas,
+                interpret=cfg.interpret,
+            )
+        else:
+            part, part_w, new_err_c = compress_and_accumulate(
+                dc, ec, fc, wc, n_fog, cfg
+            )
+        # Overlap rows rewrite bit-identical values (per-row determinism).
+        err_out = jax.lax.dynamic_update_slice_in_dim(
+            err_out, new_err_c, start, 0
+        )
+        return (fog_sum + part, fog_weight + part_w, err_out), None
+
+    carry0 = (
+        jnp.zeros((n_fog, d), jnp.float32),
+        jnp.zeros((n_fog,), jnp.float32),
+        jnp.zeros((n, d), deltas.dtype),
+    )
+    (fog_sum, fog_weight, new_err), _ = jax.lax.scan(
+        body, carry0, (starts, nominal)
+    )
+    return fog_sum, fog_weight, new_err
+
+
 def compress_and_accumulate(
     deltas: jax.Array,      # (N, d) raw flat client updates
     err: jax.Array,         # (N, d) error-feedback buffers
@@ -60,6 +169,7 @@ def compress_and_accumulate(
     weights: jax.Array,     # (N,) f32, zeroed for non-participants
     n_fog: int,
     cfg: comp.CompressorConfig,
+    chunk: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-client compression + UNNORMALISED weighted fog sums (one pass).
 
@@ -75,7 +185,17 @@ def compress_and_accumulate(
     they touch the fog sums, so one poisoned client can never NaN the
     global model.  Always on, independent of the fault layer; a no-op
     (bit-identical ``where(true, x, _)``) for finite inputs.
+
+    ``chunk`` (the resolved ``HFLConfig.client_chunk``) bounds the
+    transient memory: ``None`` or ``chunk >= N`` runs the one-shot path
+    below UNCHANGED (bit-identical to the pre-chunking code); a smaller
+    chunk scans :func:`_chunked_compress_and_accumulate` over client
+    chunks.
     """
+    if chunk is not None and 0 < chunk < deltas.shape[0]:
+        return _chunked_compress_and_accumulate(
+            deltas, err, fog_id, weights, n_fog, cfg, chunk
+        )
     finite = jnp.all(jnp.isfinite(deltas), axis=-1) & jnp.all(
         jnp.isfinite(err), axis=-1
     )
@@ -124,6 +244,7 @@ def compress_and_aggregate(
     n_fog: int,
     cfg: comp.CompressorConfig,
     axis: str | None = None,
+    chunk: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused sensor-uplink compression + intra-cluster aggregation.
 
@@ -135,19 +256,79 @@ def compress_and_aggregate(
 
     Under ``shard_map`` pass the client mesh ``axis``: each shard's partial
     fog sums are psum-reduced before normalising (the sensor->fog hop, cf.
-    :func:`hierarchical_mean`).
+    :func:`hierarchical_mean`).  ``chunk`` applies WITHIN the shard's local
+    client slice, so chunking composes with ``shard_clients``.
 
     Returns (fog_update (n_fog, d) — the Eq. 13 weighted cluster means —
     fog_weight (n_fog,), new_err (N, d)).  Empty clusters get zero updates.
     """
     fog_sum, fog_weight, new_err = compress_and_accumulate(
-        deltas, err, fog_id, weights, n_fog, cfg
+        deltas, err, fog_id, weights, n_fog, cfg, chunk=chunk
     )
     if axis is not None:
         fog_sum = jax.lax.psum(fog_sum, axis)
         fog_weight = jax.lax.psum(fog_weight, axis)
     denom = jnp.maximum(fog_weight, 1e-12)
     return fog_sum / denom[:, None], fog_weight, new_err
+
+
+def client_compress(
+    deltas: jax.Array,      # (N, d) raw flat client updates
+    err: jax.Array,         # (N, d) error-feedback buffers
+    cfg: comp.CompressorConfig,
+    chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-client compression with identity segments, optionally chunked.
+
+    The robust and async paths need each client's dequantised
+    reconstruction to stay addressable (the order statistic / the in-flight
+    buffer reads them per client), so the output is necessarily (N, d) —
+    but the compression TRANSIENTS (blocked tiles, bisection masks, quant
+    scratch) need not be: with ``chunk`` set, a ``lax.scan`` emits the
+    reconstructions chunk-at-a-time and only O(chunk * d) of scratch is
+    live at once.
+
+    ``chunk=None`` / ``chunk >= N`` is the exact legacy call
+    (``fog_id = arange(N)``, unit weights — bit-identical); returns
+    (recon (N, d), new_err (N, d)).
+    """
+    n = deltas.shape[0]
+    if chunk is None or chunk <= 0 or chunk >= n:
+        recon, _, new_err = compress_and_accumulate(
+            deltas, err,
+            jnp.arange(n, dtype=jnp.int32), jnp.ones((n,), jnp.float32),
+            n, cfg,
+        )
+        return recon, new_err
+    d = deltas.shape[1]
+    starts, _ = _chunk_starts(n, chunk)
+
+    def body(carry, start):
+        recon_out, err_out = carry
+        dc = jax.lax.dynamic_slice_in_dim(deltas, start, chunk)
+        ec = jax.lax.dynamic_slice_in_dim(err, start, chunk)
+        recon_c, _, new_err_c = compress_and_accumulate(
+            dc, ec,
+            jnp.arange(chunk, dtype=jnp.int32),
+            jnp.ones((chunk,), jnp.float32),
+            chunk, cfg,
+        )
+        # Rows the clamped last chunk re-reads recompute bit-identically
+        # (per-row determinism), so overwriting them is harmless.
+        recon_out = jax.lax.dynamic_update_slice_in_dim(
+            recon_out, recon_c, start, 0
+        )
+        err_out = jax.lax.dynamic_update_slice_in_dim(
+            err_out, new_err_c, start, 0
+        )
+        return (recon_out, err_out), None
+
+    carry0 = (
+        jnp.zeros((n, d), deltas.dtype),
+        jnp.zeros((n, d), deltas.dtype),
+    )
+    (recon, new_err), _ = jax.lax.scan(body, carry0, starts)
+    return recon, new_err
 
 
 def robust_compress_and_aggregate(
@@ -159,6 +340,7 @@ def robust_compress_and_aggregate(
     cfg: comp.CompressorConfig,
     trim_frac: float | jax.Array,
     mode: str,              # "trimmed" | "median"
+    chunk: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Byzantine-robust variant of :func:`compress_and_aggregate`.
 
@@ -172,14 +354,11 @@ def robust_compress_and_aggregate(
     tolerance (summation order differs).
 
     Returns (fog_update (n_fog, d) — NORMALISED robust aggregates —
-    fog_weight (n_fog,), new_err (N, d)).
+    fog_weight (n_fog,), new_err (N, d)).  ``chunk`` bounds the compress
+    transients (see :func:`client_compress`); the (N, d) reconstructions
+    themselves are what the order statistic consumes, so they remain.
     """
-    n = deltas.shape[0]
-    recon, _, new_err = compress_and_accumulate(
-        deltas, err,
-        jnp.arange(n, dtype=jnp.int32), jnp.ones((n,), jnp.float32),
-        n, cfg,
-    )
+    recon, new_err = client_compress(deltas, err, cfg, chunk=chunk)
     # The isfinite guard above zeroed poisoned reconstructions; their
     # aggregation weight must vanish too, or a zeroed row would still pull
     # the order statistic toward zero.

@@ -106,6 +106,15 @@ class AsyncFLConfig:
     timeout_s: float | Any = NEVER_S     # global merge timeout (sim seconds)
     fog_timeout_s: float | Any = NEVER_S  # fog tick timeout (sim seconds)
     tau_max: float | Any = NEVER_S       # drop updates staler than this
+    # Arrival clock (a LEAF, so it sweeps/stacks like the other knobs).
+    # Scalar: extra seconds added to the physics clock (compute + Eq. 21
+    # uplink latency); the 0.0 default is bit-identical to the legacy
+    # clock.  A (N,) array REPLACES the physics clock with replayed
+    # per-client launch->arrival delays — the hook that drives the loop
+    # from a recorded :class:`repro.loadgen.traces.ArrivalTrace` instead
+    # of the synthetic latency model (energy stays physics-based either
+    # way).  The branch is on the leaf's RANK, which is static under jit.
+    arrival_delay_s: float | Any = 0.0
 
     def replace(self, **kw: Any) -> "AsyncFLConfig":
         return dataclasses.replace(self, **kw)
@@ -113,7 +122,7 @@ class AsyncFLConfig:
 
 _ASYNC_CHILD_FIELDS = (
     "base", "buffer_k", "fog_k", "alpha", "timeout_s", "fog_timeout_s",
-    "tau_max",
+    "tau_max", "arrival_delay_s",
 )
 _ASYNC_AUX_FIELDS = ("n_events",)
 
@@ -351,10 +360,10 @@ def make_event_fn(
         # One segment per client keeps the same fused compress kernel while
         # leaving each compressed reconstruction addressable for its own
         # in-flight journey (weights fold in at MERGE time, when the
-        # staleness discount is known).
-        recon, _, new_err = agg.compress_and_accumulate(
-            deltas, state.err, jnp.arange(n, dtype=jnp.int32),
-            jnp.ones((n,), jnp.float32), n, cfg.compressor,
+        # staleness discount is known).  ``client_chunk`` bounds the
+        # per-chunk kernel footprint exactly as in the synchronous loops.
+        recon, new_err = agg.client_compress(
+            deltas, state.err, cfg.compressor, chunk=cfg.client_chunk,
         )
         new_err = jnp.where(launch[:, None], new_err, state.err)
         inflight = jnp.where(launch[:, None], recon, state.inflight)
@@ -368,10 +377,18 @@ def make_event_fn(
         )
         lat_comp = jnp.float32(flops) / cfg.compute_rate_flops
         up_lat = en.link_latency_s(l_u, fa.dist_m, cfg.channel)
-        arrive_t = jnp.where(
-            launch, state.t_now + lat_comp + up_lat, state.arrive_t
-        )
-        uplink_lat = jnp.where(launch, up_lat, state.uplink_lat)
+        delay = jnp.asarray(acfg.arrival_delay_s, jnp.float32)
+        if delay.ndim > 0:
+            # Trace replay: the recorded delay IS the end-to-end
+            # launch->arrival time (compute included).
+            up_eff = jnp.broadcast_to(delay, (n,))
+            arr_t_new = state.t_now + up_eff
+        else:
+            # Physics clock (+0.0 scalar jitter = exact legacy numerics).
+            up_eff = up_lat
+            arr_t_new = state.t_now + lat_comp + up_lat + delay
+        arrive_t = jnp.where(launch, arr_t_new, state.arrive_t)
+        uplink_lat = jnp.where(launch, up_eff, state.uplink_lat)
         base_version = jnp.where(launch, state.version, state.base_version)
         launch_fog = jnp.where(launch, fa.fog_id, state.launch_fog)
         busy = state.busy | launch

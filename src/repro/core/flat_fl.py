@@ -150,19 +150,20 @@ def make_flat_round_fn(
             if cfg.robust == "mean":
                 fog_sum, fog_weight, new_err = agg.compress_and_accumulate(
                     deltas, state.err, gateway_id, weights, 1,
-                    cfg.compressor,
+                    cfg.compressor, chunk=cfg.client_chunk,
                 )
                 fog_delta = fog_sum / jnp.maximum(fog_weight, 1e-12)[:, None]
             else:
                 fog_delta, _, new_err = agg.robust_compress_and_aggregate(
                     deltas, state.err, gateway_id, weights, 1,
                     cfg.compressor, cfg.trim_frac, cfg.robust,
+                    chunk=cfg.client_chunk,
                 )
         else:
             sharded = shard_map_compat(
                 lambda p, dat, kk, e, w, fid: _clients_round(
                     clients_fn, p, dat, kk, e, w, fid, 1,
-                    cfg.compressor, axis="data",
+                    cfg.compressor, axis="data", chunk=cfg.client_chunk,
                 ),
                 mesh=client_mesh,
                 in_specs=(P(), P("data"), P("data"), P("data"),

@@ -107,6 +107,12 @@ class HFLConfig:
     trim_frac: float | Any = 0.0     # weight fraction cut per end (trimmed)
     faults: flt.FaultConfig = flt.FaultConfig()
     drift: drf.DriftConfig = drf.DriftConfig()
+    # Client-phase memory bound: compress/accumulate scans the client axis
+    # in chunks of this many sensors, so transient HBM/VMEM high-water
+    # marks scale with the chunk, not the fleet.  None (or >= N) keeps the
+    # one-shot path bit-identically; STATIC (it is shape-bearing).  Under
+    # ``shard_clients`` the chunk applies within each shard's local slice.
+    client_chunk: int | None = None
 
     def __post_init__(self) -> None:
         if self.robust not in ("mean", "trimmed", "median"):
@@ -122,6 +128,11 @@ class HFLConfig:
                 "trim_frac cuts a weight fraction from EACH end and must "
                 f"be in [0, 0.5), got {tf!r}"
             )
+        cc = self.client_chunk
+        if cc is not None and (not isinstance(cc, int) or cc < 1):
+            raise ValueError(
+                f"client_chunk must be None or a positive int, got {cc!r}"
+            )
 
     def replace(self, **kw: Any) -> "HFLConfig":
         return dataclasses.replace(self, **kw)
@@ -133,7 +144,7 @@ _HFL_LEAF_FIELDS = (
 )
 _HFL_AUX_FIELDS = (
     "rule", "rounds", "local_epochs", "batch_size", "server_opt",
-    "local_solver", "fog_mobility", "deployment", "robust",
+    "local_solver", "fog_mobility", "deployment", "robust", "client_chunk",
 )
 
 
@@ -224,6 +235,7 @@ def _client_train_fn(loss_fn: LossFn, cfg: HFLConfig):
 def _clients_round(
     clients_fn, params, data, keys, err, weights, fog_id, n_fog, cc,
     axis: str | None = None,
+    chunk: int | None = None,
 ):
     """Train every client and fuse compression into the fog reduction.
 
@@ -238,7 +250,7 @@ def _clients_round(
     """
     deltas, losses = clients_fn(params, data, keys)
     fog_delta, fog_weight, new_err = agg.compress_and_aggregate(
-        deltas, err, fog_id, weights, n_fog, cc, axis=axis
+        deltas, err, fog_id, weights, n_fog, cc, axis=axis, chunk=chunk
     )
     return fog_delta, fog_weight, new_err, losses
 
@@ -416,7 +428,7 @@ def make_round_fn(
             if cfg.robust == "mean":
                 fog_sum, fog_weight, new_err = agg.compress_and_accumulate(
                     deltas, state.err, fa.fog_id, weights, n_fog,
-                    cfg.compressor,
+                    cfg.compressor, chunk=cfg.client_chunk,
                 )
                 fog_delta = fog_sum / jnp.maximum(fog_weight, 1e-12)[:, None]
             else:
@@ -424,13 +436,14 @@ def make_round_fn(
                     agg.robust_compress_and_aggregate(
                         deltas, state.err, fa.fog_id, weights, n_fog,
                         cfg.compressor, cfg.trim_frac, cfg.robust,
+                        chunk=cfg.client_chunk,
                     )
                 )
         else:
             sharded = shard_map_compat(
                 lambda p, dat, kk, e, w, fid: _clients_round(
                     clients_fn, p, dat, kk, e, w, fid, n_fog,
-                    cfg.compressor, axis="data",
+                    cfg.compressor, axis="data", chunk=cfg.client_chunk,
                 ),
                 mesh=client_mesh,
                 in_specs=(P(), P("data"), P("data"), P("data"),

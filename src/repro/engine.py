@@ -72,12 +72,14 @@ equivalence and Pallas-vs-ref parity.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 import time
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import async_fl, hfl
 from repro.core import compression as comp
@@ -100,6 +102,26 @@ def _base_cfg(cfg) -> hfl.HFLConfig:
     every engine path that reads kernel/compressor/round statics goes
     through here so the four families share one code path."""
     return cfg.base if isinstance(cfg, async_fl.AsyncFLConfig) else cfg
+
+
+def _cfg_key(cfg) -> tuple:
+    """Hashable program-cache fingerprint of a (possibly array-bearing)
+    config.  Dataclass configs hash fine while every leaf is a Python
+    scalar, but leaves like ``AsyncFLConfig.arrival_delay_s`` may carry a
+    trace-replay ARRAY — unhashable, and (because ``Engine.run`` closes
+    over the config, baking leaves in as compile-time constants) the key
+    must distinguish array CONTENT, not just shape.  Arrays become
+    (shape, dtype, digest) triples; everything else passes through."""
+    leaves, treedef = jax.tree_util.tree_flatten(cfg)
+    out = []
+    for x in leaves:
+        if isinstance(x, (jax.Array, np.ndarray)):
+            arr = np.asarray(x)
+            out.append(("arr", arr.shape, str(arr.dtype),
+                        hashlib.sha1(arr.tobytes()).hexdigest()))
+        else:
+            out.append(x)
+    return (treedef, tuple(out))
 
 
 def _describe_compressor(cc: comp.CompressorConfig) -> str:
@@ -206,15 +228,24 @@ class Engine:
         compressor: str = "auto",
         shard_trials: bool = True,
         shard_clients: bool = False,
+        client_chunk: int | None = None,
         hidden: tuple[int, ...] = (16, 8, 16),
         percentile: float = 99.0,
         point_adjusted: bool = False,
     ) -> None:
         if compressor not in ("auto", "keep"):
             raise ValueError(f"compressor must be auto|keep, got {compressor!r}")
+        if client_chunk is not None and (
+            not isinstance(client_chunk, int) or client_chunk < 1
+        ):
+            raise ValueError(
+                f"client_chunk must be None or a positive int, got "
+                f"{client_chunk!r}"
+            )
         self.compressor = compressor
         self.shard_trials = shard_trials
         self.shard_clients = shard_clients
+        self.client_chunk = client_chunk
         self.hidden = hidden
         self.percentile = percentile
         self.point_adjusted = point_adjusted
@@ -257,13 +288,23 @@ class Engine:
 
     def resolve_config(self, cfg):
         """Apply the engine's kernel-backend defaults; an async config
-        resolves through its nested ``base`` round-loop config."""
+        resolves through its nested ``base`` round-loop config.
+
+        ``Engine(client_chunk=...)`` stamps the fleet-axis chunk size into
+        configs that leave it unset (``cfg.client_chunk is None``); an
+        explicit per-config value always wins.  The knob is static aux
+        (shape-bearing), so differing chunk settings split sweep
+        shape-classes — which is why :meth:`_audit_normal` blanks it.
+        """
         if isinstance(cfg, async_fl.AsyncFLConfig):
             return cfg.replace(base=self.resolve_config(cfg.base))
-        return cfg.replace(
+        kw: dict[str, Any] = dict(
             compressor=self.resolve_compressor(cfg.compressor),
             local_solver=self.resolve_local_solver(cfg.local_solver),
         )
+        if cfg.client_chunk is None and self.client_chunk is not None:
+            kw["client_chunk"] = self.client_chunk
+        return cfg.replace(**kw)
 
     @staticmethod
     def stack_datasets(ds_list: Sequence[SensorDataset]) -> SensorDataset:
@@ -418,7 +459,7 @@ class Engine:
         shapes = tuple(
             (x.shape, str(x.dtype)) for x in jax.tree_util.tree_leaves(stacked)
         )
-        cache_key = ("run", method, cfg, s_n, p_n, shapes,
+        cache_key = ("run", method, _cfg_key(cfg), s_n, p_n, shapes,
                      self.hidden, self.percentile, self.point_adjusted,
                      client_mesh.size if client_mesh is not None else 0,
                      return_params)
@@ -475,7 +516,7 @@ class Engine:
         seeds = tuple(int(s) for s in seeds)
         s_n, p_n = len(seeds), n_deployments
         keys = self._trial_keys(seeds, p_n)           # (S, P)
-        cache_key = ("audit", method, cfg, s_n, p_n, d)
+        cache_key = ("audit", method, _cfg_key(cfg), s_n, p_n, d)
 
         def build():
             trial = lambda key: exp.audit_trial(method, key, cfg, d)  # noqa: E731
@@ -525,6 +566,7 @@ class Engine:
             drift=drf.DriftConfig(),
             trim_frac=0.0,
             robust="mean",
+            client_chunk=None,  # audits never run the client phase
         )
 
     @staticmethod
@@ -574,7 +616,7 @@ class Engine:
 
     def sweep(
         self,
-        method: str,
+        method: str | Sequence[str],
         cfgs: Sequence[hfl.HFLConfig],
         seeds: Sequence[int],
         ds: Any = None,
@@ -602,6 +644,14 @@ class Engine:
         ``family="audit"`` replays the training-free energy accounting
         (``d`` = model size; ``ds`` ignored).
 
+        ``method`` may be a length-C sequence for ``family="audit"``: the
+        cells' methods become a ``lax.switch`` branch index — a swept
+        operand like the payload size — so audit cells that differ ONLY in
+        method (e.g. Table III's four methods at one N) share one compiled
+        program instead of one per (cfg, method) pair.  The training
+        family keeps one method per sweep (its per-method round loops
+        differ structurally).
+
         Returns a :class:`SweepRun` with metric leaves shaped (C, S, P);
         cell ``i`` matches ``Engine.run(cfgs[i], ...)`` /
         ``Engine.audit`` to float tolerance.
@@ -610,6 +660,22 @@ class Engine:
             raise ValueError(f"family must be run|audit, got {family!r}")
         if not cfgs:
             raise ValueError("need at least one config cell")
+        if isinstance(method, str):
+            methods = (method,) * len(cfgs)
+        else:
+            methods = tuple(method)
+            if len(methods) != len(cfgs):
+                raise ValueError(
+                    f"got {len(methods)} methods for {len(cfgs)} configs"
+                )
+            if family == "run" and len(set(methods)) > 1:
+                raise ValueError(
+                    "per-cell methods are audit-only (the training "
+                    "family's round loops differ structurally per method)"
+                )
+        # Order-preserving unique methods — the lax.switch branch table.
+        uniq = tuple(dict.fromkeys(methods))
+        method_desc = uniq[0] if len(uniq) == 1 else "+".join(uniq)
         seeds = tuple(int(s) for s in seeds)
         s_n, p_n = len(seeds), n_deployments
         keys = self._trial_keys(seeds, p_n)           # (S, P)
@@ -643,7 +709,7 @@ class Engine:
             stacked_cfg = self.stack_configs([norm[i] for i in idxs])
             rep = rcfgs[idxs[0]]
             knobs = dict(self._kernel_static_knobs(rep))
-            cache_key = ("sweep", family, method, sig, len(idxs), s_n, p_n,
+            cache_key = ("sweep", family, uniq, sig, len(idxs), s_n, p_n,
                          d, self.hidden, self.percentile, self.point_adjusted)
 
             if family == "run":
@@ -685,7 +751,7 @@ class Engine:
                                 else b
                             )
                         return exp.trial_metrics(
-                            method, key, one_ds, cfg_,
+                            uniq[0], key, one_ds, cfg_,
                             percentile=self.percentile,
                             point_adjusted=self.point_adjusted,
                             hidden=self.hidden,
@@ -712,18 +778,34 @@ class Engine:
                      for i in idxs],
                     jnp.float32,
                 )
+                # Per-cell method as a traced branch index: the program
+                # carries every unique method's audit as a lax.switch
+                # branch, so cells differing only in method co-batch.
+                midx = jnp.asarray(
+                    [uniq.index(methods[i]) for i in idxs], jnp.int32
+                )
 
                 def build():
-                    def trial(cfg_, lu, key):
-                        return exp.audit_trial(method, key, cfg_, d, l_u=lu)
+                    def trial(cfg_, lu, mi, key):
+                        if len(uniq) == 1:
+                            return exp.audit_trial(
+                                uniq[0], key, cfg_, d, l_u=lu
+                            )
+                        branches = [
+                            (lambda k_, c_, l_, m=m: exp.audit_trial(
+                                m, k_, c_, d, l_u=l_
+                            ))
+                            for m in uniq
+                        ]
+                        return jax.lax.switch(mi, branches, key, cfg_, lu)
 
-                    dep_v = jax.vmap(trial, in_axes=(None, None, 0))
-                    seed_v = jax.vmap(dep_v, in_axes=(None, None, 0))
-                    return jax.vmap(seed_v, in_axes=(0, 0, None))
+                    dep_v = jax.vmap(trial, in_axes=(None, None, None, 0))
+                    seed_v = jax.vmap(dep_v, in_axes=(None, None, None, 0))
+                    return jax.vmap(seed_v, in_axes=(0, 0, 0, None))
 
                 fn, fresh = self._get_program(cache_key, build)
                 out, wall = self._timed_call(
-                    fn, stacked_cfg, l_u, self._place(keys, s_n)
+                    fn, stacked_cfg, l_u, midx, self._place(keys, s_n)
                 )
 
             for pos, i in enumerate(idxs):
@@ -735,8 +817,9 @@ class Engine:
             )
             classes.append(info)
             wall_total += wall
-            self._log(kind=f"sweep-{family}", method=method,
-                      label=label or f"sweep:{method}", n_cells=len(idxs),
+            self._log(kind=f"sweep-{family}", method=method_desc,
+                      label=label or f"sweep:{method_desc}",
+                      n_cells=len(idxs),
                       n_trials=len(idxs) * s_n * p_n, wall_s=wall,
                       fresh_compile=fresh, compressor=info["compressor"])
 
@@ -751,7 +834,7 @@ class Engine:
                 metrics[name] = jnp.stack(vals)
             else:
                 metrics[name] = tuple(vals)
-        return SweepRun(method, rcfgs, seeds, p_n, metrics,
+        return SweepRun(method_desc, rcfgs, seeds, p_n, metrics,
                         tuple(classes), wall_total)
 
     def reachability(

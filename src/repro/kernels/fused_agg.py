@@ -87,6 +87,175 @@ def _fused_agg_kernel(
     pl.store(fog_ref, idx, acc + w_ref[i] * recon)
 
 
+def _wire_emit_kernel(
+    delta_ref,    # (1, 1, R, L)
+    err_ref,      # (1, 1, R, L)
+    idx_ref,      # (1, 1, k) int32
+    q_ref,        # (1, 1, k) f32 codes (int8-valued when quantizing)
+    scale_ref,    # (1, 1) f32
+    new_err_ref,  # (1, 1, R, L)
+    *,
+    k: int,
+    quantize: bool,
+):
+    """Emit the sparse wire for one (client, block) tile.
+
+    Identical selection to :func:`_fused_agg_kernel` (bisection threshold),
+    but the survivors are packed into k fixed slots (index + code + one
+    per-block scale) instead of a dense masked tile — this is the
+    rho_s-sized object the acoustic link actually carries.  Codes are
+    emitted as f32 holding exact int8 values: the consumer multiplies by
+    the scale either way, and f32 keeps the tile layout trivial.
+    """
+    v = (delta_ref[...] + err_ref[...]).reshape(-1)
+    absv = jnp.abs(v)
+
+    lo = jnp.float32(-1.0)
+    hi = jnp.max(absv)
+    amax = hi
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        take = jnp.sum(absv > mid) > k
+        return jnp.where(take, mid, lo), jnp.where(take, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    survive = absv > hi
+    rank_key = jnp.where(survive, absv, -1.0)
+    _, idx = jax.lax.top_k(rank_key, k)
+    kept = jnp.take_along_axis(survive, idx, axis=-1)
+    vals = jnp.where(kept, jnp.take_along_axis(v, idx, axis=-1), 0.0)
+    if quantize:
+        scale = amax / 127.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(vals / safe), -127.0, 127.0)
+        recon_vals = jnp.where(scale > 0, q * scale, 0.0)
+    else:
+        scale = jnp.float32(1.0)
+        q = vals
+        recon_vals = vals
+    idx_ref[...] = idx.reshape(1, 1, k).astype(jnp.int32)
+    q_ref[...] = q.reshape(1, 1, k)
+    scale_ref[...] = scale.reshape(1, 1)
+    # Residual via slot subtraction (one-hot matmul keeps it MXU-friendly):
+    # new_err = v - scatter(recon_vals at idx).
+    onehot = (idx[:, None] == jnp.arange(v.shape[0])[None, :]).astype(
+        jnp.float32
+    )
+    recon = recon_vals @ onehot
+    new_err_ref[...] = (v - recon).reshape(new_err_ref.shape)
+
+
+def _wire_agg_kernel(
+    fog_id_ref,   # (N,) int32  scalar prefetch
+    w_ref,        # (N,) f32    scalar prefetch
+    idx_ref,      # (1, 1, k) int32
+    q_ref,        # (1, 1, k) f32 codes
+    scale_ref,    # (1, 1) f32
+    fog_ref,      # (n_fog, 1, R, L) accumulator, resident across clients
+):
+    """Weighted scatter-accumulate straight off the wire.
+
+    Same grid discipline as :func:`_fused_agg_kernel` — ``(nb, N)`` with
+    clients innermost so the fog block stays VMEM-resident — but the input
+    per step is the k-slot wire, not a dense tile: the dense per-client
+    reconstruction never exists even inside the kernel, only the one-hot
+    expansion of k slots into the (R, L) accumulator tile.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        fog_ref[...] = jnp.zeros_like(fog_ref)
+
+    k = idx_ref.shape[-1]
+    idx = idx_ref[...].reshape(k)
+    contrib_vals = q_ref[...].reshape(k) * scale_ref[0, 0] * w_ref[i]
+    onehot = (
+        idx[:, None] == jnp.arange(BLOCK_ROWS * BLOCK_LANES)[None, :]
+    ).astype(jnp.float32)
+    tile = (contrib_vals @ onehot).reshape(1, 1, BLOCK_ROWS, BLOCK_LANES)
+    sel = (pl.dslice(fog_id_ref[i], 1), pl.dslice(0, 1),
+           slice(None), slice(None))
+    acc = pl.load(fog_ref, sel)
+    pl.store(fog_ref, sel, acc + tile)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_per_block", "quantize", "interpret")
+)
+def compress_wire_blocks(
+    delta: jax.Array,     # (N, nb, BLOCK_ROWS, BLOCK_LANES) f32
+    err: jax.Array,       # (N, nb, BLOCK_ROWS, BLOCK_LANES) f32
+    k_per_block: int,
+    quantize: bool = True,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Emit the sparse wire for every (client, block) tile.
+
+    Returns (idx (N, nb, k) int32, q (N, nb, k) f32 int8-valued codes,
+    scale (N, nb) f32, new_err like ``delta``).  The slot axis k is not
+    lane-padded — fine under interpret; a compiled-TPU pass would pad it to
+    a LANES multiple (hardware gate still pending per ROADMAP).
+    """
+    n, nb = delta.shape[:2]
+    assert delta.shape == (n, nb, BLOCK_ROWS, BLOCK_LANES), delta.shape
+    k = min(int(k_per_block), BLOCK_ROWS * BLOCK_LANES)
+    tile = pl.BlockSpec((1, 1, BLOCK_ROWS, BLOCK_LANES),
+                        lambda i, j: (i, j, 0, 0))
+    slot = pl.BlockSpec((1, 1, k), lambda i, j: (i, j, 0))
+    sc = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_wire_emit_kernel, k=k, quantize=quantize),
+        grid=(n, nb),
+        in_specs=[tile, tile],
+        out_specs=[slot, slot, sc, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, nb, k), jnp.int32),
+            jax.ShapeDtypeStruct((n, nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((n, nb), jnp.float32),
+            jax.ShapeDtypeStruct(delta.shape, delta.dtype),
+        ],
+        interpret=interpret,
+    )(delta, err)
+
+
+@functools.partial(jax.jit, static_argnames=("n_fog", "interpret"))
+def wire_aggregate_blocks(
+    idx: jax.Array,       # (N, nb, k) int32
+    q: jax.Array,         # (N, nb, k) f32 codes
+    scale: jax.Array,     # (N, nb) f32
+    fog_id: jax.Array,    # (N,) int32
+    weights: jax.Array,   # (N,) f32
+    n_fog: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Consume the wire into (n_fog, nb, R, L) weighted sums."""
+    n, nb, k = idx.shape
+    slot = pl.BlockSpec((1, 1, k), lambda j, i, *_: (i, j, 0))
+    sc = pl.BlockSpec((1, 1), lambda j, i, *_: (i, j))
+    fog_spec = pl.BlockSpec((n_fog, 1, BLOCK_ROWS, BLOCK_LANES),
+                            lambda j, i, *_: (0, j, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb, n),
+        in_specs=[slot, slot, sc],
+        out_specs=[fog_spec],
+    )
+    (out,) = pl.pallas_call(
+        _wire_agg_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_fog, nb, BLOCK_ROWS, BLOCK_LANES),
+                                 jnp.float32),
+        ],
+        interpret=interpret,
+    )(fog_id.astype(jnp.int32), weights.astype(jnp.float32), idx,
+      q.astype(jnp.float32), scale)
+    return out
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_fog", "k_per_block", "quantize", "interpret")
 )

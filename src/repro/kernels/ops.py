@@ -259,6 +259,136 @@ def compress_aggregate(
     )
 
 
+def wire_k(k_frac) -> int:
+    """Concrete per-block slot count for the sparse wire format.
+
+    The wire is shape-bearing (k indices + k codes per block), so unlike
+    the bisection keep-count it can NEVER be traced: a swept ``rho_s``
+    stays on the dense oracle, a concrete one gets the sparse wire.
+    """
+    k = max(1, int(round(_static_scalar(k_frac, "k_frac") * BLOCK_ELEMS)))
+    return min(k, BLOCK_ELEMS)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "quantize", "interpret"))
+def _compress_wire_pallas(deltas, err, k: int, quantize: bool,
+                          interpret: bool):
+    blocks, d = _pad_blocks_batch(deltas)
+    err_blocks, _ = _pad_blocks_batch(err)
+    idx, q, scale, new_err = _fa.compress_wire_blocks(
+        blocks, err_blocks, k, quantize, interpret
+    )
+    return idx, q, scale, new_err.reshape(deltas.shape[0], -1)[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "quantize"))
+def _compress_wire_ref(deltas, err, k: int, quantize: bool):
+    blocks, d = _pad_blocks_batch(deltas)
+    err_blocks, _ = _pad_blocks_batch(err)
+    n_rows, nb = blocks.shape[:2]
+    idx, q, scale, new_err = _ref.compress_wire_ref(
+        blocks.reshape(n_rows, nb, -1),
+        err_blocks.reshape(n_rows, nb, -1),
+        k,
+        quantize,
+    )
+    return idx, q.astype(jnp.float32), scale, (
+        new_err.reshape(n_rows, -1)[:, :d]
+    )
+
+
+def compress_wire(
+    deltas: jax.Array,    # (N, d) raw per-client flat updates
+    err: jax.Array,       # (N, d) error-feedback buffers
+    k_frac: float,
+    quantize: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Emit the sparse wire format for a batch of clients.
+
+    Returns (idx (N, nb, k) int32, q (N, nb, k) f32 int8-valued codes,
+    scale (N, nb) f32, new_err (N, d)).  Per block the wire is k indices +
+    k int8 codes + one f32 scale — the Eq. 31 payload as a real in-memory
+    object, ~``rho_s * d`` of the dense row.  ``k_frac`` must be concrete
+    (the wire is shape-bearing).
+    """
+    k = wire_k(k_frac)
+    if use_pallas:
+        return _compress_wire_pallas(deltas, err, k, quantize, interpret)
+    return _compress_wire_ref(deltas, err, k, quantize)
+
+
+@functools.partial(jax.jit, static_argnames=("n_fog", "d", "interpret"))
+def _wire_aggregate_pallas(idx, q, scale, fog_id, weights, n_fog: int,
+                           d: int, interpret: bool):
+    fog_blocks = _fa.wire_aggregate_blocks(
+        idx, q, scale, fog_id, weights, n_fog, interpret
+    )
+    return fog_blocks.reshape(n_fog, -1)[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("n_fog", "d"))
+def _wire_aggregate_ref(idx, q, scale, fog_id, weights, n_fog: int, d: int):
+    fog_blocks = _ref.wire_aggregate_ref(
+        idx, q, scale, fog_id, weights, n_fog, BLOCK_ELEMS
+    )
+    return fog_blocks.reshape(n_fog, -1)[:, :d]
+
+
+def wire_aggregate(
+    idx: jax.Array,       # (N, nb, k) int32 wire indices
+    q: jax.Array,         # (N, nb, k) codes
+    scale: jax.Array,     # (N, nb) f32 per-block scales
+    fog_id: jax.Array,    # (N,) int32 cluster assignment
+    weights: jax.Array,   # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    d: int,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Weighted scatter-accumulate of wire payloads into fog buffers.
+
+    Returns fog_sum (n_fog, d) f32 (unnormalised weighted sums).  The dense
+    (N, d) reconstructions never exist — contributions go straight from the
+    k-slot wire into the accumulators, so the transient footprint is the
+    wire plus O(n_fog * d), independent of N.
+    """
+    if use_pallas:
+        return _wire_aggregate_pallas(
+            idx, q, scale, fog_id, weights, n_fog, d, interpret
+        )
+    return _wire_aggregate_ref(idx, q, scale, fog_id, weights, n_fog, d)
+
+
+def compress_aggregate_wire(
+    deltas: jax.Array,    # (N, d) raw per-client flat updates
+    err: jax.Array,       # (N, d) error-feedback buffers
+    fog_id: jax.Array,    # (N,) int32 cluster assignment
+    weights: jax.Array,   # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    k_frac: float,
+    quantize: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Sparse-wire twin of :func:`compress_aggregate`: emit the wire, then
+    scatter-accumulate it, without a dense per-client reconstruction on
+    either path.  Same contract — (fog_sum (n_fog, d) unnormalised,
+    new_err (N, d)) — equal to the dense path up to f32 summation order.
+    ``k_frac`` must be concrete (shape-bearing); traced sweeps keep the
+    dense oracle.
+    """
+    idx, q, scale, new_err = compress_wire(
+        deltas, err, k_frac, quantize, use_pallas, interpret
+    )
+    fog_sum = wire_aggregate(
+        idx, q, scale, fog_id, weights, n_fog, deltas.shape[1],
+        use_pallas, interpret,
+    )
+    return fog_sum, new_err
+
+
 def _fog_weight_totals(fog_id, weights, n_fog: int) -> jax.Array:
     return jnp.sum(
         jnp.where(

@@ -152,6 +152,113 @@ def compress_aggregate_ref(
     return fog_sum, v - recon
 
 
+def compress_wire_ref(
+    delta: jax.Array,        # (N, nb, block) per-client blocked updates
+    err: jax.Array,          # (N, nb, block) EF buffers
+    k_per_block: int,
+    quantize: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Emit the sparse wire format: what actually travels up the acoustic link.
+
+    Selection is the identical bisection-threshold rule as
+    :func:`compress_aggregate_ref` (mask = |v| > t), but instead of a dense
+    masked array the survivors are packed into ``k_per_block`` fixed slots
+    per block.  Returns
+
+    - ``idx``   (N, nb, k) int32 — within-block coordinate of each slot,
+    - ``q``     (N, nb, k) int8 (``quantize``) or f32 — slot values; unused
+      slots (fewer than k survivors) carry value 0, making them no-ops for
+      any consumer that scatter-adds,
+    - ``scale`` (N, nb) f32 — per-block dequant scale (block max / 127;
+      1.0 when not quantizing so ``q * scale`` is always the recon),
+    - ``new_err`` (N, nb, block) — EF state, bit-identical to the dense
+      path's (the residual decomposition is the same).
+
+    The wire is the rho_s-sized object: per block it is k indices + k int8
+    codes + one f32 scale, the Eq. 31 payload made manifest instead of
+    analytic-only.
+    """
+    v = delta + err
+    absv = jnp.abs(v)
+    amax = jnp.max(absv, axis=-1, keepdims=True)
+    t = bisect_threshold(absv, k_per_block, hi=amax)
+    survive = absv > t
+    block = v.shape[-1]
+    k = min(int(k_per_block), block)
+    # Rank survivors first (absv >= 0 > -1 for non-survivors), then take the
+    # k best slots.  Bisection guarantees <= k_per_block survivors, so every
+    # survivor lands in a slot; surplus slots are masked to exact zeros.
+    rank_key = jnp.where(survive, absv, -1.0)
+    _, idx = jax.lax.top_k(rank_key, k)
+    kept = jnp.take_along_axis(survive, idx, axis=-1)
+    vals = jnp.where(kept, jnp.take_along_axis(v, idx, axis=-1), 0.0)
+    if quantize:
+        # Same scale rule as compress_aggregate_ref: block max of absv (the
+        # top survivor IS the block max whenever anything survives).
+        scale = (amax / 127.0)[..., 0]                      # (N, nb)
+        safe = jnp.where(scale > 0, scale, 1.0)[..., None]
+        q = jnp.clip(jnp.round(vals / safe), -127.0, 127.0)
+        recon_vals = jnp.where(scale[..., None] > 0, q * scale[..., None], 0.0)
+        q = q.astype(jnp.int8)
+    else:
+        scale = jnp.ones(v.shape[:-1], jnp.float32)
+        q = vals
+        recon_vals = vals
+    n, nb, _ = v.shape
+    ii = jnp.arange(n)[:, None, None]
+    bb = jnp.arange(nb)[None, :, None]
+    new_err = v.at[ii, bb, idx].add(-recon_vals)
+    return idx.astype(jnp.int32), q, scale, new_err
+
+
+def wire_aggregate_ref(
+    idx: jax.Array,          # (N, nb, k) int32 within-block coordinates
+    q: jax.Array,            # (N, nb, k) int8 codes (or f32 values)
+    scale: jax.Array,        # (N, nb) f32 per-block dequant scales
+    fog_id: jax.Array,       # (N,) int32 cluster id per client
+    weights: jax.Array,      # (N,) f32, zeroed for non-participants
+    n_fog: int,
+    block: int,
+) -> jax.Array:
+    """Weighted scatter-accumulate straight off the wire.
+
+    Each slot contributes ``w_i * q * scale`` at its block coordinate of its
+    client's fog accumulator.  No dense (N, nb, block) reconstruction ever
+    exists — contributions flow (N, nb, k) -> (n_fog, nb, block) directly,
+    which is what bounds the memory high-water mark at fleet scale.
+    Returns fog_sum (n_fog, nb, block) f32 (unnormalised weighted sums).
+    """
+    n, nb, _ = idx.shape
+    contrib = q.astype(jnp.float32) * scale[..., None] * weights[:, None, None]
+    ff = jnp.broadcast_to(fog_id[:, None, None], idx.shape)
+    bb = jnp.broadcast_to(jnp.arange(nb)[None, :, None], idx.shape)
+    fog_sum = jnp.zeros((n_fog, nb, block), jnp.float32)
+    return fog_sum.at[ff, bb, idx].add(contrib)
+
+
+def compress_aggregate_wire_ref(
+    delta: jax.Array,        # (N, nb, block)
+    err: jax.Array,          # (N, nb, block)
+    fog_id: jax.Array,       # (N,) int32
+    weights: jax.Array,      # (N,) f32
+    n_fog: int,
+    k_per_block: int,
+    quantize: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Sparse-wire twin of :func:`compress_aggregate_ref`.
+
+    Emits the wire then consumes it with the scatter-accumulate; equal to
+    the dense one-hot-GEMM oracle up to f32 summation order (scatter-add vs
+    GEMM reduce) and threshold ties, which is why the chunked round path
+    that uses it is pinned to tolerance rather than bitwise.
+    """
+    idx, q, scale, new_err = compress_wire_ref(delta, err, k_per_block, quantize)
+    fog_sum = wire_aggregate_ref(
+        idx, q, scale, fog_id, weights, n_fog, delta.shape[-1]
+    )
+    return fog_sum, new_err
+
+
 def robust_aggregate_ref(
     recon: jax.Array,        # (N, d) per-client reconstructions
     fog_id: jax.Array,       # (N,) int32 cluster id per client

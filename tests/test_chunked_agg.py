@@ -1,0 +1,214 @@
+"""Chunk-equivalence contract of the client-chunked delta path (PR 10).
+
+``HFLConfig.client_chunk`` bounds the client-phase memory high-water mark
+by scanning the fleet axis in chunks.  The contract pinned here:
+
+* ``chunk is None`` or ``chunk >= N`` is the one-shot path, BIT-identical
+  by construction (the dispatch in ``aggregation.compress_and_accumulate``
+  only engages for ``0 < chunk < N``);
+* ``chunk < N`` re-associates the weighted fog accumulation, so the mean
+  path matches within float-accumulation tolerance — including chunk
+  sizes that do NOT divide N (the clamped last chunk re-reads rows of its
+  predecessor with their weights masked to zero) and ``chunk=1``;
+* ``client_compress`` (per-row reconstruction, no cross-row sums — the
+  robust/trimmed and async launch paths) is BIT-identical at EVERY chunk;
+* the equivalence holds end-to-end through all four round families
+  (hfl, flat-FL, scaffold-free robust/trimmed, async), with faults and
+  drift active — chunking happens inside the aggregation call, so the
+  round loops' PRNG split discipline is untouched.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core import compression as comp
+from repro.core import drift as drf
+from repro.core import faults as flt
+from repro.data.synthetic import SyntheticConfig, generate, normalize
+from repro.engine import Engine
+from repro.launch import experiment as exp
+
+CFG = comp.CompressorConfig(rho_s=0.25, quant_bits=8, mode="blockwise")
+
+
+def _agg_inputs(n=23, d=40, n_fog=4, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    deltas = jax.random.normal(k1, (n, d))
+    err = 0.1 * jax.random.normal(k2, (n, d))
+    fog_id = jax.random.randint(k3, (n,), 0, n_fog)
+    return deltas, err, fog_id, jnp.ones((n,)), n_fog
+
+
+# ---------------------------------------------------------------------------
+# Aggregation level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [None, 23, 64])
+def test_chunk_ge_n_is_bitwise_passthrough(chunk):
+    deltas, err, fog_id, w, n_fog = _agg_inputs()
+    ref = agg.compress_and_accumulate(deltas, err, fog_id, w, n_fog, CFG)
+    out = agg.compress_and_accumulate(
+        deltas, err, fog_id, w, n_fog, CFG, chunk=chunk
+    )
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 7, 16])
+def test_chunked_matches_dense_within_accumulation_tol(chunk):
+    """Non-divisor chunks included: N=23 exercises the clamped last chunk
+    (overlap rows recomputed, weights masked) for every size here."""
+    deltas, err, fog_id, w, n_fog = _agg_inputs()
+    ref = agg.compress_and_accumulate(deltas, err, fog_id, w, n_fog, CFG)
+    out = agg.compress_and_accumulate(
+        deltas, err, fog_id, w, n_fog, CFG, chunk=chunk
+    )
+    # fog sums: re-associated adds -> float tolerance; fog weights: exact
+    # (masked integers); EF buffer: per-client but the chunked path runs
+    # the wire kernel, whose FMA order differs from dense by ~1 ulp.
+    np.testing.assert_allclose(
+        np.asarray(out[0]), np.asarray(ref[0]), rtol=0, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(ref[1]))
+    np.testing.assert_allclose(
+        np.asarray(out[2]), np.asarray(ref[2]), rtol=0, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 23, 64])
+def test_client_compress_bitwise_at_every_chunk(chunk):
+    deltas, err, *_ = _agg_inputs()
+    ref = agg.client_compress(deltas, err, CFG)
+    out = agg.client_compress(deltas, err, CFG, chunk=chunk)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_robust_trimmed_chunked_bitwise():
+    deltas, err, fog_id, w, n_fog = _agg_inputs()
+    ref = agg.robust_compress_and_aggregate(
+        deltas, err, fog_id, w, n_fog, CFG, 0.2, "trimmed"
+    )
+    out = agg.robust_compress_and_aggregate(
+        deltas, err, fog_id, w, n_fog, CFG, 0.2, "trimmed", chunk=5
+    )
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nonfinite_guard_survives_chunking():
+    deltas, err, fog_id, w, n_fog = _agg_inputs()
+    poisoned = deltas.at[3, 1].set(jnp.inf).at[11, 0].set(jnp.nan)
+    fog_sum, fog_w, new_err = agg.compress_and_accumulate(
+        poisoned, err, fog_id, w, n_fog, CFG, chunk=5
+    )
+    assert bool(jnp.all(jnp.isfinite(fog_sum)))
+    assert bool(jnp.all(jnp.isfinite(new_err)))
+    assert float(fog_w.sum()) == deltas.shape[0] - 2
+
+
+# ---------------------------------------------------------------------------
+# Round families, end to end
+# ---------------------------------------------------------------------------
+
+_N = 12
+
+
+def _ds():
+    return normalize(generate(
+        jax.random.key(0),
+        SyntheticConfig(n_sensors=_N, train_len=32, val_len=16, test_len=32),
+    ))
+
+
+def _cfg(**kw):
+    return exp.make_config(
+        n_sensors=_N, n_fog=3, rounds=2, local_epochs=1, **kw
+    )
+
+
+def _trial(method, cfg):
+    return exp.trial_metrics(method, jax.random.key(3), _ds(), cfg)
+
+
+@pytest.mark.parametrize("method", ["hfl-selective", "fedprox", "hfl-async"])
+def test_family_chunk_ge_n_bit_identical(method):
+    ref = _trial(method, _cfg())
+    out = _trial(method, _cfg().replace(client_chunk=_N))
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[k]), np.asarray(out[k]), err_msg=k
+        )
+
+
+@pytest.mark.parametrize(
+    "method,chunk", [("hfl-selective", 5), ("fedprox", 5), ("hfl-selective", 1)]
+)
+def test_family_small_chunk_tolerance(method, chunk):
+    """chunk=5 does not divide N=12; chunk=1 is the degenerate extreme."""
+    ref = _trial(method, _cfg())
+    out = _trial(method, _cfg().replace(client_chunk=chunk))
+    np.testing.assert_allclose(
+        np.asarray(out["losses"]), np.asarray(ref["losses"]),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out["e_total"]), np.asarray(ref["e_total"]), rtol=1e-5
+    )
+    assert abs(float(out["f1"]) - float(ref["f1"])) < 0.02
+
+
+def test_async_small_chunk_bitwise():
+    """The async launch path compresses via ``client_compress`` (per-row,
+    no cross-row sums), so ANY chunk is bit-identical, not just >= N."""
+    ref = _trial("hfl-async", _cfg())
+    out = _trial("hfl-async", _cfg().replace(client_chunk=5))
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[k]), np.asarray(out[k]), err_msg=k
+        )
+
+
+def test_faults_trimmed_drift_chunked():
+    """The adversarial configuration: crashes + Byzantine sign-flips +
+    erasure, trimmed fog reduce, and an active drift schedule — chunking
+    must not perturb the PRNG split discipline (fault draws identical) and
+    the trimmed path is per-row, so the whole round stays bit-identical."""
+    cfg = _cfg(
+        faults=flt.FaultConfig(
+            erasure_prob=0.2, crash_prob=0.1, byz_frac=0.25,
+            byz_scale=3.0, byz_mode="sign_flip",
+        ),
+        drift=drf.DriftConfig(
+            sensor_current_m_s=0.5, reassoc_every=2.0, covariate_shift=0.01
+        ),
+    ).replace(robust="trimmed", trim_frac=0.2)
+    ref = _trial("hfl-selective", cfg)
+    out = _trial("hfl-selective", cfg.replace(client_chunk=5))
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[k]), np.asarray(out[k]), err_msg=k
+        )
+
+
+# ---------------------------------------------------------------------------
+# Engine resolution of the knob
+# ---------------------------------------------------------------------------
+
+def test_engine_stamps_client_chunk():
+    eng = Engine(client_chunk=8)
+    cfg = _cfg()
+    assert eng.resolve_config(cfg).client_chunk == 8
+    # an explicit per-config value wins
+    assert eng.resolve_config(cfg.replace(client_chunk=4)).client_chunk == 4
+    # default engine leaves the config untouched
+    assert Engine().resolve_config(cfg).client_chunk is None
+
+
+def test_engine_rejects_bad_client_chunk():
+    with pytest.raises(ValueError):
+        Engine(client_chunk=0)
+    with pytest.raises(ValueError):
+        _cfg().replace(client_chunk=-2)

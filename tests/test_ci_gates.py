@@ -15,6 +15,7 @@ from benchmarks import (
     check_kernel_micro,
     check_load_bench,
     check_robustness_bench,
+    check_scale_bench,
     check_sweep_compile,
 )
 from benchmarks import run as bench_run
@@ -149,6 +150,69 @@ def test_async_gate_trips_on_sync_baseline_regression():
 def test_async_gate_fails_loudly_on_missing_row():
     fresh = {"sync": {"sim_s_per_round": 4.5}, "rows": []}
     failures = check_async_bench.compare(fresh, _async_json())
+    assert any("missing" in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# check_scale_bench.compare (fleet-axis memory + wall-clock, PR 10)
+# ---------------------------------------------------------------------------
+
+def _scale_row(n, chunk, temp=65e6, wall=1.0):
+    return {"n": n, "chunk": chunk, "temp_bytes": temp, "wall_s": wall}
+
+
+def _scale_json(dense_temp=260e6, big_temp=65e6, far_temp=65e6, wall=1.0):
+    return {"rows": [
+        _scale_row(2000, None, temp=dense_temp),
+        _scale_row(2000, 512),
+        _scale_row(10000, 512, temp=big_temp, wall=wall),
+        _scale_row(50000, 512, temp=far_temp),
+    ]}
+
+
+def test_scale_gate_passes_on_healthy_json():
+    assert check_scale_bench.compare(_scale_json(), _scale_json()) == []
+
+
+def test_scale_gate_trips_on_chunk_pin():
+    """The headline acceptance pin: chunked 10k temp creeping back toward
+    the dense footprint fails even with a matching baseline — and the pin
+    needs no baseline at all."""
+    failures = check_scale_bench.compare(
+        _scale_json(big_temp=200e6), _scale_json(big_temp=200e6)
+    )
+    assert any("chunk-pin" in f for f in failures)
+    failures = check_scale_bench.compare(_scale_json(big_temp=200e6), None)
+    assert any("chunk-pin" in f for f in failures)
+
+
+def test_scale_gate_trips_on_growing_footprint():
+    """Chunked temp spreading with N means the footprint follows the fleet
+    again — flatness is fresh-internal, no baseline involved."""
+    failures = check_scale_bench.compare(
+        _scale_json(far_temp=100e6), _scale_json(far_temp=100e6)
+    )
+    assert any("growing with the fleet" in f for f in failures)
+
+
+def test_scale_gate_trips_on_memory_regression_vs_baseline():
+    failures = check_scale_bench.compare(
+        _scale_json(big_temp=80e6), _scale_json(big_temp=65e6)
+    )
+    assert any("memory regression" in f for f in failures)
+
+
+def test_scale_gate_trips_on_wall_clock_regression():
+    failures = check_scale_bench.compare(
+        _scale_json(wall=4.0), _scale_json(wall=1.0)
+    )
+    assert any("wall-clock regression" in f for f in failures)
+
+
+def test_scale_gate_fails_loudly_on_missing_cell():
+    fresh = _scale_json()
+    fresh["rows"] = [r for r in fresh["rows"] if r["n"] != 50000]
+    failures = check_scale_bench.compare(fresh, _scale_json())
     assert any("missing" in f for f in failures)
 
 
